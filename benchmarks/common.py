@@ -1,0 +1,451 @@
+"""Shared infrastructure for the paper-validation benchmarks.
+
+Trains (and caches) three small models on deterministic synthetic data —
+the offline stand-ins for the paper's ResNet50/MobilenetV2/BERT:
+
+  * "cnn"  — 3-conv + head image classifier (per-channel granularity works)
+  * "mlp"  — 4-layer tabular classifier
+  * "bert" — 2-layer bidirectional mini-BERT on a 3-way entailment task,
+             with EVERY matmul (incl. QK^T and AV, per the paper's shot-noise
+             BERT setup) running through analog_dot
+
+Each model exposes an ``AnalogProblem``: apply_fn(energies, x, key) under a
+chosen AnalogConfig, MAC trees (per-layer / per-channel), calibrated
+SiteQuant ranges (min/max for weight noise; 99.99th-percentile clipping for
+thermal, per paper Appendix A), train/test batches, and the clean accuracy.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.store import restore_checkpoint, save_checkpoint
+from repro.core import (
+    AnalogConfig,
+    CalibConfig,
+    SiteQuant,
+    analog_conv2d,
+    analog_dot,
+    dense_site_macs,
+    eval_accuracy,
+    learn_energies,
+    site_key,
+)
+from repro.data import make_entailment_dataset, make_image_dataset, make_tabular_dataset
+from repro.quant import calibrate_minmax, calibrate_percentile
+
+KEY = jax.random.PRNGKey(0)
+ART_DIR = os.path.join(os.path.dirname(__file__), "artifacts")
+MODEL_DIR = os.path.join(ART_DIR, "models")
+PAPER_DIR = os.path.join(ART_DIR, "paper")
+os.makedirs(PAPER_DIR, exist_ok=True)
+
+
+def cache_json(name: str):
+    """Decorator: run once, cache the result JSON under artifacts/paper."""
+
+    def deco(fn):
+        def wrapped(force: bool = False):
+            path = os.path.join(PAPER_DIR, f"{name}.json")
+            if os.path.exists(path) and not force:
+                return json.load(open(path))
+            out = fn()
+            with open(path, "w") as f:
+                json.dump(out, f, indent=2)
+            return out
+
+        wrapped.__name__ = fn.__name__
+        return wrapped
+
+    return deco
+
+
+# ===========================================================================
+# model zoo
+# ===========================================================================
+
+
+@dataclasses.dataclass
+class AnalogProblem:
+    name: str
+    params: list
+    sites: List[str]
+    macs_layer: Dict[str, jax.Array]
+    macs_channel: Dict[str, jax.Array]
+    train_batches: list
+    test_batches: list
+    clean_acc: float
+    #: apply(cfg, quants) -> apply_fn(energies, x, key) -> logits
+    make_apply: Callable
+    #: calibrated SiteQuants per noise kind ("thermal" uses percentile clip)
+    quants: Dict[str, Dict[str, SiteQuant]]
+
+    def apply_fn(self, cfg: AnalogConfig):
+        kind = cfg.noise.kind
+        q = self.quants.get(kind if kind in self.quants else "minmax", {})
+        return self.make_apply(cfg, q)
+
+
+def _sgd(loss_fn, params, batches, steps, lr):
+    opt = jax.jit(
+        lambda p, xb, yb: jax.tree.map(
+            lambda w, g: w - lr * g, p, jax.grad(loss_fn)(p, xb, yb)
+        )
+    )
+    for i in range(steps):
+        xb, yb = batches[i % len(batches)]
+        params = opt(params, xb, yb)
+    return params
+
+
+def _xent(logits, yb):
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, yb[:, None], axis=1))
+
+
+def _accuracy(fwd, params, batches):
+    correct = total = 0
+    for xb, yb in batches:
+        pred = jnp.argmax(fwd(params, xb), axis=-1)
+        correct += int(jnp.sum(pred == yb))
+        total += int(yb.size)
+    return correct / total
+
+
+def _site_quants(tensors: Dict[str, Tuple[jax.Array, jax.Array, jax.Array]]):
+    """tensors: site -> (w_matrix, x_sample, out_sample). Returns quants per
+    noise regime: 'minmax' (weight noise; moving min/max) and 'thermal'
+    (99.99th percentile activation clipping)."""
+    mm, th = {}, {}
+    for s, (w, x, o) in tensors.items():
+        wqp = calibrate_minmax(w, channel_axis=1)
+        mm[s] = SiteQuant(wqp=wqp, xqp=calibrate_minmax(x), oqp=calibrate_minmax(o))
+        th[s] = SiteQuant(
+            wqp=wqp,
+            xqp=calibrate_percentile(x, percentile=99.99),
+            oqp=calibrate_percentile(o, percentile=99.99),
+        )
+    return {"minmax": mm, "weight": mm, "thermal": th, "shot": {}}
+
+
+# --------------------------------------------------------------------------
+# MLP
+# --------------------------------------------------------------------------
+
+MLP_DIMS = [32, 96, 96, 64, 8]
+
+
+def build_mlp(force: bool = False) -> AnalogProblem:
+    x, y = make_tabular_dataset(6144, dim=MLP_DIMS[0], n_classes=MLP_DIMS[-1], depth=2, seed=3)
+    x, y = jnp.asarray(x), jnp.asarray(y)
+    n_train = 4096
+    sizes = list(zip(MLP_DIMS[:-1], MLP_DIMS[1:]))
+    sites = [f"l{i}" for i in range(len(sizes))]
+
+    def fwd(params, xb):
+        h = xb
+        for i, w in enumerate(params):
+            h = h @ w
+            if i < len(params) - 1:
+                h = jax.nn.relu(h)
+        return h
+
+    params = _load_or_train(
+        "mlp",
+        lambda: [
+            jax.random.normal(k, s, jnp.float32) / np.sqrt(s[0])
+            for k, s in zip(jax.random.split(KEY, len(sizes)), sizes)
+        ],
+        lambda p: _sgd(
+            lambda pp, xb, yb: _xent(fwd(pp, xb), yb),
+            p,
+            [(x[i : i + 512], y[i : i + 512]) for i in range(0, n_train, 512)],
+            1500,
+            0.5,
+        ),
+        force,
+    )
+
+    train_b = [(x[i : i + 512], y[i : i + 512]) for i in range(0, n_train, 512)]
+    test_b = [(x[n_train:], y[n_train:])]
+    clean = _accuracy(fwd, params, test_b)
+
+    # calibration tensors from one train batch
+    tensors = {}
+    h = train_b[0][0]
+    for i, w in enumerate(params):
+        o = h @ w
+        tensors[sites[i]] = (w, h, o)
+        h = jax.nn.relu(o) if i < len(params) - 1 else o
+
+    def make_apply(cfg, quants):
+        def apply_fn(energies, xb, key):
+            h = xb
+            for i, w in enumerate(params):
+                s = sites[i]
+                h = analog_dot(
+                    h, w, cfg=cfg, energy=energies[s],
+                    key=site_key(jax.random.fold_in(key, i), s), sq=quants.get(s),
+                )
+                if i < len(params) - 1:
+                    h = jax.nn.relu(h)
+            return h
+
+        return apply_fn
+
+    macs_l = {
+        s: dense_site_macs(1, a, b, per_channel=False)
+        for s, (a, b) in zip(sites, sizes)
+    }
+    macs_c = {
+        s: dense_site_macs(1, a, b, per_channel=True)
+        for s, (a, b) in zip(sites, sizes)
+    }
+    return AnalogProblem(
+        "mlp", params, sites, macs_l, macs_c, train_b, test_b, clean,
+        make_apply, _site_quants(tensors),
+    )
+
+
+# --------------------------------------------------------------------------
+# CNN
+# --------------------------------------------------------------------------
+
+CNN_CHANNELS = [(3, 16), (16, 32), (32, 32)]
+CNN_CLASSES = 10
+
+
+def build_cnn(force: bool = False) -> AnalogProblem:
+    size = 16
+    x, y = make_image_dataset(6144, n_classes=CNN_CLASSES, size=size, seed=5)
+    x, y = jnp.asarray(x), jnp.asarray(y)
+    n_train = 4096
+    sites = [f"c{i}" for i in range(len(CNN_CHANNELS))] + ["head"]
+    head_in = CNN_CHANNELS[-1][1]
+
+    def init():
+        keys = jax.random.split(KEY, 4)
+        ps = [
+            jax.random.normal(keys[i], (3, 3, cin, cout), jnp.float32)
+            / np.sqrt(9 * cin)
+            for i, (cin, cout) in enumerate(CNN_CHANNELS)
+        ]
+        ps.append(jax.random.normal(keys[3], (head_in, CNN_CLASSES), jnp.float32) / np.sqrt(head_in))
+        return ps
+
+    def fwd(params, xb):
+        h = xb
+        for i, kern in enumerate(params[:-1]):
+            stride = 2 if i > 0 else 1
+            h = jax.lax.conv_general_dilated(
+                h, kern, (stride, stride), "SAME",
+                dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            )
+            h = jax.nn.relu(h)
+        h = jnp.mean(h, axis=(1, 2))
+        return h @ params[-1]
+
+    params = _load_or_train(
+        "cnn",
+        init,
+        lambda p: _sgd(
+            lambda pp, xb, yb: _xent(fwd(pp, xb), yb),
+            p,
+            [(x[i : i + 256], y[i : i + 256]) for i in range(0, n_train, 256)],
+            1200,
+            0.2,
+        ),
+        force,
+    )
+
+    train_b = [(x[i : i + 256], y[i : i + 256]) for i in range(0, n_train, 256)]
+    test_b = [(x[n_train : n_train + 1024], y[n_train : n_train + 1024])]
+    clean = _accuracy(fwd, params, test_b)
+
+    # calibration tensors (w as im2col matrices)
+    tensors = {}
+    h = train_b[0][0]
+    for i, kern in enumerate(params[:-1]):
+        stride = 2 if i > 0 else 1
+        kh, kw, cin, cout = kern.shape
+        w_mat = jnp.transpose(kern, (2, 0, 1, 3)).reshape(kh * kw * cin, cout)
+        o = jax.lax.conv_general_dilated(
+            h, kern, (stride, stride), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+        )
+        tensors[f"c{i}"] = (w_mat, h.reshape(-1, h.shape[-1]), o)
+        h = jax.nn.relu(o)
+    pooled = jnp.mean(h, axis=(1, 2))
+    tensors["head"] = (params[-1], pooled, pooled @ params[-1])
+
+    def make_apply(cfg, quants):
+        def apply_fn(energies, xb, key):
+            h = xb
+            for i, kern in enumerate(params[:-1]):
+                s = f"c{i}"
+                stride = 2 if i > 0 else 1
+                h = analog_conv2d(
+                    h, kern, cfg=cfg, stride=stride, padding="SAME",
+                    energy=energies[s],
+                    key=site_key(jax.random.fold_in(key, i), s), sq=quants.get(s),
+                )
+                h = jax.nn.relu(h)
+            h = jnp.mean(h, axis=(1, 2))
+            return analog_dot(
+                h, params[-1], cfg=cfg, energy=energies["head"],
+                key=site_key(key, "head"), sq=quants.get("head"),
+            )
+
+        return apply_fn
+
+    hw = size * size
+    macs_l, macs_c = {}, {}
+    for i, (cin, cout) in enumerate(CNN_CHANNELS):
+        elems = hw if i == 0 else hw // (4 ** i)
+        macs_l[f"c{i}"] = dense_site_macs(elems, 9 * cin, cout, per_channel=False)
+        macs_c[f"c{i}"] = dense_site_macs(elems, 9 * cin, cout, per_channel=True)
+    macs_l["head"] = dense_site_macs(1, head_in, CNN_CLASSES, per_channel=False)
+    macs_c["head"] = dense_site_macs(1, head_in, CNN_CLASSES, per_channel=True)
+    return AnalogProblem(
+        "cnn", params, sites, macs_l, macs_c, train_b, test_b, clean,
+        make_apply, _site_quants(tensors),
+    )
+
+
+# --------------------------------------------------------------------------
+# mini-BERT (bidirectional encoder; all matmuls analog, incl. QK^T and AV)
+# --------------------------------------------------------------------------
+
+BERT_L, BERT_D, BERT_H, BERT_FF = 2, 64, 4, 128
+BERT_VOCAB, BERT_T, BERT_CLASSES = 64, 24, 3
+
+
+def build_bert(force: bool = False) -> AnalogProblem:
+    toks, y = make_entailment_dataset(8192, vocab=BERT_VOCAB, seq_len=BERT_T, seed=11)
+    toks, y = jnp.asarray(toks), jnp.asarray(y)
+    n_train = 6144
+    hd = BERT_D // BERT_H
+
+    sites = []
+    for l in range(BERT_L):
+        sites += [f"{l}.q", f"{l}.k", f"{l}.v", f"{l}.scores", f"{l}.av", f"{l}.o",
+                  f"{l}.ff1", f"{l}.ff2"]
+    sites += ["cls"]
+
+    def init():
+        keys = iter(jax.random.split(KEY, 6 * BERT_L + 3))
+        p = {"embed": jax.random.normal(next(keys), (BERT_VOCAB, BERT_D)) * 0.05,
+             "pos": jax.random.normal(next(keys), (BERT_T, BERT_D)) * 0.05}
+        for l in range(BERT_L):
+            p[f"{l}.wq"] = jax.random.normal(next(keys), (BERT_D, BERT_D)) / np.sqrt(BERT_D)
+            p[f"{l}.wk"] = jax.random.normal(next(keys), (BERT_D, BERT_D)) / np.sqrt(BERT_D)
+            p[f"{l}.wv"] = jax.random.normal(next(keys), (BERT_D, BERT_D)) / np.sqrt(BERT_D)
+            p[f"{l}.wo"] = jax.random.normal(next(keys), (BERT_D, BERT_D)) / np.sqrt(BERT_D)
+            p[f"{l}.w1"] = jax.random.normal(next(keys), (BERT_D, BERT_FF)) / np.sqrt(BERT_D)
+            p[f"{l}.w2"] = jax.random.normal(next(keys), (BERT_FF, BERT_D)) / np.sqrt(BERT_FF)
+        p["cls"] = jax.random.normal(next(keys), (BERT_D, BERT_CLASSES)) / np.sqrt(BERT_D)
+        return p
+
+    def _attention(q, k, v, mm):
+        b, t, _ = q.shape
+        q4 = q.reshape(b, t, BERT_H, hd).transpose(0, 2, 1, 3).reshape(b * BERT_H, t, hd)
+        k4 = k.reshape(b, t, BERT_H, hd).transpose(0, 2, 1, 3).reshape(b * BERT_H, t, hd)
+        v4 = v.reshape(b, t, BERT_H, hd).transpose(0, 2, 1, 3).reshape(b * BERT_H, t, hd)
+        scores = mm("scores", q4, k4.transpose(0, 2, 1)) / np.sqrt(hd)
+        probs = jax.nn.softmax(scores, axis=-1)
+        out = mm("av", probs, v4)
+        return out.reshape(b, BERT_H, t, hd).transpose(0, 2, 1, 3).reshape(b, t, BERT_D)
+
+    def fwd(p, xb, mm=None):
+        if mm is None:
+            mm = lambda s, a, b_: jnp.matmul(a, b_)
+        h = p["embed"][xb] + p["pos"][None]
+        for l in range(BERT_L):
+            q = mm(f"{l}.q", h, p[f"{l}.wq"])
+            k = mm(f"{l}.k", h, p[f"{l}.wk"])
+            v = mm(f"{l}.v", h, p[f"{l}.wv"])
+            att = _attention(q, k, v, lambda s, a, b_: mm(f"{l}.{s}", a, b_))
+            h = _ln(h + mm(f"{l}.o", att, p[f"{l}.wo"]))
+            ff = mm(f"{l}.ff2", jax.nn.gelu(mm(f"{l}.ff1", h, p[f"{l}.w1"])), p[f"{l}.w2"])
+            h = _ln(h + ff)
+        return mm("cls", jnp.mean(h, axis=1), p["cls"])
+
+    def _ln(x):
+        mu = jnp.mean(x, axis=-1, keepdims=True)
+        var = jnp.var(x, axis=-1, keepdims=True)
+        return (x - mu) * jax.lax.rsqrt(var + 1e-5)
+
+    params = _load_or_train(
+        "bert",
+        init,
+        lambda p: _sgd(
+            lambda pp, xb, yb: _xent(fwd(pp, xb), yb),
+            p,
+            [(toks[i : i + 256], y[i : i + 256]) for i in range(0, n_train, 256)],
+            2500,
+            0.1,
+        ),
+        force,
+    )
+
+    train_b = [(toks[i : i + 256], y[i : i + 256]) for i in range(0, n_train, 256)]
+    test_b = [(toks[n_train:], y[n_train:])]
+    clean = _accuracy(lambda p, xb: fwd(p, xb), params, test_b)
+
+    def make_apply(cfg, quants):
+        def apply_fn(energies, xb, key):
+            def mm(site, a, b_):
+                if b_.ndim == 3:  # activation x activation (scores / av):
+                    # batched analog dot per the shot-noise BERT setup
+                    def one(aa, bb, kk):
+                        return analog_dot(aa, bb, cfg=cfg, energy=energies[site], key=kk)
+
+                    keys = jax.random.split(site_key(key, site), a.shape[0])
+                    return jax.vmap(one)(a, b_, keys)
+                return analog_dot(
+                    a, b_, cfg=cfg, energy=energies[site], key=site_key(key, site)
+                )
+
+            return fwd(params, xb, mm)
+
+        return apply_fn
+
+    t, d, ff = BERT_T, BERT_D, BERT_FF
+    per_l = {
+        "q": t * d * d, "k": t * d * d, "v": t * d * d,
+        "scores": BERT_H * t * t * hd, "av": BERT_H * t * t * hd,
+        "o": t * d * d, "ff1": t * d * ff, "ff2": t * ff * d,
+    }
+    macs_l = {}
+    for l in range(BERT_L):
+        for s, m in per_l.items():
+            macs_l[f"{l}.{s}"] = jnp.asarray(float(m), jnp.float32)
+    macs_l["cls"] = jnp.asarray(float(d * BERT_CLASSES), jnp.float32)
+    return AnalogProblem(
+        "bert", params, sites, macs_l, macs_l, train_b, test_b, clean,
+        make_apply, {"shot": {}},
+    )
+
+
+# --------------------------------------------------------------------------
+
+
+def _load_or_train(name: str, init_fn, train_fn, force: bool):
+    path = os.path.join(MODEL_DIR, name)
+    if not force:
+        try:
+            _, params = restore_checkpoint(path, template=init_fn())
+            return jax.tree.map(jnp.asarray, params)
+        except (FileNotFoundError, Exception):
+            pass
+    params = train_fn(init_fn())
+    save_checkpoint(path, 0, params)
+    return params
+
+
+PROBLEMS = {"mlp": build_mlp, "cnn": build_cnn, "bert": build_bert}

@@ -1,0 +1,67 @@
+"""Microbenchmark: fused analog-matmul kernel vs unfused jnp composition.
+
+On CPU the Pallas kernel runs in interpret mode (a correctness vehicle, not
+a timing proxy for TPU), so the wall-clock comparison that matters here is
+jnp analog path vs plain matmul (the analog-simulation overhead XLA pays),
+plus the ANALYTIC HBM-traffic comparison that motivates the fusion on TPU:
+
+  unfused: read x, w; write y; write+read noise tensor; read+write y (add);
+           read+write y (requant)            = xw + 6*|y| HBM touches
+  fused:   read x, w; write y (noise + requant in-register)
+                                             = xw + 1*|y|
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import cache_json
+from repro.core import AnalogConfig, analog_dot
+from repro.kernels import analog_matmul
+
+M, K, N = 512, 512, 512
+
+
+def _time(fn, *args, iters=20):
+    fn(*args).block_until_ready()  # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    out.block_until_ready()
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+@cache_json("kernel_bench")
+def kernel_bench():
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (M, K))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (K, N)) * 0.1
+    cfg = AnalogConfig.shot()
+    e = jnp.asarray(10.0)
+
+    plain = jax.jit(lambda a, b: a @ b)
+    analog_jnp = jax.jit(lambda a, b, k: analog_dot(a, b, cfg=cfg, energy=e, key=k))
+    kernel = jax.jit(
+        lambda a, b, k: analog_matmul(a, b, energy=e, key=k, cfg=cfg, block=(256, 256, 256))
+    )
+
+    t_plain = _time(plain, x, w)
+    t_jnp = _time(analog_jnp, x, w, key)
+    t_kernel = _time(kernel, x, w, key, iters=3)  # interpret mode: slow, correctness only
+
+    bytes_xw = (M * K + K * N) * 4
+    bytes_y = M * N * 4
+    unfused_traffic = bytes_xw + 6 * bytes_y
+    fused_traffic = bytes_xw + 1 * bytes_y
+    return {
+        "shape": [M, K, N],
+        "plain_matmul_us": t_plain,
+        "analog_jnp_us": t_jnp,
+        "analog_overhead_x": t_jnp / t_plain,
+        "kernel_interpret_us": t_kernel,
+        "hbm_bytes_unfused": unfused_traffic,
+        "hbm_bytes_fused": fused_traffic,
+        "hbm_traffic_saving_x": unfused_traffic / fused_traffic,
+    }

@@ -1,0 +1,41 @@
+"""Recompute roofline terms in dry-run artifacts from stored HLO stats
+(after memory-model fixes) without recompiling."""
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs import SHAPES, get_config
+from repro.launch import roofline
+
+ART = os.path.join(os.path.dirname(__file__), "artifacts", "dryrun")
+
+for name in sorted(os.listdir(ART)):
+    if not name.endswith(".json"):
+        continue
+    path = os.path.join(ART, name)
+    art = json.load(open(path))
+    if art.get("status") != "ok":
+        continue
+    cfg = get_config(art["arch"])
+    if art.get("causal_skip"):
+        import dataclasses
+        cfg = dataclasses.replace(cfg, causal_skip=True)
+    shape = SHAPES[art["shape"]]
+    cache_bytes = None
+    if art.get("kv_dtype"):
+        # fp8 halves the analytic default (bf16)
+        from repro.launch.roofline import _cache_bytes
+        import numpy as np
+        scale = np.dtype(art["kv_dtype"]).itemsize / 2.0
+        cache_bytes = _cache_bytes(cfg, shape) * scale
+    rt = roofline.terms(
+        cfg, shape, art["n_devices"],
+        hlo_dot_flops=art["hlo"]["dot_flops_per_device"],
+        collective_link_bytes=art["hlo"]["collective_link_bytes_per_device"],
+        cache_bytes_global=cache_bytes,
+    )
+    art["roofline"] = rt.as_dict()
+    json.dump(art, open(path, "w"), indent=2)
+print("refreshed")

@@ -1,0 +1,77 @@
+"""Render §Dry-run / §Roofline tables from the dry-run artifacts."""
+from __future__ import annotations
+
+import json
+import os
+from typing import List
+
+ART = os.path.join(os.path.dirname(__file__), "artifacts", "dryrun")
+
+
+def load_cells() -> List[dict]:
+    rows = []
+    if not os.path.isdir(ART):
+        return rows
+    for name in sorted(os.listdir(ART)):
+        if name.endswith(".json"):
+            rows.append(json.load(open(os.path.join(ART, name))))
+    return rows
+
+
+def markdown_table(rows: List[dict], mesh: str = "single") -> str:
+    out = [
+        "| arch | shape | variant | compile_s | peak GB/dev | fits 16GB | compute_s | memory_s | collective_s | dominant | useful |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if r.get("mesh") != mesh:
+            continue
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | - | - | - | SKIP: {r['reason'][:60]} | | | | | |")
+            continue
+        rf = r["roofline"]
+        variant = []
+        if r.get("analog", "none") != "none":
+            variant.append(r["analog"])
+        if r.get("microbatch", 1) > 1:
+            variant.append(f"mb{r['microbatch']}")
+        if r.get("causal_skip"):
+            variant.append("cskip")
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {'+'.join(variant) or 'base'} | {r['compile_s']} | "
+            f"{r['peak_bytes_per_device']/1e9:.2f} | {'Y' if r['fits_16gb'] else 'N'} | "
+            f"{rf['compute_s']:.4f} | {rf['memory_s']:.4f} | {rf['collective_s']:.4f} | "
+            f"{rf['dominant']} | {rf['useful_ratio']:.3f} |"
+        )
+    return "\n".join(out)
+
+
+def summary(rows: List[dict]) -> dict:
+    ok = [r for r in rows if r["status"] == "ok"]
+    skips = [r for r in rows if r["status"] != "ok"]
+    fits = [r for r in ok if r["fits_16gb"]]
+    doms = {}
+    for r in ok:
+        doms[r["roofline"]["dominant"]] = doms.get(r["roofline"]["dominant"], 0) + 1
+    return {
+        "cells_ok": len(ok),
+        "cells_skipped": len(skips),
+        "fits": len(fits),
+        "dominant_histogram": doms,
+    }
+
+
+def main():
+    rows = load_cells()
+    s = summary(rows)
+    print(f"dryrun cells: {s['cells_ok']} ok, {s['cells_skipped']} skipped, "
+          f"{s['fits']}/{s['cells_ok']} fit 16GB; dominant: {s['dominant_histogram']}")
+    for mesh in ("single", "multi"):
+        path = os.path.join(os.path.dirname(ART), f"roofline_{mesh}.md")
+        with open(path, "w") as f:
+            f.write(markdown_table(rows, mesh))
+        print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

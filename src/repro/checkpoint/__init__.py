@@ -1,0 +1,15 @@
+from repro.checkpoint.store import (
+    CheckpointManager,
+    latest_step,
+    reshard,
+    restore_checkpoint,
+    save_checkpoint,
+)
+
+__all__ = [
+    "CheckpointManager",
+    "latest_step",
+    "reshard",
+    "restore_checkpoint",
+    "save_checkpoint",
+]

@@ -1,0 +1,213 @@
+"""Sharded, atomic, async checkpointing (msgpack + zstd).
+
+Layout: <dir>/step_<N>/shard_<i>.ckpt + MANIFEST (written last). A
+checkpoint is valid iff its MANIFEST exists and checksums match — writers
+stage into a temp dir and rename, so readers never observe partial state.
+``CheckpointManager`` adds async save (background thread), retention, and
+restore-latest-valid (skipping corrupt/incomplete checkpoints, as after a
+mid-save node failure).
+
+``reshard`` re-commits a restored (host) tree onto any mesh/sharding — the
+elastic-scaling path: train on 512 chips, restore onto 256, or re-balance
+after shrinking the data axis.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import tempfile
+import threading
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+import zstandard
+
+PyTree = Any
+_MANIFEST = "MANIFEST.json"
+
+
+def _path_str(path) -> str:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "idx"):
+            out.append(str(p.idx))
+        else:
+            out.append(str(p))
+    return "/".join(out)
+
+
+def _tree_to_records(tree: PyTree) -> dict:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    rec = {}
+    for path, leaf in flat:
+        arr = np.asarray(jax.device_get(leaf))
+        # bfloat16 has no portable msgpack dtype: ship as uint16 view
+        dt = str(arr.dtype)
+        if dt == "bfloat16":
+            payload = arr.view(np.uint16).tobytes()
+        else:
+            payload = arr.tobytes()
+        rec[_path_str(path)] = {
+            "dtype": dt,
+            "shape": list(arr.shape),
+            "data": payload,
+        }
+    return rec
+
+
+def _records_to_leaves(rec: dict) -> dict:
+    out = {}
+    for k, v in rec.items():
+        dt = v["dtype"]
+        if dt == "bfloat16":
+            arr = np.frombuffer(v["data"], np.uint16).reshape(v["shape"]).view(jnp.bfloat16)
+        else:
+            arr = np.frombuffer(v["data"], np.dtype(dt)).reshape(v["shape"])
+        out[k] = arr
+    return out
+
+
+def save_checkpoint(directory: str, step: int, tree: PyTree, *, shard_id: int = 0) -> str:
+    """Atomic save: stage -> fsync -> rename; MANIFEST written last."""
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:09d}")
+    stage = tempfile.mkdtemp(prefix=".stage_", dir=directory)
+    try:
+        rec = _tree_to_records(tree)
+        blob = zstandard.ZstdCompressor(level=3).compress(
+            msgpack.packb(rec, use_bin_type=True)
+        )
+        shard_name = f"shard_{shard_id:05d}.ckpt"
+        with open(os.path.join(stage, shard_name), "wb") as f:
+            f.write(blob)
+            f.flush()
+            os.fsync(f.fileno())
+        manifest = {
+            "step": step,
+            "shards": {shard_name: hashlib.sha256(blob).hexdigest()},
+            "format": "msgpack+zstd/v1",
+        }
+        with open(os.path.join(stage, _MANIFEST), "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(stage, final)
+        return final
+    except BaseException:
+        shutil.rmtree(stage, ignore_errors=True)
+        raise
+
+
+def _valid(ckpt_dir: str) -> bool:
+    mpath = os.path.join(ckpt_dir, _MANIFEST)
+    if not os.path.exists(mpath):
+        return False
+    try:
+        manifest = json.load(open(mpath))
+        for shard, digest in manifest["shards"].items():
+            blob = open(os.path.join(ckpt_dir, shard), "rb").read()
+            if hashlib.sha256(blob).hexdigest() != digest:
+                return False
+        return True
+    except Exception:
+        return False
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = []
+    for name in os.listdir(directory):
+        if name.startswith("step_") and _valid(os.path.join(directory, name)):
+            steps.append(int(name[5:]))
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(
+    directory: str, step: Optional[int] = None, template: Optional[PyTree] = None
+) -> Tuple[int, PyTree]:
+    """Returns (step, tree). With a ``template``, the flat record dict is
+    re-folded into the template's structure (leaves host numpy arrays)."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no valid checkpoint under {directory}")
+    ckpt_dir = os.path.join(directory, f"step_{step:09d}")
+    manifest = json.load(open(os.path.join(ckpt_dir, _MANIFEST)))
+    rec: dict = {}
+    for shard in manifest["shards"]:
+        blob = open(os.path.join(ckpt_dir, shard), "rb").read()
+        rec.update(
+            msgpack.unpackb(
+                zstandard.ZstdDecompressor().decompress(blob), raw=False
+            )
+        )
+    leaves = _records_to_leaves(rec)
+    if template is None:
+        return step, leaves
+    flat = jax.tree_util.tree_flatten_with_path(template)
+    out = [leaves[_path_str(p)] for p, _ in flat[0]]
+    return step, jax.tree_util.tree_unflatten(flat[1], out)
+
+
+def reshard(tree: PyTree, shardings: PyTree) -> PyTree:
+    """Commit a (host or device) tree onto target shardings — the elastic
+    re-scale path. Works across mesh shapes/sizes."""
+    return jax.tree.map(lambda x, s: jax.device_put(x, s), tree, shardings)
+
+
+class CheckpointManager:
+    """Async save + retention + restore-latest-valid."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        self._lock = threading.Lock()
+        self._pending: Optional[threading.Thread] = None
+
+    def save(self, step: int, tree: PyTree, *, blocking: bool = True) -> None:
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+
+        def work():
+            with self._lock:
+                save_checkpoint(self.directory, step, host_tree)
+                self._gc()
+
+        if blocking:
+            work()
+        else:
+            self.wait()
+            self._pending = threading.Thread(target=work, daemon=True)
+            self._pending.start()
+
+    def wait(self) -> None:
+        if self._pending is not None:
+            self._pending.join()
+            self._pending = None
+
+    def restore_latest(self, template: PyTree) -> Optional[Tuple[int, PyTree]]:
+        self.wait()
+        step = latest_step(self.directory)
+        if step is None:
+            return None
+        return restore_checkpoint(self.directory, step, template)
+
+    def _gc(self) -> None:
+        if not os.path.isdir(self.directory):
+            return
+        steps = sorted(
+            int(n[5:])
+            for n in os.listdir(self.directory)
+            if n.startswith("step_") and _valid(os.path.join(self.directory, n))
+        )
+        for s in steps[: -self.keep] if self.keep else []:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:09d}"), ignore_errors=True)

@@ -1,0 +1,62 @@
+"""Architecture registry: the 10 assigned archs + the paper's own models.
+
+``get_config(name)`` / ``get_smoke_config(name)`` / ``ARCHS``.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.configs.shapes import SHAPES, ShapeSpec, input_specs, shape_applicable
+from repro.models.config import ModelConfig
+
+#: assigned pool (exact ids from the assignment) -> module name
+ARCHS: Dict[str, str] = {
+    "llama4-maverick-400b-a17b": "llama4_maverick_400b_a17b",
+    "grok-1-314b": "grok_1_314b",
+    "granite-3-8b": "granite_3_8b",
+    "qwen2.5-32b": "qwen2_5_32b",
+    "granite-20b": "granite_20b",
+    "qwen2.5-14b": "qwen2_5_14b",
+    "musicgen-large": "musicgen_large",
+    "internvl2-2b": "internvl2_2b",
+    "xlstm-1.3b": "xlstm_1_3b",
+    "recurrentgemma-2b": "recurrentgemma_2b",
+}
+
+#: paper-validation extras (not in the dry-run pool)
+EXTRA_ARCHS: Dict[str, str] = {
+    "bert-base": "bert_base",
+}
+
+
+def _module(name: str):
+    mod = ARCHS.get(name) or EXTRA_ARCHS.get(name)
+    if mod is None:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(ARCHS) + sorted(EXTRA_ARCHS)}")
+    return importlib.import_module(f"repro.configs.{mod}")
+
+
+def get_config(name: str) -> ModelConfig:
+    return _module(name).CONFIG
+
+
+def get_smoke_config(name: str) -> ModelConfig:
+    return _module(name).smoke_config()
+
+
+def list_archs() -> List[str]:
+    return list(ARCHS)
+
+
+__all__ = [
+    "ARCHS",
+    "EXTRA_ARCHS",
+    "SHAPES",
+    "ShapeSpec",
+    "get_config",
+    "get_smoke_config",
+    "input_specs",
+    "list_archs",
+    "shape_applicable",
+]

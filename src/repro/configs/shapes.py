@@ -1,0 +1,83 @@
+"""Assigned input-shape set (LM transformer shapes) and input_specs().
+
+  train_4k     seq_len=4096    global_batch=256   (training      -> train_step)
+  prefill_32k  seq_len=32768   global_batch=32    (inference     -> prefill_step)
+  decode_32k   seq_len=32768   global_batch=128   (decode        -> decode_step,
+                                                   one token, KV cache of 32768)
+  long_500k    seq_len=524288  global_batch=1     (long-context decode; only
+                                                   sub-quadratic archs)
+
+``input_specs`` returns weak-type-correct ShapeDtypeStructs — no allocation —
+matching the batch dicts the step functions consume. Modality frontends are
+stubs per the assignment: "frames" provides precomputed frame embeddings,
+"patch" provides precomputed patch embeddings.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeSpec) -> tuple[bool, str]:
+    """long_500k requires sub-quadratic attention (SSM/hybrid); pure
+    full-attention archs skip it (recorded, per the assignment spec)."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, "full-attention arch: 500k dense KV decode is out of the sub-quadratic regime"
+    return True, ""
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Model-input stand-ins for one (arch x shape) cell."""
+    b, t = shape.global_batch, shape.seq_len
+    i32, cdt = jnp.int32, cfg.compute_dtype
+    d = cfg.d_model
+
+    if shape.kind == "decode":
+        if cfg.frontend == "frames":
+            batch = {"embeds": _sds((b, 1, d), cdt)}
+        else:
+            batch = {"tokens": _sds((b, 1), i32)}
+        return batch
+
+    if cfg.frontend == "frames":
+        batch = {"embeds": _sds((b, t, d), cdt)}
+        labels = _sds((b, t, cfg.n_codebooks), i32)
+    elif cfg.frontend == "patch":
+        p = cfg.n_frontend_tokens
+        batch = {
+            "patch_embeds": _sds((b, p, d), cdt),
+            "tokens": _sds((b, t - p), i32),
+        }
+        labels = _sds((b, t), i32)
+    else:
+        batch = {"tokens": _sds((b, t), i32)}
+        labels = _sds((b, t), i32)
+
+    if shape.kind == "train":
+        batch["labels"] = labels
+    return batch

@@ -1,0 +1,63 @@
+"""Core: the paper's contribution as composable JAX modules.
+
+  noise      - analog noise models (Eqs. 3-5, 9-11)
+  precision  - noise-bits analysis (Eqs. 6-8, Tables I/III)
+  analog     - the analog_dot execution primitive + AnalogConfig
+  energy     - energy accounting + Eq.-14 log-penalty
+  redundant  - explicit K-repeat redundant coding (Fig. 3)
+  calibrate  - Eq.-14 energy learning (frozen weights)
+  search     - min-energy binary search (<2% degradation)
+"""
+from repro.core.analog import (
+    PER_CHANNEL,
+    PER_LAYER,
+    AnalogConfig,
+    SiteQuant,
+    analog_conv2d,
+    analog_dot,
+    site_key,
+)
+from repro.core.calibrate import CalibConfig, eval_accuracy, learn_energies, softmax_xent
+from repro.core.energy import (
+    avg_energy_per_mac,
+    dense_site_macs,
+    log_energy_penalty,
+    to_energy,
+    total_energy,
+    total_macs,
+    uniform_log_energies,
+)
+from repro.core.noise import PHOTON_ENERGY_AJ, SHOT, THERMAL, WEIGHT, NoiseSpec
+from repro.core.precision import noise_bits, noise_var_from_bits, thermal_noise_bits
+from repro.core.search import SearchResult, min_energy_search
+
+__all__ = [
+    "AnalogConfig",
+    "CalibConfig",
+    "NoiseSpec",
+    "PER_CHANNEL",
+    "PER_LAYER",
+    "PHOTON_ENERGY_AJ",
+    "SHOT",
+    "THERMAL",
+    "WEIGHT",
+    "SearchResult",
+    "SiteQuant",
+    "analog_conv2d",
+    "analog_dot",
+    "avg_energy_per_mac",
+    "dense_site_macs",
+    "eval_accuracy",
+    "learn_energies",
+    "log_energy_penalty",
+    "min_energy_search",
+    "noise_bits",
+    "noise_var_from_bits",
+    "site_key",
+    "softmax_xent",
+    "thermal_noise_bits",
+    "to_energy",
+    "total_energy",
+    "total_macs",
+    "uniform_log_energies",
+]

@@ -1,0 +1,227 @@
+"""The analog matmul execution primitive (paper §II-C, §IV).
+
+``analog_dot`` is the single choke-point through which every matmul in every
+model runs. In ``digital`` mode it performs (optionally fake-quantized)
+ordinary matmuls; in ``analog`` mode it simulates the noisy accelerator:
+
+    quantize inputs/weights  ->  MAC array (x @ w)  ->  physical noise
+    scaled by 1/sqrt(E)      ->  requantize output to 8 bits
+
+Per the paper's Appendix A:
+  * thermal/weight noise: digital 8-bit I/O (per-channel weights, per-tensor
+    activations, percentile clipping for thermal), output requantized to 8b.
+  * shot noise: continuous-valued inputs and weights (neuromorphic regime).
+
+Energies may be scalar (per-layer) or per-output-channel vectors (§V).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import noise as noise_lib
+from repro.core.noise import NoiseSpec
+from repro.quant.affine import QuantParams, fake_quant
+
+Array = jax.Array
+
+PER_LAYER = "per_layer"
+PER_CHANNEL = "per_channel"
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class AnalogConfig:
+    """Static configuration of the simulated analog accelerator."""
+
+    mode: str = dataclasses.field(metadata=dict(static=True), default="digital")
+    noise: NoiseSpec = NoiseSpec()
+    granularity: str = dataclasses.field(metadata=dict(static=True), default=PER_LAYER)
+    weight_bits: Optional[float] = dataclasses.field(metadata=dict(static=True), default=8.0)
+    act_bits: Optional[float] = dataclasses.field(metadata=dict(static=True), default=8.0)
+    out_bits: Optional[float] = dataclasses.field(metadata=dict(static=True), default=8.0)
+    #: snap energies to integer multiples of a quantum (photons / K repeats).
+    discrete_energy: bool = dataclasses.field(metadata=dict(static=True), default=False)
+    energy_quantum: float = dataclasses.field(
+        metadata=dict(static=True), default=noise_lib.PHOTON_ENERGY_AJ
+    )
+    #: route the fused Pallas kernel (TPU target; interpret=True on CPU).
+    use_kernel: bool = dataclasses.field(metadata=dict(static=True), default=False)
+
+    def __post_init__(self):
+        if self.mode not in ("digital", "analog"):
+            raise ValueError(f"bad mode {self.mode!r}")
+        if self.granularity not in (PER_LAYER, PER_CHANNEL):
+            raise ValueError(f"bad granularity {self.granularity!r}")
+
+    @classmethod
+    def shot(cls, **kw) -> "AnalogConfig":
+        """Shot-noise configuration: continuous I/O (paper §VI-A)."""
+        kw.setdefault("noise", NoiseSpec(kind=noise_lib.SHOT))
+        return cls(
+            mode="analog", weight_bits=None, act_bits=None, out_bits=None, **kw
+        )
+
+    @classmethod
+    def thermal(cls, sigma_t: float = 0.01, **kw) -> "AnalogConfig":
+        kw.setdefault("noise", NoiseSpec(kind=noise_lib.THERMAL, sigma=sigma_t))
+        return cls(mode="analog", **kw)
+
+    @classmethod
+    def weight(cls, sigma_w: float = 0.1, **kw) -> "AnalogConfig":
+        kw.setdefault("noise", NoiseSpec(kind=noise_lib.WEIGHT, sigma=sigma_w))
+        return cls(mode="analog", **kw)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SiteQuant:
+    """Calibrated quantizers for one matmul site.
+
+    ``wqp``: per-channel weight quantizer (ranges shaped (1, M)).
+    ``xqp``: per-tensor activation quantizer (scalar ranges).
+    ``oqp``: per-tensor output quantizer (layer l+1 range, scalar).
+    """
+
+    wqp: Optional[QuantParams] = None
+    xqp: Optional[QuantParams] = None
+    oqp: Optional[QuantParams] = None
+
+
+def site_key(key: jax.Array, site: str) -> jax.Array:
+    """Deterministic per-site RNG stream derived from a stable name hash."""
+    h = int.from_bytes(hashlib.blake2s(site.encode(), digest_size=4).digest(), "little")
+    return jax.random.fold_in(key, h)
+
+
+def _w_range(sq: SiteQuant, w: Array) -> Array:
+    """Per-output-channel weight range (1, M) or from data if uncalibrated."""
+    if sq is not None and sq.wqp is not None:
+        return (sq.wqp.x_max - sq.wqp.x_min).astype(jnp.float32)
+    lo = jnp.min(w, axis=0, keepdims=True)
+    hi = jnp.max(w, axis=0, keepdims=True)
+    return (hi - lo).astype(jnp.float32)
+
+
+def _x_range(sq: SiteQuant, x: Array) -> Array:
+    if sq is not None and sq.xqp is not None:
+        return (sq.xqp.x_max - sq.xqp.x_min).astype(jnp.float32)
+    return (jnp.max(x) - jnp.min(x)).astype(jnp.float32)
+
+
+def analog_dot(
+    x: Array,
+    w: Array,
+    *,
+    cfg: AnalogConfig,
+    energy: Optional[Array] = None,
+    key: Optional[jax.Array] = None,
+    sq: Optional[SiteQuant] = None,
+    precision=None,
+) -> Array:
+    """Noisy (or digital) matmul ``(..., K) @ (K, M) -> (..., M)``.
+
+    ``energy``: scalar (per-layer) or (M,) per-channel energy/MAC; required in
+    analog mode. ``key``: PRNG key for the noise draw; required in analog mode.
+    """
+    if x.shape[-1] != w.shape[0]:
+        raise ValueError(f"contract mismatch {x.shape} @ {w.shape}")
+    k_dim, m_dim = w.shape
+    compute_dtype = jnp.float32 if cfg.mode == "analog" else x.dtype
+
+    if cfg.mode == "digital":
+        if cfg.weight_bits is not None and sq is not None and sq.wqp is not None:
+            w = fake_quant(w, sq.wqp)
+        if cfg.act_bits is not None and sq is not None and sq.xqp is not None:
+            x = fake_quant(x, sq.xqp)
+        y = jnp.matmul(x, w.astype(x.dtype), precision=precision)
+        if cfg.out_bits is not None and sq is not None and sq.oqp is not None:
+            y = fake_quant(y, sq.oqp)
+        return y
+
+    if energy is None or key is None:
+        raise ValueError("analog mode requires energy and key")
+    if cfg.use_kernel:
+        from repro.kernels import ops as kernel_ops
+
+        return kernel_ops.analog_matmul(x, w, energy=energy, key=key, cfg=cfg, sq=sq)
+
+    x = x.astype(compute_dtype)
+    w = w.astype(compute_dtype)
+    energy = jnp.asarray(energy, jnp.float32)
+    if cfg.discrete_energy:
+        from repro.quant.affine import ste_snap_levels
+
+        energy = ste_snap_levels(energy, cfg.energy_quantum)
+
+    # --- input/weight quantization (digital-I/O architectures) -------------
+    if cfg.weight_bits is not None and sq is not None and sq.wqp is not None:
+        w_q = fake_quant(w, sq.wqp)
+    else:
+        w_q = w
+    if cfg.act_bits is not None and sq is not None and sq.xqp is not None:
+        x_q = fake_quant(x, sq.xqp)
+    else:
+        x_q = x
+
+    kind = cfg.noise.kind
+    if kind == noise_lib.WEIGHT:
+        w_rng = _w_range(sq, w_q)  # (1, M)
+        w_noisy = noise_lib.perturb_weights(key, w_q, w_rng, cfg.noise.sigma, energy)
+        y = jnp.matmul(x_q, w_noisy, precision=precision)
+    elif kind == noise_lib.THERMAL:
+        y = jnp.matmul(x_q, w_q, precision=precision)
+        std = noise_lib.thermal_noise_std(
+            k_dim, _w_range(sq, w_q), _x_range(sq, x_q), cfg.noise.sigma, energy
+        )
+        y = y + noise_lib.sample_output_noise(key, y.shape, std)
+    elif kind == noise_lib.SHOT:
+        y = jnp.matmul(x_q, w_q, precision=precision)
+        # eps-safe norms: ||.|| has a NaN gradient at exactly zero, and MoE
+        # capacity padding produces all-zero input rows
+        w_col = jnp.sqrt(jnp.sum(w_q * w_q, axis=0, keepdims=True) + 1e-20)
+        x_row = jnp.sqrt(jnp.sum(x_q * x_q, axis=-1, keepdims=True) + 1e-20)
+        std = noise_lib.shot_noise_std(
+            w_col, x_row, k_dim, energy, cfg.noise.photon_energy_aj
+        )
+        y = y + noise_lib.sample_output_noise(key, y.shape, std)
+    elif kind == noise_lib.NONE:
+        y = jnp.matmul(x_q, w_q, precision=precision)
+    else:  # pragma: no cover - NoiseSpec validates kinds
+        raise ValueError(kind)
+
+    # --- output requantization (paper App. A: requantize to 8 bits) --------
+    if cfg.out_bits is not None and sq is not None and sq.oqp is not None:
+        y = fake_quant(y, sq.oqp)
+    return y
+
+
+def analog_conv2d(
+    x: Array,
+    kernel: Array,
+    *,
+    cfg: AnalogConfig,
+    stride: int = 1,
+    padding: str = "SAME",
+    energy: Optional[Array] = None,
+    key: Optional[jax.Array] = None,
+    sq: Optional[SiteQuant] = None,
+) -> Array:
+    """Convolution as an im2col matmul (paper §II-A, [25]) through analog_dot.
+
+    ``x``: (B, H, W, Cin); ``kernel``: (kh, kw, Cin, Cout).
+    """
+    kh, kw, cin, cout = kernel.shape
+    patches = jax.lax.conv_general_dilated_patches(
+        x.astype(jnp.float32),
+        filter_shape=(kh, kw),
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )  # (B, Ho, Wo, kh*kw*cin) with feature order (cin, kh, kw)
+    w_mat = jnp.transpose(kernel, (2, 0, 1, 3)).reshape(kh * kw * cin, cout)
+    return analog_dot(patches, w_mat, cfg=cfg, energy=energy, key=key, sq=sq)

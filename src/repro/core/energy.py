@@ -1,0 +1,91 @@
+"""Energy accounting and the Eq.-14 penalty objective.
+
+Energies are learned in log-space (``E = exp(log_e)``): the noise std scales
+as ``1/sqrt(E)`` so positivity is structural, and the paper's own observation
+that "energy allocations change by orders of magnitude during training"
+(§V, motivation for the log-penalty) makes log-space the natural chart.
+
+MAC counts ``n_mac`` are per-example (batch-independent); the budget is
+expressed as a target *average energy/MAC* so batch factors cancel.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant.affine import ste_snap_levels
+
+Array = jax.Array
+EnergyTree = Dict[str, Array]  # site name -> scalar (per-layer) or (C,) (per-channel)
+MacTree = Dict[str, Array]  # site name -> per-example MACs, same shape as energy leaf
+
+
+def to_energy(log_e: EnergyTree, *, discrete: bool = False, quantum: float = 1.0) -> EnergyTree:
+    """Map log-parameters to positive energies; optionally snap to discrete
+    redundancy levels (photon counts / repeat counts) with an STE (paper §V:
+    'rounding the energy/MAC to the nearest quantized energy level during
+    training using the STE'). Discrete levels are >= 1 quantum."""
+
+    def one(le):
+        e = jnp.exp(le)
+        if discrete:
+            e = ste_snap_levels(e, quantum)
+        return e
+
+    return jax.tree.map(one, log_e)
+
+
+def total_energy(energies: EnergyTree, macs: MacTree) -> Array:
+    """E_tot = sum_l E^(l) * n_mac^(l)  (per example). Works on any pytree
+    pair with matching structure (flat site dicts or nested LM energy trees)."""
+    prods = jax.tree.map(
+        lambda e, m: jnp.sum(jnp.asarray(e, jnp.float32) * jnp.asarray(m, jnp.float32)),
+        energies,
+        macs,
+    )
+    return jnp.sum(jnp.stack(jax.tree.leaves(prods)))
+
+
+def total_macs(macs: MacTree) -> Array:
+    leaves = [jnp.sum(jnp.asarray(m, jnp.float32)) for m in jax.tree.leaves(macs)]
+    return jnp.sum(jnp.stack(leaves))
+
+
+def avg_energy_per_mac(energies: EnergyTree, macs: MacTree) -> Array:
+    return total_energy(energies, macs) / total_macs(macs)
+
+
+def log_energy_penalty(
+    energies: EnergyTree, macs: MacTree, target_e_per_mac: float, lam: float
+) -> Array:
+    """Eq. 14 penalty: lam * max(log(E_tot) - log(E_max), 0) with
+    ``E_max = target_e_per_mac * total_macs``."""
+    e_tot = total_energy(energies, macs)
+    budget = jnp.asarray(target_e_per_mac, jnp.float32) * total_macs(macs)
+    return lam * jnp.maximum(jnp.log(e_tot) - jnp.log(budget), 0.0)
+
+
+def uniform_log_energies(macs: MacTree, e_per_mac: float) -> EnergyTree:
+    """Uniform allocation: every site (and channel) at the same energy/MAC."""
+    le = float(jnp.log(jnp.asarray(e_per_mac, jnp.float32)))
+    return jax.tree.map(lambda m: jnp.full(jnp.shape(m), le, jnp.float32), macs)
+
+
+def dense_site_macs(
+    batch_elems: int, k: int, m: int, *, per_channel: bool
+) -> Array:
+    """Per-example MACs of a dense site computing (B..., K) @ (K, M).
+
+    ``batch_elems`` counts output vectors per example (e.g. seq len for an LM
+    token stream, or 1 for a plain MLP). Per-layer: scalar B*K*M.
+    Per-channel: (M,) vector of B*K each."""
+    if per_channel:
+        return jnp.full((m,), float(batch_elems * k), jnp.float32)
+    return jnp.asarray(float(batch_elems) * k * m, jnp.float32)
+
+
+def describe(energies: EnergyTree, macs: MacTree) -> Tuple[Array, Array]:
+    """(total energy, average energy/MAC) convenience pair for logging."""
+    return total_energy(energies, macs), avg_energy_per_mac(energies, macs)

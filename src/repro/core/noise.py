@@ -1,0 +1,142 @@
+"""Analog noise models (paper §II-C Eqs. 3-5 and §IV Eqs. 9-11).
+
+Each model maps a clean dot product ``y = x @ w`` to a noisy sample, with the
+noise standard deviation scaled by ``1/sqrt(E)`` where ``E`` is the per-layer
+(or per-output-channel) energy/MAC allocated via redundant coding (§IV).
+
+Units:
+  * thermal / weight noise: ``E`` is a relative, unitless quantity (paper §IV).
+  * shot noise: ``E`` is physical optical energy per MAC in attojoules (aJ);
+    ``photons/MAC = E / E_photon`` with ``E_photon = hc/lambda = 0.128 aJ``
+    at lambda = 1.55um (paper §VI-A: "photon energy of 128 zJ").
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+PLANCK_J_S = 6.62607015e-34
+LIGHTSPEED_M_S = 2.99792458e8
+DEFAULT_WAVELENGTH_M = 1.55e-6
+#: photon energy at 1.55um in attojoules (1 aJ = 1e-18 J): hc/lambda = 0.128 aJ.
+PHOTON_ENERGY_AJ = PLANCK_J_S * LIGHTSPEED_M_S / DEFAULT_WAVELENGTH_M * 1e18
+
+THERMAL = "thermal"
+WEIGHT = "weight"
+SHOT = "shot"
+NONE = "none"
+KINDS = (NONE, THERMAL, WEIGHT, SHOT)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class NoiseSpec:
+    """Which physical noise source limits the analog accelerator.
+
+    ``sigma`` is the engineering free parameter: sigma_t for thermal noise
+    (paper Appendix A: 0.01) or sigma_w for weight noise (0.1). Unused for
+    shot noise, where the physics (photon statistics) fixes the scale.
+    """
+
+    kind: str = dataclasses.field(metadata=dict(static=True), default=NONE)
+    sigma: float = dataclasses.field(metadata=dict(static=True), default=0.01)
+    photon_energy_aj: float = dataclasses.field(
+        metadata=dict(static=True), default=PHOTON_ENERGY_AJ
+    )
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(f"unknown noise kind {self.kind!r}; expected one of {KINDS}")
+
+
+def thermal_noise_std(
+    n_macs: Array, w_range: Array, x_range: Array, sigma_t: float, energy: Array
+) -> Array:
+    """Eq. 9 noise std: sqrt(N) * (Wmax-Wmin) * (xmax-xmin) * sigma_t / sqrt(E).
+
+    Broadcasts: ``w_range`` may be per-output-channel (per-channel weight
+    quantization, Appendix A), ``energy`` scalar or per-channel.
+    """
+    n = jnp.asarray(n_macs, jnp.float32)
+    return jnp.sqrt(n) * w_range * x_range * sigma_t / jnp.sqrt(energy)
+
+
+def weight_noise_std(w_range: Array, sigma_w: float, energy: Array) -> Array:
+    """Eq. 10 per-weight perturbation std: (Wmax-Wmin) * sigma_w / sqrt(E)."""
+    return w_range * sigma_w / jnp.sqrt(energy)
+
+
+def shot_noise_std(
+    w_col_norms: Array,
+    x_row_norms: Array,
+    n_macs: Array,
+    energy_aj: Array,
+    photon_energy_aj: float = PHOTON_ENERGY_AJ,
+) -> Array:
+    """Eq. 11 noise std: ||W_i||2 ||x||2 / sqrt(N * photons_per_mac).
+
+    ``w_col_norms``: L2 norm over the contracting axis per output channel,
+    shape broadcastable to the output's channel axis. ``x_row_norms``: L2 norm
+    of each input vector, shape = batch dims + (1,). ``energy_aj`` is optical
+    energy per MAC in aJ (scalar or per-channel).
+    """
+    photons = jnp.asarray(energy_aj, jnp.float32) / photon_energy_aj
+    n = jnp.asarray(n_macs, jnp.float32)
+    return w_col_norms * x_row_norms / jnp.sqrt(n * photons)
+
+
+def sample_output_noise(
+    key: jax.Array, shape: tuple, std: Array, dtype=jnp.float32
+) -> Array:
+    """Reparameterized additive Gaussian output noise: std * N(0, 1).
+
+    ``std`` broadcasts against ``shape`` (e.g. per-channel on the last axis).
+    The reparameterization trick (paper §V, [55]) makes the result
+    differentiable w.r.t. ``std`` and hence w.r.t. the energies.
+    """
+    xi = jax.random.normal(key, shape, dtype=dtype)
+    return xi * std
+
+
+def perturb_weights(
+    key: jax.Array, w: Array, w_range: Array, sigma_w: float, energy: Array
+) -> Array:
+    """Eq. 10: elementwise Gaussian weight-read noise, std per Eq. 10.
+
+    ``w_range``/``energy`` broadcast per output channel (last axis of ``w``).
+    """
+    std = weight_noise_std(w_range, sigma_w, energy)
+    xi = jax.random.normal(key, w.shape, dtype=jnp.float32)
+    return w.astype(jnp.float32) + xi * std
+
+
+def noise_variance_for_layer(
+    spec: NoiseSpec,
+    *,
+    n_macs: Array,
+    energy: Array,
+    w_range: Optional[Array] = None,
+    x_range: Optional[Array] = None,
+    w_col_norms: Optional[Array] = None,
+    x_row_norm_sq_mean: Optional[Array] = None,
+) -> Array:
+    """Analytic Var(eps_a) of the layer output under each noise model.
+
+    Used by the noise-bits analysis (§III). For weight noise the output
+    variance of ``sum_j (W_ij + xi_j r sigma/sqrt(E)) x_j`` is
+    ``(r sigma)^2/E * ||x||^2``; we take the mean squared input norm.
+    """
+    if spec.kind == THERMAL:
+        return thermal_noise_std(n_macs, w_range, x_range, spec.sigma, energy) ** 2
+    if spec.kind == WEIGHT:
+        per_w_var = weight_noise_std(w_range, spec.sigma, energy) ** 2
+        return per_w_var * x_row_norm_sq_mean
+    if spec.kind == SHOT:
+        photons = energy / spec.photon_energy_aj
+        return (w_col_norms**2) * x_row_norm_sq_mean / (n_macs * photons)
+    return jnp.zeros(())

@@ -1,0 +1,75 @@
+"""Noise bits: the analog-noise <-> bit-precision equivalence (paper §III).
+
+``B_eps = log2( range / sqrt(12 * Var(eps_a)) + 1 )``          (Eq. 7)
+
+and its explicit thermal-noise form (Eq. 8). Also provides the inverse map
+(bits -> equivalent noise variance) used to replicate Table I: evaluate a
+network under analog noise, compute per-layer noise bits, then re-evaluate
+with noise removed but activations quantized to those (fractional) bit counts.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def noise_bits(out_range: Array, noise_var: Array) -> Array:
+    """Eq. 7: number of bits whose quantization noise variance equals
+    ``noise_var`` for a uniform quantizer spanning ``out_range``."""
+    out_range = jnp.asarray(out_range, jnp.float32)
+    noise_var = jnp.maximum(jnp.asarray(noise_var, jnp.float32), 1e-30)
+    return jnp.log2(out_range / jnp.sqrt(12.0 * noise_var) + 1.0)
+
+
+def noise_var_from_bits(out_range: Array, bits: Array) -> Array:
+    """Inverse of Eq. 7 == quantization-noise variance of a B-bit uniform
+    quantizer (Eq. 6): ``(range / (2^B - 1))^2 / 12``."""
+    n_bins = 2.0 ** jnp.asarray(bits, jnp.float32) - 1.0
+    delta = jnp.asarray(out_range, jnp.float32) / jnp.maximum(n_bins, 1e-9)
+    return delta * delta / 12.0
+
+
+def thermal_noise_bits(
+    out_range: Array,
+    n_macs: Array,
+    w_range: Array,
+    x_range: Array,
+    sigma_t: float,
+    energy: Array = 1.0,
+) -> Array:
+    """Eq. 8 (extended with dynamic energy, §VI Table III): noise bits of a
+    layer under thermal noise. ``out_range`` is the (l+1) activation range;
+    ``w_range``/``x_range`` are the layer-(l) weight/input ranges."""
+    n = jnp.asarray(n_macs, jnp.float32)
+    denom = (
+        sigma_t
+        * jnp.asarray(w_range, jnp.float32)
+        * jnp.asarray(x_range, jnp.float32)
+        * jnp.sqrt(12.0 * n)
+        / jnp.sqrt(jnp.asarray(energy, jnp.float32))
+    )
+    return jnp.log2(jnp.asarray(out_range, jnp.float32) / jnp.maximum(denom, 1e-30) + 1.0)
+
+
+def empirical_noise_var(clean: Array, noisy: Array) -> Array:
+    """Monte-Carlo Var(eps_a) estimate over a layer (paper defines the noise
+    distribution over the entire layer, §III)."""
+    err = (noisy.astype(jnp.float32) - clean.astype(jnp.float32)).reshape(-1)
+    return jnp.mean(err * err)
+
+
+def snr_noise_bits(snr: Array) -> Array:
+    """The SNR connection (paper §III): B = log2(sqrt(SNR) + 1) under a
+    uniform signal assumption. Provided for the comparison discussed in-text;
+    NOT used for Table I (signal distributions are not uniform)."""
+    return jnp.log2(jnp.sqrt(jnp.asarray(snr, jnp.float32)) + 1.0)
+
+
+def average_bits(per_layer_bits: dict, per_layer_macs: dict) -> Array:
+    """MAC-weighted... no: the paper reports the plain average over layers
+    (Table I 'Average Bits'). Unweighted mean across layers."""
+    vals = [jnp.asarray(v, jnp.float32).mean() for v in per_layer_bits.values()]
+    del per_layer_macs
+    return jnp.mean(jnp.stack(vals))

@@ -1,0 +1,77 @@
+"""Redundant coding: dynamic precision by repeating operations (paper §IV).
+
+Three physically distinct but statistically equivalent mechanisms:
+
+  * time averaging   — accumulate the same op over K clock cycles (Fig. 3a)
+  * spatial averaging— K device copies encode the same weights (Fig. 3b/3c)
+  * the continuous idealization used for learning — noise std / sqrt(E)
+
+This module implements the explicit K-repeat forms so tests can verify the
+1/sqrt(K) law that justifies the continuous ``E`` parameterization used by
+``analog_dot`` (signals add linearly, noise adds in quadrature).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.analog import AnalogConfig, SiteQuant, analog_dot
+from repro.quant.affine import ste_snap_levels
+
+Array = jax.Array
+
+
+def time_averaged_dot(
+    x: Array,
+    w: Array,
+    *,
+    cfg: AnalogConfig,
+    base_energy: Array,
+    key: jax.Array,
+    k_repeats: int,
+    sq: SiteQuant | None = None,
+) -> Array:
+    """Fig. 3a: run the op for K clock cycles at base energy and average.
+
+    Statistically identical to a single draw at energy ``K * base_energy``.
+    """
+
+    def one(i):
+        return analog_dot(
+            x, w, cfg=cfg, energy=base_energy, key=jax.random.fold_in(key, i), sq=sq
+        )
+
+    draws = jax.vmap(one)(jnp.arange(k_repeats))
+    return jnp.mean(draws, axis=0)
+
+
+def spatial_averaged_dot(
+    x: Array,
+    w: Array,
+    *,
+    cfg: AnalogConfig,
+    base_energy: Array,
+    key: jax.Array,
+    k_repeats: int,
+    sq: SiteQuant | None = None,
+) -> Array:
+    """Fig. 3b: compute ``[W; W; ...] . [x, x, ...] / K`` on one big array.
+
+    The MAC count grows K-fold (energy K * base), and independent per-copy
+    noise averages out. For output-additive noise (thermal/shot) the paper's
+    K-column construction is equivalent to K independent draws averaged; we
+    build it explicitly for weight noise, where each spatial copy of W reads
+    independent device noise.
+    """
+    k_dim, m_dim = w.shape
+    w_tiled = jnp.concatenate([w] * k_repeats, axis=0)  # (K*k, M)
+    x_tiled = jnp.concatenate([x] * k_repeats, axis=-1)  # (..., K*k)
+    y = analog_dot(
+        x_tiled, w_tiled, cfg=cfg, energy=base_energy, key=key, sq=sq
+    )
+    return y / float(k_repeats)
+
+
+def discrete_levels(energy: Array, quantum: float) -> Array:
+    """Round energies to integer redundancy levels with an STE (paper §V)."""
+    return ste_snap_levels(energy, quantum)

@@ -1,0 +1,78 @@
+"""Binary search for the minimum energy/MAC at bounded accuracy loss.
+
+Paper §VI-A: "we determine the minimum average energy/MAC for which the
+accuracy does not degrade below floating point accuracy by 2% (within 0.1%)
+by performing a binary search on the target energy/MAC."
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Optional, Tuple
+
+
+@dataclasses.dataclass
+class SearchResult:
+    min_e_per_mac: float  # smallest feasible target found
+    accuracy: float  # accuracy achieved at that target
+    achieved_e_per_mac: float  # actual average E/MAC (may undershoot target)
+    trace: list  # [(target, acc, achieved)] per bisection step
+    artifact: object = None  # energies (or whatever make_fn returns) at best
+
+
+def min_energy_search(
+    make_fn: Callable[[float], Tuple[object, float]],
+    acc_fn: Callable[[object], float],
+    *,
+    float_acc: float,
+    max_degradation: float = 0.02,
+    acc_tol: float = 0.001,
+    lo: float = 1e-3,
+    hi: float = 1e3,
+    max_iters: int = 12,
+) -> SearchResult:
+    """Bisect (in log space) the smallest target energy/MAC meeting the
+    accuracy floor ``float_acc - max_degradation``.
+
+    ``make_fn(target) -> (artifact, achieved_e_per_mac)`` builds an energy
+    allocation for the target (uniform assignment, or a full Eq.-14
+    calibration run). ``acc_fn(artifact) -> accuracy`` evaluates it.
+    Terminates early once the achieved accuracy is within ``acc_tol`` of the
+    floor (paper's "within 0.1%").
+    """
+    floor = float_acc - max_degradation
+    trace = []
+    best: Optional[tuple] = None  # (target, acc, achieved, artifact)
+
+    def probe(target: float):
+        nonlocal best
+        artifact, achieved = make_fn(target)
+        acc = acc_fn(artifact)
+        trace.append((target, acc, achieved))
+        if acc >= floor and (best is None or achieved < best[2]):
+            best = (target, acc, achieved, artifact)
+        return acc
+
+    # Ensure the bracket actually brackets feasibility.
+    acc_hi = probe(hi)
+    if acc_hi < floor:
+        return SearchResult(math.inf, acc_hi, math.inf, trace, None)
+    acc_lo = probe(lo)
+    if acc_lo >= floor:
+        _, acc, achieved, art = best
+        return SearchResult(lo, acc, achieved, trace, art)
+
+    llo, lhi = math.log(lo), math.log(hi)
+    for _ in range(max_iters):
+        mid = math.exp(0.5 * (llo + lhi))
+        acc = probe(mid)
+        if acc >= floor:
+            lhi = math.log(mid)
+            if acc - floor <= acc_tol:  # inside the paper's 0.1% window
+                break
+        else:
+            llo = math.log(mid)
+
+    assert best is not None
+    target, acc, achieved, art = best
+    return SearchResult(target, acc, achieved, trace, art)

@@ -1,0 +1,15 @@
+from repro.data.pipeline import DataPipeline, TokenTaskConfig, markov_batch
+from repro.data.synthetic import (
+    make_entailment_dataset,
+    make_image_dataset,
+    make_tabular_dataset,
+)
+
+__all__ = [
+    "DataPipeline",
+    "TokenTaskConfig",
+    "make_entailment_dataset",
+    "make_image_dataset",
+    "make_tabular_dataset",
+    "markov_batch",
+]

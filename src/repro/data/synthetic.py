@@ -1,0 +1,98 @@
+"""Deterministic synthetic datasets for the paper-validation experiments.
+
+The container is offline (no ImageNet/GLUE), so the paper's models are
+replaced by small networks trained on procedurally generated tasks that are
+non-trivially learnable — the dynamic-precision claims we validate are about
+*energy-accuracy tradeoffs of a frozen trained model under analog noise*,
+which these tasks exercise exactly (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+
+def make_image_dataset(
+    n: int, *, n_classes: int = 10, size: int = 16, channels: int = 3, seed: int = 0
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Class-conditional structured images: each class has a fixed random
+    frequency signature + spatial pattern; samples add noise and random
+    phase/amplitude jitter. CNN-learnable but not linearly separable from
+    raw pixels at high noise."""
+    rng = np.random.default_rng(seed)
+    # per-class: mixture of 3 2-D sinusoid patterns + a blob location.
+    # Classes are deliberately close (narrow frequency band, shared phases,
+    # strong per-sample jitter + pixel noise) so a small CNN lands around
+    # 85-95% — leaving headroom for noise-induced degradation.
+    freqs = rng.uniform(1.0, 2.2, size=(n_classes, 3, 2))
+    phases = rng.uniform(0, 2 * np.pi, size=(n_classes, 3))
+    blob = rng.uniform(0.3, 0.7, size=(n_classes, 2))
+    labels = rng.integers(0, n_classes, size=n)
+    yy, xx = np.mgrid[0:size, 0:size] / size
+    imgs = np.empty((n, size, size, channels), np.float32)
+    for i in range(n):
+        c = labels[i]
+        jit = rng.normal(0, 0.35, size=3)
+        img = np.zeros((size, size), np.float32)
+        for k in range(3):
+            img += (1.0 + jit[k]) * np.sin(
+                2 * np.pi * (freqs[c, k, 0] * xx + freqs[c, k, 1] * yy) + phases[c, k]
+            )
+        bx, by = blob[c] + rng.normal(0, 0.08, size=2)
+        img += 1.0 * np.exp(-(((xx - bx) ** 2 + (yy - by) ** 2) / 0.02))
+        img = img[..., None] * np.array([1.0, 0.8, 0.6], np.float32)
+        img += rng.normal(0, 1.0, size=img.shape)
+        imgs[i] = img
+    return imgs.astype(np.float32), labels.astype(np.int32)
+
+
+def make_entailment_dataset(
+    n: int, *, vocab: int = 64, seq_len: int = 24, seed: int = 0
+) -> Tuple[np.ndarray, np.ndarray]:
+    """MNLI-style 3-way task over token pairs (premise, hypothesis).
+
+    Rule: hypothesis tokens drawn from the premise's "topic set" ->
+    entail(0); from the complementary set -> contradict(1); mixed ->
+    neutral(2). Requires cross-segment attention to solve.
+    """
+    rng = np.random.default_rng(seed)
+    half = seq_len // 2
+    n_topics = 8
+    per = (vocab - 4) // n_topics
+    topic_words = rng.permutation(vocab - 4)[: n_topics * per].reshape(n_topics, per)
+    toks = np.empty((n, seq_len), np.int32)
+    labels = rng.integers(0, 3, size=n).astype(np.int32)
+    sep = vocab - 1
+    for i in range(n):
+        t = rng.integers(0, n_topics)
+        other = (t + 1 + rng.integers(0, n_topics - 1)) % n_topics
+        prem = rng.choice(topic_words[t], size=half - 1)
+        if labels[i] == 0:
+            hyp = rng.choice(topic_words[t], size=half)
+        elif labels[i] == 1:
+            hyp = rng.choice(topic_words[other], size=half)
+        else:
+            k = half // 2
+            hyp = np.concatenate(
+                [rng.choice(topic_words[t], size=k), rng.choice(topic_words[other], size=half - k)]
+            )
+            rng.shuffle(hyp)
+        toks[i] = np.concatenate([prem, [sep], hyp])
+    return toks, labels
+
+
+def make_tabular_dataset(
+    n: int, *, dim: int = 32, n_classes: int = 8, depth: int = 3, seed: int = 0
+) -> Tuple[np.ndarray, np.ndarray]:
+    """MLP task: labels from a fixed random teacher MLP (depth layers) over
+    gaussian inputs — learnable to high accuracy, nonlinear."""
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, dim)).astype(np.float32)
+    h = x
+    for _ in range(depth):
+        w = rng.normal(size=(h.shape[1], dim)).astype(np.float32) / np.sqrt(h.shape[1])
+        h = np.tanh(h @ w)
+    w_out = rng.normal(size=(dim, n_classes)).astype(np.float32)
+    labels = np.argmax(h @ w_out, axis=-1).astype(np.int32)
+    return x, labels

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the perf-critical analog-simulation hot spots.
+
+  analog_matmul  - fused quant -> matmul -> noise -> requant (paper §IV)
+  prng           - counter-based Threefry-2x32 + Box-Muller (in-register noise)
+  ref            - pure-jnp oracles with bit-identical noise draws
+  ops            - jit'd public wrappers
+"""
+from repro.kernels.ops import analog_matmul, analog_matmul_reference, prepare_operands
+
+__all__ = ["analog_matmul", "analog_matmul_reference", "prepare_operands"]

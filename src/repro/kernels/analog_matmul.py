@@ -1,0 +1,197 @@
+"""Fused analog-matmul Pallas TPU kernel.
+
+One kernel fuses the entire simulated analog pipeline of paper §IV:
+
+    fake-quant(x)  ->  fake-quant(w) per-channel  ->  [weight-read noise]
+    ->  MXU matmul accumulate (f32)  ->  [output noise, std = row x col]
+    ->  affine requantization of the output
+
+Noise is generated *inside* the kernel from a counter-based Threefry PRNG
+keyed on global element indices — the (M, N) gaussian tensor never exists in
+HBM. Block sizes are MXU-aligned (multiples of 128) and sized so the working
+set (x, w, out tiles) fits VMEM.
+
+Noise kinds (static):
+  * "output": additive gaussian with std[i, j] = row_scale[i] * col_scale[j].
+    Covers thermal (row=1) and shot (row=||x_i||) — scales precomputed in
+    ops.py from the calibrated ranges / energies.
+  * "weight": per-weight gaussian with std[j] = wnoise_scale[j] (Eq. 10),
+    drawn per (k, j) — identical draw for every row-tile i, as in a single
+    physical read of the crossbar.
+  * "none": plain (optionally quantized) matmul.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import prng
+
+Array = jax.Array
+
+DEFAULT_BLOCK = (256, 256, 512)  # (bm, bn, bk)
+
+
+def _fake_quant(v: Array, delta: Array, zp: Array, bins: Array) -> Array:
+    """Affine fake-quant; delta/zp/bins broadcast (scalars or per-channel)."""
+    code = jnp.round(v / delta) + zp
+    code = jnp.clip(code, 0.0, bins)
+    return (code - zp) * delta
+
+
+def _kernel(
+    x_ref,
+    w_ref,
+    rs_ref,
+    cs_ref,
+    wq_ref,
+    sc_ref,
+    seed_ref,
+    out_ref,
+    *,
+    noise_kind: str,
+    nk: int,
+    block: tuple,
+    k_total: int,
+    quant_x: bool,
+    quant_w: bool,
+    quant_out: bool,
+):
+    bm, bn, bk = block
+    ti = pl.program_id(0)
+    tj = pl.program_id(1)
+    tk = pl.program_id(2)
+    sc = sc_ref[...]  # (1, 8) f32 scalars
+    seed = seed_ref[...]  # (1, 2) uint32
+    k0, k1 = seed[0, 0], seed[0, 1]
+
+    @pl.when(tk == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    xb = x_ref[...].astype(jnp.float32)
+    wb = w_ref[...].astype(jnp.float32)
+
+    if k_total % bk != 0:
+        # Mask the K-tail: out-of-bounds block regions are undefined (NaN in
+        # interpret mode) and must not feed the accumulation.
+        k_idx = jax.lax.broadcasted_iota(jnp.int32, (bm, bk), 1) + tk * bk
+        xb = jnp.where(k_idx < k_total, xb, 0.0)
+        wk_idx = jax.lax.broadcasted_iota(jnp.int32, (bk, bn), 0) + tk * bk
+        wb = jnp.where(wk_idx < k_total, wb, 0.0)
+
+    if quant_x:
+        xb = _fake_quant(xb, sc[0, 0], sc[0, 1], sc[0, 2])
+    if quant_w:
+        wd = wq_ref[0:1, :]  # (1, bn) per-channel delta
+        wz = wq_ref[1:2, :]
+        wbins = wq_ref[2:3, :]
+        wb = _fake_quant(wb, wd, wz, wbins)
+    if noise_kind == "weight":
+        # std per column lives in cs; counter = (global k, global j); the
+        # salt decorrelates this stream from the output-noise stream.
+        xi = prng.gaussian_tile(
+            k0 ^ jnp.uint32(prng.WEIGHT_STREAM_SALT),
+            k1,
+            tk * bk,
+            tj * bn,
+            (bk, bn),
+        )
+        wb = wb + cs_ref[...] * xi
+
+    out_ref[...] += jnp.dot(xb, wb, preferred_element_type=jnp.float32)
+
+    @pl.when(tk == nk - 1)
+    def _finish():
+        y = out_ref[...]
+        if noise_kind == "output":
+            xi = prng.gaussian_tile(k0, k1, ti * bm, tj * bn, (bm, bn))
+            y = y + rs_ref[...] * cs_ref[...] * xi
+        if quant_out:
+            y = _fake_quant(y, sc[0, 3], sc[0, 4], sc[0, 5])
+        out_ref[...] = y
+
+
+def analog_matmul_raw(
+    x: Array,
+    w: Array,
+    row_scale: Array,
+    col_scale: Array,
+    wq: Array,
+    scalars: Array,
+    seed: Array,
+    *,
+    noise_kind: str = "output",
+    quant_x: bool = False,
+    quant_w: bool = False,
+    quant_out: bool = False,
+    block: tuple = DEFAULT_BLOCK,
+    interpret: Optional[bool] = None,
+) -> Array:
+    """Low-level entry: shapes (M,K) @ (K,N) -> (M,N).
+
+    row_scale: (M, 1) f32; col_scale: (1, N) f32; wq: (3, N) f32 rows =
+    (delta, zp, bins); scalars: (1, 8) f32 = (xd, xz, xbins, od, oz, obins,
+    0, 0); seed: (1, 2) uint32.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    bm, bn, bk = block
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    grid = (pl.cdiv(m, bm), pl.cdiv(n, bn), pl.cdiv(k, bk))
+
+    kern = functools.partial(
+        _kernel,
+        noise_kind=noise_kind,
+        nk=grid[2],
+        block=(bm, bn, bk),
+        k_total=k,
+        quant_x=quant_x,
+        quant_w=quant_w,
+        quant_out=quant_out,
+    )
+    kwargs = {}
+    if not interpret:  # TPU compiler hints
+        try:
+            from jax.experimental.pallas import tpu as pltpu
+
+            params_cls = getattr(pltpu, "CompilerParams", None) or getattr(
+                pltpu, "TPUCompilerParams"
+            )
+            kwargs["compiler_params"] = params_cls(
+                dimension_semantics=("parallel", "parallel", "arbitrary")
+            )
+        except Exception:  # pragma: no cover - hint only
+            pass
+
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bm, 1), lambda i, j, kk: (i, 0)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+            pl.BlockSpec((3, bn), lambda i, j, kk: (0, j)),
+            pl.BlockSpec((1, 8), lambda i, j, kk: (0, 0)),
+            pl.BlockSpec((1, 2), lambda i, j, kk: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(
+        x.astype(jnp.float32),
+        w.astype(jnp.float32),
+        row_scale.astype(jnp.float32),
+        col_scale.astype(jnp.float32),
+        wq.astype(jnp.float32),
+        scalars.astype(jnp.float32),
+        seed.astype(jnp.uint32),
+    )

@@ -1,0 +1,167 @@
+"""Public jit'd wrappers around the fused analog-matmul kernel.
+
+``prepare_operands`` maps the high-level (AnalogConfig, SiteQuant, energy,
+key) description onto the kernel's raw operands — precomputed noise scale
+vectors, per-channel quantizer vectors, scalar pack, PRNG seed — so the same
+preparation feeds both the Pallas kernel and the pure-jnp oracle.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import noise as noise_lib
+from repro.kernels import prng
+from repro.kernels.analog_matmul import DEFAULT_BLOCK, analog_matmul_raw
+from repro.kernels.ref import analog_matmul_ref_raw
+
+Array = jax.Array
+
+
+def _ranges(sq, w, x) -> Tuple[Array, Array]:
+    if sq is not None and sq.wqp is not None:
+        w_rng = (sq.wqp.x_max - sq.wqp.x_min).astype(jnp.float32).reshape(1, -1)
+    else:
+        w_rng = (jnp.max(w, axis=0) - jnp.min(w, axis=0)).reshape(1, -1)
+    if sq is not None and sq.xqp is not None:
+        x_rng = (sq.xqp.x_max - sq.xqp.x_min).astype(jnp.float32)
+    else:
+        x_rng = jnp.max(x) - jnp.min(x)
+    return w_rng, jnp.asarray(x_rng, jnp.float32)
+
+
+def prepare_operands(x2d: Array, w: Array, *, energy, key, cfg, sq=None) -> dict:
+    """Compute raw kernel operands from the analog execution description."""
+    m, k = x2d.shape
+    _, n = w.shape
+    energy = jnp.asarray(energy, jnp.float32)
+    if cfg.discrete_energy:
+        from repro.quant.affine import ste_snap_levels
+
+        energy = ste_snap_levels(energy, cfg.energy_quantum)
+    e_col = jnp.broadcast_to(energy.reshape(1, -1), (1, n))
+
+    kind = cfg.noise.kind
+    ones_row = jnp.ones((m, 1), jnp.float32)
+    if kind == noise_lib.THERMAL:
+        w_rng, x_rng = _ranges(sq, w, x2d)
+        col = noise_lib.thermal_noise_std(k, w_rng, x_rng, cfg.noise.sigma, e_col)
+        row = ones_row
+        noise_kind = "output"
+    elif kind == noise_lib.SHOT:
+        w_col = jnp.linalg.norm(w.astype(jnp.float32), axis=0).reshape(1, -1)
+        photons = e_col / cfg.noise.photon_energy_aj
+        col = w_col / jnp.sqrt(jnp.float32(k) * photons)
+        row = jnp.linalg.norm(x2d.astype(jnp.float32), axis=-1, keepdims=True)
+        noise_kind = "output"
+    elif kind == noise_lib.WEIGHT:
+        w_rng, _ = _ranges(sq, w, x2d)
+        col = noise_lib.weight_noise_std(w_rng, cfg.noise.sigma, e_col)
+        row = ones_row
+        noise_kind = "weight"
+    else:
+        col = jnp.zeros((1, n), jnp.float32)
+        row = ones_row
+        noise_kind = "none"
+
+    quant_w = cfg.weight_bits is not None and sq is not None and sq.wqp is not None
+    quant_x = cfg.act_bits is not None and sq is not None and sq.xqp is not None
+    quant_out = cfg.out_bits is not None and sq is not None and sq.oqp is not None
+
+    if quant_w:
+        wd = jnp.broadcast_to(sq.wqp.delta.reshape(1, -1), (1, n))
+        wz = jnp.broadcast_to(sq.wqp.zero_point.reshape(1, -1), (1, n))
+        wb = jnp.broadcast_to(jnp.reshape(sq.wqp.n_bins, (1, 1)), (1, n))
+        wq = jnp.concatenate([wd, wz, wb], axis=0)
+    else:
+        wq = jnp.ones((3, n), jnp.float32)
+
+    def _sq_scalars(qp):
+        if qp is None:
+            return jnp.ones(()), jnp.zeros(()), jnp.ones(())
+        return (
+            jnp.reshape(qp.delta, ()),
+            jnp.reshape(qp.zero_point, ()),
+            jnp.reshape(qp.n_bins, ()),
+        )
+
+    xd, xz, xb = _sq_scalars(sq.xqp if (quant_x and sq) else None)
+    od, oz, ob = _sq_scalars(sq.oqp if (quant_out and sq) else None)
+    scalars = jnp.stack([xd, xz, xb, od, oz, ob, jnp.zeros(()), jnp.zeros(())]).reshape(1, 8)
+
+    k0, k1 = prng.key_to_words(key)
+    seed = jnp.stack([k0, k1]).reshape(1, 2)
+
+    return dict(
+        x=x2d,
+        w=w,
+        row_scale=row,
+        col_scale=col,
+        wq=wq,
+        scalars=scalars,
+        seed=seed,
+        noise_kind=noise_kind,
+        quant_x=quant_x,
+        quant_w=quant_w,
+        quant_out=quant_out,
+    )
+
+
+def analog_matmul(
+    x: Array,
+    w: Array,
+    *,
+    energy,
+    key,
+    cfg,
+    sq=None,
+    block: tuple = DEFAULT_BLOCK,
+    interpret: Optional[bool] = None,
+) -> Array:
+    """Fused analog matmul for arbitrary batch dims: (..., K) @ (K, N)."""
+    batch_shape = x.shape[:-1]
+    x2d = x.reshape(-1, x.shape[-1])
+    ops = prepare_operands(x2d, w, energy=energy, key=key, cfg=cfg, sq=sq)
+    kind = ops.pop("noise_kind")
+    qx, qw, qo = ops.pop("quant_x"), ops.pop("quant_w"), ops.pop("quant_out")
+    y = analog_matmul_raw(
+        ops["x"],
+        ops["w"],
+        ops["row_scale"],
+        ops["col_scale"],
+        ops["wq"],
+        ops["scalars"],
+        ops["seed"],
+        noise_kind=kind,
+        quant_x=qx,
+        quant_w=qw,
+        quant_out=qo,
+        block=block,
+        interpret=interpret,
+    )
+    return y.reshape(*batch_shape, w.shape[1])
+
+
+def analog_matmul_reference(x: Array, w: Array, *, energy, key, cfg, sq=None) -> Array:
+    """Oracle with identical noise draws (pure jnp, no Pallas)."""
+    batch_shape = x.shape[:-1]
+    x2d = x.reshape(-1, x.shape[-1])
+    ops = prepare_operands(x2d, w, energy=energy, key=key, cfg=cfg, sq=sq)
+    kind = ops.pop("noise_kind")
+    qx, qw, qo = ops.pop("quant_x"), ops.pop("quant_w"), ops.pop("quant_out")
+    y = analog_matmul_ref_raw(
+        ops["x"],
+        ops["w"],
+        ops["row_scale"],
+        ops["col_scale"],
+        ops["wq"],
+        ops["scalars"],
+        ops["seed"],
+        noise_kind=kind,
+        quant_x=qx,
+        quant_w=qw,
+        quant_out=qo,
+    )
+    return y.reshape(*batch_shape, w.shape[1])

@@ -1,0 +1,63 @@
+"""Pure-jnp oracle for the fused analog-matmul kernel.
+
+Implements the same math as ``analog_matmul.py`` on full arrays — including
+the identical counter-based gaussians keyed on *global* element indices — so
+`tests/test_kernels.py` can assert elementwise agreement for any BlockSpec
+tiling. This file contains no Pallas.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import prng
+
+Array = jax.Array
+
+
+def _fake_quant(v, delta, zp, bins):
+    code = jnp.round(v / delta) + zp
+    code = jnp.clip(code, 0.0, bins)
+    return (code - zp) * delta
+
+
+def analog_matmul_ref_raw(
+    x: Array,
+    w: Array,
+    row_scale: Array,
+    col_scale: Array,
+    wq: Array,
+    scalars: Array,
+    seed: Array,
+    *,
+    noise_kind: str = "output",
+    quant_x: bool = False,
+    quant_w: bool = False,
+    quant_out: bool = False,
+) -> Array:
+    m, k = x.shape
+    _, n = w.shape
+    sc = scalars.astype(jnp.float32)
+    seed = seed.astype(jnp.uint32)
+    k0, k1 = seed[0, 0], seed[0, 1]
+    x = x.astype(jnp.float32)
+    w = w.astype(jnp.float32)
+
+    if quant_x:
+        x = _fake_quant(x, sc[0, 0], sc[0, 1], sc[0, 2])
+    if quant_w:
+        w = _fake_quant(w, wq[0:1, :], wq[1:2, :], wq[2:3, :])
+    if noise_kind == "weight":
+        xi = prng.gaussian_tile(
+            k0 ^ jnp.uint32(prng.WEIGHT_STREAM_SALT), k1, 0, 0, (k, n)
+        )
+        w = w + col_scale.astype(jnp.float32) * xi
+
+    y = jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+    if noise_kind == "output":
+        xi = prng.gaussian_tile(k0, k1, 0, 0, (m, n))
+        y = y + row_scale.astype(jnp.float32) * col_scale.astype(jnp.float32) * xi
+    if quant_out:
+        y = _fake_quant(y, sc[0, 3], sc[0, 4], sc[0, 5])
+    return y

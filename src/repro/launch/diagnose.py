@@ -1,0 +1,97 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+# ^ before any jax import (same contract as dryrun.py).
+
+"""HLO diagnosis: the tool behind every §Perf iteration.
+
+Lowers one (arch x shape x mesh) cell and prints the top collectives
+(scan-multiplied, with replica-group sizes) and the largest tensors in the
+module — the two lists that localize sharding pathologies (full-array
+gathers, per-iteration all-reduces, hoisted f32 stacks).
+
+Usage:
+  python -m repro.launch.diagnose --arch grok-1-314b --shape train_4k [--mesh multi]
+"""
+import argparse
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--top", type=int, default=12)
+    args = ap.parse_args()
+
+    import jax
+
+    from repro.configs import SHAPES, get_config, input_specs
+    from repro.launch.hlo_analysis import (
+        _group_size,
+        _nbytes,
+        multipliers,
+        parse_computations,
+    )
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.steps import TrainConfig, make_decode_step, make_prefill_step, make_train_step
+    from repro.models import lm
+    from repro.models.sharding import use_mesh
+    from repro.optim.adam import adam_init
+
+    cfg = get_config(args.arch)
+    shape = SHAPES[args.shape]
+    mesh = make_production_mesh(multi_pod=(args.mesh == "multi"))
+    with use_mesh(mesh):
+        batch_specs = input_specs(cfg, shape)
+        p_specs = jax.eval_shape(lambda: lm.init_params(jax.random.PRNGKey(0), cfg))
+        if shape.kind == "train":
+            tcfg = TrainConfig()
+            _, jit_for, _ = make_train_step(cfg, mesh, tcfg)
+            o_specs = jax.eval_shape(lambda p: adam_init(p, tcfg.adam()), p_specs)
+            compiled = jit_for(batch_specs).lower(p_specs, o_specs, batch_specs).compile()
+        elif shape.kind == "prefill":
+            _, jit_for, _ = make_prefill_step(cfg, mesh, cache_len=shape.seq_len)
+            compiled = jit_for(batch_specs).lower(p_specs, batch_specs, None, None).compile()
+        else:
+            _, jit_for, _ = make_decode_step(cfg, mesh)
+            c_specs = jax.eval_shape(
+                lambda: lm.init_cache(cfg, shape.global_batch, shape.seq_len)
+            )
+            compiled = (
+                jit_for(batch_specs, shape.seq_len)
+                .lower(p_specs, c_specs, batch_specs, shape.seq_len - 1, None, None)
+                .compile()
+            )
+
+    comps = parse_computations(compiled.as_text())
+    mult = multipliers(comps)
+    colls, temps = [], []
+    kinds = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all", "collective-permute")
+    for cname, comp in comps.items():
+        if cname == "__entry__":
+            continue
+        m = mult.get(cname, 0)
+        for op in comp.order:
+            nb = _nbytes(op.type_text)
+            if op.kind in kinds:
+                colls.append((m * nb, op.kind, nb, m, _group_size(op.args_text, mesh.size),
+                              op.type_text[:48], cname[:40]))
+            if nb > 1e9:
+                temps.append((nb, op.kind, op.type_text[:60], cname[:40]))
+
+    print(f"== top collectives ({args.arch} {args.shape} {args.mesh}) ==")
+    for tot, kind, nb, m, g, t, c in sorted(colls, reverse=True)[: args.top]:
+        print(f"{kind:14s} {nb/1e6:9.1f}MB x{m:6.0f} = {tot/1e9:8.1f}GB g={g:3d} {t:48s} {c}")
+    print("== largest tensors ==")
+    seen = set()
+    for nb, kind, t, c in sorted(temps, reverse=True):
+        if (kind, t) in seen:
+            continue
+        seen.add((kind, t))
+        print(f"{nb/1e9:6.1f}GB {kind:18s} {t} in {c}")
+        if len(seen) >= args.top:
+            break
+
+
+if __name__ == "__main__":
+    main()

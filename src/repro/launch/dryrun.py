@@ -1,0 +1,320 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks the device count on first
+# init). Only this launcher forces 512 host devices; tests/benches see 1.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+single-pod (16,16) and multi-pod (2,16,16) production meshes, and record
+memory_analysis / cost_analysis / scan-corrected HLO stats as JSON
+artifacts for §Dry-run and §Roofline.
+
+Usage:
+  python -m repro.launch.dryrun --arch granite-3-8b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all [--mesh both] [--jobs 2] [--skip-existing]
+  python -m repro.launch.dryrun --summarize   # print the cell table
+"""
+import argparse
+import dataclasses
+import json
+import subprocess
+import sys
+import time
+from concurrent.futures import ThreadPoolExecutor
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "benchmarks", "artifacts", "dryrun")
+
+
+def _artifact_path(arch, shape, mesh_name, variant=""):
+    os.makedirs(ARTIFACT_DIR, exist_ok=True)
+    sfx = f"__{variant}" if variant else ""
+    return os.path.join(ARTIFACT_DIR, f"{arch}__{shape}__{mesh_name}{sfx}.json")
+
+
+def run_cell(arch: str, shape_name: str, mesh_name: str, analog: str = "none",
+             microbatch: int = 1, causal_skip: bool = False,
+             kv_dtype: str = None, profile: str = None,
+             capacity_factor: float = None, int8_weights: bool = False) -> dict:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config, input_specs, shape_applicable, SHAPES
+    from repro.core.analog import AnalogConfig
+    from repro.launch import hlo_analysis, roofline
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.steps import (
+        TrainConfig,
+        make_calibrate_step,
+        make_decode_step,
+        make_prefill_step,
+        make_train_step,
+    )
+    from repro.models import lm
+    from repro.models.sharding import use_mesh
+
+    import dataclasses as _dc
+
+    cfg = get_config(arch)
+    if causal_skip:
+        cfg = _dc.replace(cfg, causal_skip=True)
+    if profile:
+        cfg = _dc.replace(cfg, sharding_profile=profile)
+    if capacity_factor:
+        cfg = _dc.replace(cfg, capacity_factor=capacity_factor)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        return {
+            "arch": arch, "shape": shape_name, "mesh": mesh_name,
+            "status": "skipped", "reason": why,
+        }
+
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+    n_dev = mesh.size
+    cache_bytes = None
+    analog_cfg = None
+    if analog == "shot":
+        analog_cfg = AnalogConfig.shot()
+
+    t0 = time.time()
+    with use_mesh(mesh):
+        batch_specs = input_specs(cfg, shape)
+        p_specs = jax.eval_shape(lambda: lm.init_params(jax.random.PRNGKey(0), cfg))
+        params_bytes = None
+        if int8_weights:
+            from repro.quant.weights import quantize_params
+
+            p_specs = jax.eval_shape(quantize_params, p_specs)
+            import math as _m
+
+            params_bytes = sum(
+                _m.prod(l.shape) * l.dtype.itemsize for l in jax.tree.leaves(p_specs)
+            )
+        key_spec = jax.ShapeDtypeStruct((2,), jnp.uint32)
+
+        if shape.kind == "train":
+            tcfg = TrainConfig(microbatches=microbatch)
+            _, jit_for, _ = make_train_step(cfg, mesh, tcfg)
+            from repro.optim.adam import adam_init
+
+            o_specs = jax.eval_shape(lambda p: adam_init(p, tcfg.adam()), p_specs)
+            jitted = jit_for(batch_specs)
+            lowered = jitted.lower(p_specs, o_specs, batch_specs)
+        elif shape.kind == "prefill":
+            _, jit_for, _ = make_prefill_step(
+                cfg, mesh, cache_len=shape.seq_len, analog_cfg=analog_cfg,
+                param_tree=p_specs if int8_weights else None,
+            )
+            jitted = jit_for(batch_specs)
+            e_specs = (
+                jax.eval_shape(lambda: lm.init_energy_tree(cfg, 1.0))
+                if analog_cfg is not None
+                else None
+            )
+            lowered = jitted.lower(p_specs, batch_specs, e_specs, key_spec if analog_cfg else None)
+        else:  # decode
+            _, jit_for, _ = make_decode_step(
+                cfg, mesh, analog_cfg=analog_cfg,
+                param_tree=p_specs if int8_weights else None,
+            )
+            jitted = jit_for(batch_specs, shape.seq_len)
+            cache_dt = jnp.dtype(kv_dtype) if kv_dtype else None
+            c_specs = jax.eval_shape(
+                lambda: lm.init_cache(cfg, shape.global_batch, shape.seq_len, dtype=cache_dt)
+            )
+            e_specs = (
+                jax.eval_shape(lambda: lm.init_energy_tree(cfg, 1.0))
+                if analog_cfg is not None
+                else None
+            )
+            pos = shape.seq_len - 1
+            lowered = jitted.lower(
+                p_specs, c_specs, batch_specs, pos, e_specs, key_spec if analog_cfg else None
+            )
+            import math as _math
+
+            cache_bytes = sum(
+                _math.prod(l.shape) * l.dtype.itemsize
+                for l in jax.tree.leaves(c_specs)
+            )
+        lower_s = time.time() - t0
+
+        t1 = time.time()
+        compiled = lowered.compile()
+        compile_s = time.time() - t1
+
+    mem = compiled.memory_analysis()
+    cost = dict(compiled.cost_analysis() or {})
+    hlo_text = compiled.as_text()
+    stats = hlo_analysis.analyze(hlo_text, n_dev)
+    rt = roofline.terms(
+        cfg,
+        shape,
+        n_dev,
+        hlo_dot_flops=stats.dot_flops,
+        collective_link_bytes=stats.total_collective_bytes,
+        cache_bytes_global=cache_bytes,
+        param_bytes_global=params_bytes,
+    )
+
+    per_dev_bytes = {
+        "argument": getattr(mem, "argument_size_in_bytes", 0),
+        "output": getattr(mem, "output_size_in_bytes", 0),
+        "temp": getattr(mem, "temp_size_in_bytes", 0),
+        "alias": getattr(mem, "alias_size_in_bytes", 0),
+    }
+    peak = per_dev_bytes["argument"] + per_dev_bytes["temp"] + per_dev_bytes["output"] - per_dev_bytes["alias"]
+    art = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_name,
+        "analog": analog,
+        "microbatch": microbatch,
+        "causal_skip": causal_skip,
+        "kv_dtype": kv_dtype,
+        "profile": profile,
+        "capacity_factor": capacity_factor,
+        "int8_weights": int8_weights,
+        "status": "ok",
+        "n_devices": n_dev,
+        "step_kind": shape.kind,
+        "lower_s": round(lower_s, 2),
+        "compile_s": round(compile_s, 2),
+        "memory_analysis": per_dev_bytes,
+        "peak_bytes_per_device": peak,
+        "fits_16gb": bool(peak < roofline.V5E["hbm_bytes"]),
+        "cost_analysis_raw": {
+            k: cost.get(k) for k in ("flops", "bytes accessed") if k in cost
+        },
+        "hlo": {
+            "dot_flops_per_device": stats.dot_flops,
+            "collective_link_bytes_per_device": stats.total_collective_bytes,
+            "collective_bytes_by_kind": stats.collective_bytes,
+            "collective_counts": stats.n_collectives,
+        },
+        "roofline": rt.as_dict(),
+        "params_total": cfg.param_count(),
+        "params_active": cfg.active_param_count(),
+    }
+    return art
+
+
+CELL_ANALOG_EXTRAS = [
+    # (arch, shape) cells additionally lowered with analog shot-noise serving
+    ("granite-3-8b", "decode_32k"),
+    ("llama4-maverick-400b-a17b", "decode_32k"),
+]
+
+
+def all_cells(meshes):
+    from repro.configs import ARCHS, SHAPES
+
+    cells = []
+    for arch in ARCHS:
+        for shape in SHAPES:
+            for m in meshes:
+                cells.append((arch, shape, m, "none"))
+    for arch, shape in CELL_ANALOG_EXTRAS:
+        for m in meshes:
+            cells.append((arch, shape, m, "shot"))
+    return cells
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--analog", default="none", choices=["none", "shot"])
+    ap.add_argument("--microbatch", type=int, default=1)
+    ap.add_argument("--causal-skip", action="store_true")
+    ap.add_argument("--kv-dtype", default=None)
+    ap.add_argument("--profile", default=None)
+    ap.add_argument("--capacity-factor", type=float, default=None)
+    ap.add_argument("--int8-weights", action="store_true")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--jobs", type=int, default=2)
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--summarize", action="store_true")
+    args = ap.parse_args()
+
+    if args.summarize:
+        summarize()
+        return
+
+    if args.all:
+        meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+        cells = all_cells(meshes)
+        if args.skip_existing:
+            cells = [
+                c for c in cells
+                if not os.path.exists(_artifact_path(c[0], c[1], c[2], c[3] if c[3] != "none" else ""))
+            ]
+        print(f"running {len(cells)} cells with {args.jobs} workers")
+
+        def run_sub(cell):
+            arch, shape, mesh_name, analog = cell
+            cmd = [
+                sys.executable, "-m", "repro.launch.dryrun",
+                "--arch", arch, "--shape", shape, "--mesh", mesh_name,
+                "--analog", analog,
+            ]
+            t0 = time.time()
+            r = subprocess.run(cmd, capture_output=True, text=True, timeout=7200)
+            dt = time.time() - t0
+            status = "OK" if r.returncode == 0 else "FAIL"
+            print(f"[{status}] {arch} {shape} {mesh_name} {analog} ({dt:.0f}s)")
+            if r.returncode != 0:
+                print(r.stderr[-2000:])
+            return r.returncode
+
+        with ThreadPoolExecutor(max_workers=args.jobs) as ex:
+            codes = list(ex.map(run_sub, cells))
+        print(f"done: {codes.count(0)}/{len(codes)} ok")
+        sys.exit(0 if all(c == 0 for c in codes) else 1)
+
+    art = run_cell(args.arch, args.shape, args.mesh, args.analog,
+                   microbatch=args.microbatch, causal_skip=args.causal_skip,
+                   kv_dtype=args.kv_dtype, profile=args.profile,
+                   capacity_factor=args.capacity_factor,
+                   int8_weights=args.int8_weights)
+    variant = args.analog if args.analog != "none" else ""
+    if args.tag:
+        variant = (variant + "_" if variant else "") + args.tag
+    path = _artifact_path(args.arch, args.shape, args.mesh, variant)
+    with open(path, "w") as f:
+        json.dump(art, f, indent=2)
+    if art["status"] == "ok":
+        print(f"{args.arch} {args.shape} {args.mesh}: compile {art['compile_s']}s, "
+              f"peak/dev {art['peak_bytes_per_device']/1e9:.2f} GB, fits={art['fits_16gb']}")
+        print("memory_analysis:", art["memory_analysis"])
+        print("cost_analysis:", art["cost_analysis_raw"])
+        r = art["roofline"]
+        print(f"roofline: compute {r['compute_s']:.4f}s memory {r['memory_s']:.4f}s "
+              f"collective {r['collective_s']:.4f}s dominant={r['dominant']} "
+              f"useful_ratio={r['useful_ratio']:.3f}")
+    else:
+        print(f"SKIPPED: {art['reason']}")
+
+
+def summarize():
+    rows = []
+    for name in sorted(os.listdir(ARTIFACT_DIR)):
+        if name.endswith(".json"):
+            rows.append(json.load(open(os.path.join(ARTIFACT_DIR, name))))
+    cols = "arch shape mesh analog status compile_s peak_GB fits dominant useful"
+    print(cols)
+    for r in rows:
+        if r["status"] != "ok":
+            print(f"{r['arch']} {r['shape']} {r['mesh']} - SKIP ({r['reason'][:40]})")
+            continue
+        rf = r["roofline"]
+        print(
+            f"{r['arch']} {r['shape']} {r['mesh']} {r.get('analog','none')} ok "
+            f"{r['compile_s']} {r['peak_bytes_per_device']/1e9:.2f} {r['fits_16gb']} "
+            f"{rf['dominant']} {rf['useful_ratio']:.3f}"
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,301 @@
+"""Jitted, sharded step functions: train / prefill / decode / calibrate.
+
+Each ``make_*`` returns (jitted_fn, shardings) where shardings carry the
+NamedShardings for every argument/output — the same objects the dry-run
+lowers against and the live trainer commits arrays to.
+
+Distribution features:
+  * TP on "model" via the logical-axis rules (params + activations)
+  * DP on ("pod","data") for the batch
+  * ZeRO-1: Adam moments sharded on ("pod","data") on top of TP (XLA turns
+    the update into reduce-scatter(grads) -> sharded update -> all-gather)
+  * remat per layer group (models' lax.scan bodies)
+  * optional int8 + error-feedback gradient compression (numerics of a
+    compressed DP all-reduce; see optim/compress.py)
+  * analog serving/calibration: decode and calibrate steps accept per-site
+    energies (the paper's dynamic precision as a first-class feature)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.analog import AnalogConfig
+from repro.core.energy import log_energy_penalty, to_energy, total_macs
+from repro.models import lm
+from repro.models.config import ModelConfig
+from repro.models.sharding import PROFILES, named_sharding, spec, tree_shardings, use_mesh, use_rules, zero1_axes
+from repro.optim.adam import AdamConfig, AdamState, adam_init, adam_update
+from repro.optim.clip import clip_by_global_norm
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    opt_state_dtype: str = "bfloat16"  # bf16 moments: fits 400B on 256 chips
+    grad_compression: Optional[str] = None  # None | "int8_ef"
+    #: gradient-accumulation microbatches per step (activation peak / m)
+    microbatches: int = 1
+
+    def adam(self) -> AdamConfig:
+        return AdamConfig(
+            lr=self.lr,
+            b1=self.b1,
+            b2=self.b2,
+            weight_decay=self.weight_decay,
+            state_dtype=jnp.dtype(self.opt_state_dtype),
+        )
+
+
+def _replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+def train_rules(cfg: ModelConfig) -> dict:
+    return PROFILES[cfg.sharding_profile]
+
+
+def param_shardings(cfg: ModelConfig, mesh: Mesh, rules=None, spec_tree=None) -> PyTree:
+    """Param shardings; with ``spec_tree`` (e.g. an int8-quantized param
+    spec tree), Int8Weight subtrees get (q: weight spec, scale:
+    shape-filtered spec)."""
+    axes = lm.param_axes(cfg)
+    with use_mesh(mesh):
+        if spec_tree is None:
+            return tree_shardings(axes, lm.param_shapes(cfg), mesh, rules=rules)
+        from repro.quant.weights import Int8Weight
+
+        def one(ax, node):
+            if isinstance(node, Int8Weight):
+                return Int8Weight(
+                    q=named_sharding(ax, mesh, rules, shape=node.q.shape),
+                    scale=named_sharding(ax, mesh, rules, shape=node.scale.shape),
+                )
+            return named_sharding(ax, mesh, rules, shape=node.shape)
+
+        return jax.tree.map(
+            one, axes, spec_tree, is_leaf=lambda x: isinstance(x, tuple)
+        )
+
+
+def opt_shardings(cfg: ModelConfig, mesh: Mesh, rules=None) -> Any:
+    """AdamState shardings: ZeRO-1 (moments get an extra ("pod","data")
+    shard on their first replicated axis)."""
+    axes = lm.param_axes(cfg)
+    shapes = lm.param_shapes(cfg)
+    z_axes = jax.tree.map(zero1_axes, axes, is_leaf=lambda x: isinstance(x, tuple))
+    with use_mesh(mesh):
+        moments = tree_shardings(z_axes, shapes, mesh, rules=rules)
+    return AdamState(step=_replicated(mesh), mu=moments, nu=moments)
+
+
+def batch_shardings(batch_specs: dict, mesh: Mesh, rules=None) -> dict:
+    with use_mesh(mesh):
+        return {
+            k: named_sharding(ax, mesh, rules, shape=batch_specs[k].shape)
+            for k, ax in lm.batch_axes(batch_specs).items()
+        }
+
+
+def cache_shardings(cfg: ModelConfig, mesh: Mesh, batch: int, cache_len: int) -> PyTree:
+    with use_mesh(mesh):
+        c_specs = jax.eval_shape(lambda: lm.init_cache(cfg, batch, cache_len))
+        return tree_shardings(lm.cache_axes(cfg), c_specs, mesh)
+
+
+# ---------------------------------------------------------------------------
+# train
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(cfg: ModelConfig, mesh: Mesh, tcfg: TrainConfig = TrainConfig()):
+    adam_cfg = tcfg.adam()
+    rules = train_rules(cfg)
+
+    def step(params, opt_state, batch):
+        with use_rules(rules):
+            m = tcfg.microbatches
+            if m > 1:
+                micro = jax.tree.map(
+                    lambda x: x.reshape((m, x.shape[0] // m) + x.shape[1:]), batch
+                )
+
+                def mb_body(carry, mb):
+                    loss_acc, g_acc = carry
+                    loss, grads = jax.value_and_grad(
+                        lambda p: lm.train_loss(p, mb, cfg)
+                    )(params)
+                    g_acc = jax.tree.map(lambda a, g: a + g.astype(a.dtype), g_acc, grads)
+                    return (loss_acc + loss, g_acc), None
+
+                g0 = jax.tree.map(lambda p: jnp.zeros_like(p), params)
+                (loss, grads), _ = jax.lax.scan(mb_body, (jnp.zeros(()), g0), micro)
+                loss = loss / m
+                grads = jax.tree.map(lambda g: g / m, grads)
+            else:
+                loss, grads = jax.value_and_grad(
+                    lambda p: lm.train_loss(p, batch, cfg)
+                )(params)
+            if tcfg.grad_compression == "int8_ef":
+                from repro.optim.compress import ef_int8_roundtrip
+
+                grads = ef_int8_roundtrip(grads)
+            grads, gnorm = clip_by_global_norm(grads, tcfg.clip_norm)
+            new_params, new_opt = adam_update(grads, opt_state, params, adam_cfg)
+            metrics = {"loss": loss, "grad_norm": gnorm}
+            return new_params, new_opt, metrics
+
+    p_sh = param_shardings(cfg, mesh, rules)
+    o_sh = opt_shardings(cfg, mesh, rules)
+
+    def jit_for(batch_specs):
+        b_sh = batch_shardings(batch_specs, mesh, rules)
+        return jax.jit(
+            step,
+            in_shardings=(p_sh, o_sh, b_sh),
+            out_shardings=(p_sh, o_sh, _replicated(mesh)),
+            donate_argnums=(0, 1),
+        )
+
+    return step, jit_for, dict(params=p_sh, opt=o_sh)
+
+
+def make_opt_init(cfg: ModelConfig, mesh: Mesh, tcfg: TrainConfig = TrainConfig()):
+    adam_cfg = tcfg.adam()
+    rules = train_rules(cfg)
+    o_sh = opt_shardings(cfg, mesh, rules)
+    return jax.jit(
+        functools.partial(adam_init, cfg=adam_cfg),
+        in_shardings=(param_shardings(cfg, mesh, rules),),
+        out_shardings=o_sh,
+    )
+
+
+# ---------------------------------------------------------------------------
+# serving (prefill + decode), optionally analog
+# ---------------------------------------------------------------------------
+
+
+def make_prefill_step(
+    cfg: ModelConfig,
+    mesh: Mesh,
+    cache_len: Optional[int] = None,
+    analog_cfg: Optional[AnalogConfig] = None,
+    param_tree=None,
+):
+    def step(params, batch, energies, key):
+        analog = None
+        if analog_cfg is not None:
+            analog = lm.AnalogSpec(cfg=analog_cfg, energies=energies, key=key)
+        cache, h_last = lm.prefill(params, batch, cfg, analog=analog, cache_len=cache_len)
+        logits = lm.logits_last(params, h_last, cfg)
+        return cache, logits
+
+    p_sh = param_shardings(cfg, mesh, spec_tree=param_tree)
+
+    def jit_for(batch_specs):
+        b_sh = batch_shardings(batch_specs, mesh)
+        b = next(iter(batch_specs.values())).shape[0]
+        c_sh = cache_shardings(cfg, mesh, b, cache_len)
+        with use_mesh(mesh):
+            logits_sh = named_sharding(
+                ("batch", None, None, None), mesh,
+                shape=(b, 1, cfg.n_codebooks, cfg.vocab_size),
+            )
+        return jax.jit(
+            step,
+            in_shardings=(p_sh, b_sh, _replicated(mesh), _replicated(mesh)),
+            out_shardings=(c_sh, logits_sh),
+        )
+
+    return step, jit_for, dict(params=p_sh)
+
+
+def make_decode_step(
+    cfg: ModelConfig, mesh: Mesh, analog_cfg: Optional[AnalogConfig] = None,
+    param_tree=None,
+):
+    def step(params, cache, batch, pos, energies, key):
+        analog = None
+        if analog_cfg is not None:
+            analog = lm.AnalogSpec(cfg=analog_cfg, energies=energies, key=key)
+        logits, new_cache = lm.decode_step(params, cache, batch, pos, cfg, analog=analog)
+        return logits, new_cache
+
+    p_sh = param_shardings(cfg, mesh, spec_tree=param_tree)
+
+    def jit_for(batch_specs, cache_len):
+        b_sh = batch_shardings(batch_specs, mesh)
+        b = next(iter(batch_specs.values())).shape[0]
+        c_sh = cache_shardings(cfg, mesh, b, cache_len)
+        with use_mesh(mesh):
+            logits_sh = named_sharding(
+                ("batch", None, None, None), mesh,
+                shape=(b, 1, cfg.n_codebooks, cfg.vocab_size),
+            )
+        return jax.jit(
+            step,
+            in_shardings=(p_sh, c_sh, b_sh, _replicated(mesh), _replicated(mesh), _replicated(mesh)),
+            out_shardings=(logits_sh, c_sh),
+            donate_argnums=(1,),
+        )
+
+    return step, jit_for, dict(params=p_sh)
+
+
+# ---------------------------------------------------------------------------
+# calibrate (paper Eq. 14 at LM scale): learn energies, weights frozen
+# ---------------------------------------------------------------------------
+
+
+def make_calibrate_step(
+    cfg: ModelConfig,
+    mesh: Mesh,
+    *,
+    analog_cfg: AnalogConfig,
+    seq_len: int,
+    target_e_per_mac: float,
+    lam: float = 2.0,
+    lr: float = 0.01,
+):
+    macs = lm.energy_macs(cfg, seq_len)
+    adam_cfg = AdamConfig(lr=lr)
+
+    def step(log_e, opt_state, params, batch, key):
+        def loss_fn(le):
+            e = to_energy(le)
+            aspec = lm.AnalogSpec(cfg=analog_cfg, energies=e, key=key)
+            nll = lm.train_loss(params, batch, cfg, analog=aspec)
+            pen = log_energy_penalty(e, macs, target_e_per_mac, lam)
+            return nll + pen, nll
+
+        (loss, nll), grads = jax.value_and_grad(loss_fn, has_aux=True)(log_e)
+        new_log_e, new_opt = adam_update(grads, opt_state, log_e, adam_cfg)
+        return new_log_e, new_opt, {"loss": loss, "nll": nll}
+
+    p_sh = param_shardings(cfg, mesh)
+    rep = _replicated(mesh)
+    e_sh = jax.tree.map(lambda _: rep, lm.init_energy_tree(cfg, 1.0))
+    o_sh = AdamState(step=rep, mu=e_sh, nu=e_sh)
+
+    def jit_for(batch_specs):
+        b_sh = batch_shardings(batch_specs, mesh)
+        return jax.jit(
+            step,
+            in_shardings=(e_sh, o_sh, p_sh, b_sh, rep),
+            out_shardings=(e_sh, o_sh, rep),
+            donate_argnums=(0, 1),
+        )
+
+    return step, jit_for, dict(energies=e_sh, opt=o_sh, params=p_sh, macs=macs)

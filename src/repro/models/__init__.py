@@ -1,0 +1,29 @@
+from repro.models.config import ModelConfig
+from repro.models.lm import (
+    AnalogSpec,
+    decode_step,
+    energy_macs,
+    forward_hidden,
+    init_cache,
+    init_energy_tree,
+    init_params,
+    param_axes,
+    param_specs,
+    prefill,
+    train_loss,
+)
+
+__all__ = [
+    "AnalogSpec",
+    "ModelConfig",
+    "decode_step",
+    "energy_macs",
+    "forward_hidden",
+    "init_cache",
+    "init_energy_tree",
+    "init_params",
+    "param_axes",
+    "param_specs",
+    "prefill",
+    "train_loss",
+]

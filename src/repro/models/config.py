@@ -1,0 +1,150 @@
+"""Model configuration for all supported architecture families."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # "dense" | "moe" | "xlstm" | "griffin"
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None
+    mlp_type: str = "swiglu"  # "swiglu" | "gelu"
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    dtype: str = "bfloat16"
+
+    # --- MoE ---------------------------------------------------------------
+    n_experts: int = 0
+    top_k: int = 1
+    moe_every: int = 1  # 2 => dense/MoE interleaved (llama4-style)
+    n_shared_experts: int = 0
+    capacity_factor: float = 1.25
+    moe_group_size: int = 256
+    #: split each expert's FF dim into `moe_ff_split` "virtual experts" so
+    #: the (virtual) expert count divides the mesh "data" axis (grok: 8
+    #: experts -> 16 virtual). Exact for gated/linear MLPs: ff splits are
+    #: independent through the activation; down-proj partial sums are summed
+    #: by the combine einsum.
+    moe_ff_split: int = 1
+
+    # --- griffin (RecurrentGemma) -------------------------------------------
+    rnn_width: Optional[int] = None  # lru width; default d_model
+    conv_width: int = 4
+    local_window: int = 2048
+    #: layers per scan group: (recurrent, recurrent, attention)
+    griffin_pattern: Tuple[str, ...] = ("rec", "rec", "attn")
+
+    # --- xlstm ---------------------------------------------------------------
+    slstm_ratio: int = 8  # one sLSTM per `slstm_ratio` blocks (7:1 -> 8)
+
+    # --- frontends (stubs per assignment spec) -------------------------------
+    frontend: str = "none"  # "none" | "patch" (VLM) | "frames" (audio)
+    n_frontend_tokens: int = 256  # prefix length for "patch"
+    n_codebooks: int = 1  # output heads (musicgen: 4)
+
+    # --- attention impl -------------------------------------------------------
+    attn_q_chunk: int = 1024
+    attn_kv_chunk: int = 1024
+    #: python-unrolled causal chunk skipping (exact-causal FLOPs) vs masked scan
+    causal_skip: bool = False
+    sliding_window: Optional[int] = None  # window for plain transformer attn
+
+    # --- training -------------------------------------------------------------
+    remat: bool = True
+    loss_chunk: int = 1024
+    #: "tp" (Megatron TP+SP on "model") | "dp" (replicated weights, batch
+    #: over the whole mesh — right for small models where TP is
+    #: collective-bound); applies to train_step, serving always uses "tp".
+    sharding_profile: str = "tp"
+
+    def __post_init__(self):
+        if self.head_dim is None:
+            object.__setattr__(self, "head_dim", self.d_model // self.n_heads)
+        if self.family == "griffin" and self.rnn_width is None:
+            object.__setattr__(self, "rnn_width", self.d_model)
+
+    @property
+    def compute_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def padded_vocab(self) -> int:
+        """Embedding/LM-head rows padded to a multiple of 16 so the vocab dim
+        shards on the 16-wide "model" mesh axis (Megatron-style vocab
+        padding; logical vocab_size is unchanged, pad logits are masked)."""
+        return -(-self.vocab_size // 16) * 16
+
+    @property
+    def q_per_kv(self) -> int:
+        return self.n_heads // self.n_kv_heads
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Whether long-context (500k) decode is supported: SSM/hybrid only."""
+        return self.family in ("xlstm", "griffin")
+
+    # ---- parameter counting (for roofline MODEL_FLOPS = 6*N*D) ---------------
+
+    def param_count(self) -> int:
+        d, ff, hd = self.d_model, self.d_ff, self.head_dim
+        qh, kh = self.n_heads, self.n_kv_heads
+        n = self.vocab_size * d  # embed
+        if not self.tie_embeddings:
+            n += d * self.vocab_size * self.n_codebooks  # lm head(s)
+        if self.family in ("dense", "moe"):
+            attn = d * qh * hd + 2 * d * kh * hd + qh * hd * d
+            if self.qkv_bias:
+                attn += (qh + 2 * kh) * hd
+            mlp_mats = 3 if self.mlp_type == "swiglu" else 2
+            dense_mlp = mlp_mats * d * ff
+            per_norms = 2 * d
+            if self.family == "dense":
+                n += self.n_layers * (attn + dense_mlp + per_norms)
+            else:
+                n_moe = self.n_layers // self.moe_every
+                n_dense = self.n_layers - n_moe
+                moe = self.n_experts * mlp_mats * d * ff + d * self.n_experts
+                moe += self.n_shared_experts * mlp_mats * d * ff
+                n += self.n_layers * (attn + per_norms)
+                n += n_dense * dense_mlp + n_moe * moe
+        elif self.family == "griffin":
+            rw = self.rnn_width
+            # branch projections + RG-LRU gate matrices + conv + out proj
+            rec = 2 * d * rw + 2 * rw * rw + rw * d + 3 * rw + self.conv_width * rw + rw
+            attn = d * qh * hd + 2 * d * kh * hd + qh * hd * d
+            mlp = 3 * d * ff
+            n_attn = self.n_layers // len(self.griffin_pattern)
+            n_rec = self.n_layers - n_attn
+            n += n_rec * (rec + mlp + 2 * d) + n_attn * (attn + mlp + 2 * d)
+        elif self.family == "xlstm":
+            # mLSTM block: z/q/k/v/o projections + per-head gates
+            mlstm = 5 * d * d + 2 * d * self.n_heads + 2 * d
+            hd_m = d // self.n_heads
+            # sLSTM: W (d,4d) + block-diag R (4,H,hd,hd) + out proj
+            slstm = 4 * d * d + 4 * self.n_heads * hd_m * hd_m + d * d + 2 * d
+            n_s = self.n_layers // self.slstm_ratio
+            n_m = self.n_layers - n_s
+            n += n_m * mlstm + n_s * slstm
+        return int(n)
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: routed top_k + shared only)."""
+        if self.family != "moe":
+            return self.param_count()
+        d, ff = self.d_model, self.d_ff
+        mlp_mats = 3 if self.mlp_type == "swiglu" else 2
+        n_moe = self.n_layers // self.moe_every
+        inactive = n_moe * (self.n_experts - self.top_k) * mlp_mats * d * ff
+        return int(self.param_count() - inactive)

@@ -1,0 +1,116 @@
+"""Griffin / RecurrentGemma blocks: RG-LRU recurrence + local attention.
+
+The RG-LRU (Real-Gated Linear Recurrent Unit, arXiv:2402.19427):
+
+    r_t = sigmoid(W_a x_t + b_a)            (recurrence gate)
+    i_t = sigmoid(W_x x_t + b_x)            (input gate)
+    log a_t = -c * r_t * softplus(Lambda)   (a = sigmoid(Lambda)^(c r_t))
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+The diagonal linear recurrence is evaluated with an associative scan
+(O(log T) depth) for training/prefill, and as a single fused update for
+decode. The temporal-mixing block is: [gate branch: GELU(W_g x)] *
+[recurrent branch: conv1d(W_x x) -> RG-LRU] -> out projection.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.hooks import MatmulHook
+from repro.models.sharding import constrain
+
+Array = jax.Array
+LRU_C = 8.0
+
+
+def rg_lru_coeffs(xr: Array, p: Dict[str, Array], hook: MatmulHook) -> Tuple[Array, Array]:
+    """(a, beta*gated_input) coefficients per position.
+
+    xr: (B, T, R) post-conv recurrent-branch activations.
+    """
+    r = jax.nn.sigmoid(hook("rec_a", xr, p["w_a"]).astype(jnp.float32) + p["b_a"])
+    i = jax.nn.sigmoid(hook("rec_i", xr, p["w_i"]).astype(jnp.float32) + p["b_i"])
+    log_a = -LRU_C * r * jax.nn.softplus(p["lambda"].astype(jnp.float32))
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12))
+    return a, beta * i * xr.astype(jnp.float32)
+
+
+def rg_lru_scan(a: Array, b: Array, h0: Optional[Array] = None) -> Array:
+    """h_t = a_t h_{t-1} + b_t via associative scan over axis 1 (time)."""
+    if h0 is not None:
+        # fold the carried state into the first step
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(left, right):
+        a1, b1 = left
+        a2, b2 = right
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def causal_conv1d(
+    x: Array, w: Array, b: Array, state: Optional[Array] = None
+) -> Tuple[Array, Array]:
+    """Depthwise causal conv along time. x: (B, T, R); w: (cw, R); b: (R,).
+
+    ``state``: (B, cw-1, R) trailing inputs from the previous segment.
+    Returns (y, new_state)."""
+    cw = w.shape[0]
+    bsz, t, r = x.shape
+    if state is None:
+        state = jnp.zeros((bsz, cw - 1, r), x.dtype)
+    xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)  # (B, T+cw-1, R)
+    y = jnp.zeros((bsz, t, r), jnp.float32)
+    for i in range(cw):
+        y = y + xp[:, i : i + t].astype(jnp.float32) * w[i].astype(jnp.float32)
+    y = y + b.astype(jnp.float32)
+    new_state = xp[:, t:]  # last cw-1 inputs
+    return y.astype(x.dtype), new_state
+
+
+def recurrent_mix(
+    x: Array,
+    p: Dict[str, Array],
+    hook: MatmulHook,
+    *,
+    h0: Optional[Array] = None,
+    conv_state: Optional[Array] = None,
+) -> Tuple[Array, Array, Array]:
+    """The Griffin recurrent temporal-mixing block.
+
+    x: (B, T, d). Returns (y (B,T,d), h_last (B,R), conv_state (B,cw-1,R)).
+    """
+    gate = jax.nn.gelu(hook("rec_gate", x, p["w_gate"]).astype(jnp.float32))
+    xr = hook("rec_in", x, p["w_x"])  # (B, T, R)
+    xr = constrain(xr, "batch", "seq", "rnn")
+    xr, conv_state = causal_conv1d(xr, p["conv_w"], p["conv_b"], conv_state)
+    a, b = rg_lru_coeffs(xr, p, hook)
+    h = rg_lru_scan(a, b, h0)  # (B, T, R) f32
+    h_last = h[:, -1]
+    y = (h * gate).astype(x.dtype)
+    y = hook("rec_out", y, p["w_out"])
+    return y, h_last, conv_state
+
+
+def recurrent_decode(
+    x: Array,
+    p: Dict[str, Array],
+    hook: MatmulHook,
+    h0: Array,
+    conv_state: Array,
+) -> Tuple[Array, Array, Array]:
+    """Single-token recurrent step. x: (B, 1, d)."""
+    gate = jax.nn.gelu(hook("rec_gate", x, p["w_gate"]).astype(jnp.float32))
+    xr = hook("rec_in", x, p["w_x"])
+    xr, conv_state = causal_conv1d(xr, p["conv_w"], p["conv_b"], conv_state)
+    a, b = rg_lru_coeffs(xr, p, hook)
+    h = a[:, 0] * h0 + b[:, 0]  # (B, R)
+    y = (h[:, None] * gate).astype(x.dtype)
+    y = hook("rec_out", y, p["w_out"])
+    return y, h, conv_state

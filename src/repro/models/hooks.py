@@ -1,0 +1,84 @@
+"""Matmul hooks: the seam where the paper's analog execution plugs into
+every model. Digital training uses the default hook; analog serving and
+Eq.-14 calibration pass an AnalogHook carrying per-site energies.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.analog import AnalogConfig, analog_dot, site_key
+
+Array = jax.Array
+
+
+class MatmulHook:
+    """Digital execution: plain matmuls (bf16/f32 per model dtype)."""
+
+    def __call__(self, site: str, x: Array, w: Array) -> Array:
+        return jnp.matmul(x, w.astype(x.dtype))
+
+    def batched(self, site: str, x: Array, w: Array) -> Array:
+        """Expert-batched matmul: (E, ..., K) @ (E, K, M)."""
+        return jnp.einsum("e...k,ekm->e...m", x, w.astype(x.dtype))
+
+
+@dataclasses.dataclass
+class AnalogHook(MatmulHook):
+    """Analog execution with per-site energies (paper §IV-V).
+
+    ``energies`` maps site name -> scalar / (M,) per-channel / (E,) or (E, M)
+    for expert-batched sites. All leaves are for the *current layer* (callers
+    slice stacked (L, ...) energy trees inside their layer scan).
+    """
+
+    cfg: AnalogConfig
+    energies: Dict[str, Array]
+    key: jax.Array
+
+    def __call__(self, site: str, x: Array, w: Array) -> Array:
+        e = self.energies[site]
+        k = site_key(self.key, site)
+        y = analog_dot(x, w, cfg=self.cfg, energy=e, key=k)
+        return y.astype(x.dtype)
+
+    def batched(self, site: str, x: Array, w: Array) -> Array:
+        e = self.energies[site]
+        n_e = w.shape[0]
+        e = jnp.broadcast_to(jnp.atleast_1d(e), (n_e,) + jnp.shape(e)[1:])
+        keys = jax.random.split(site_key(self.key, site), n_e)
+
+        def one(xe, we, ee, ke):
+            return analog_dot(xe, we, cfg=self.cfg, energy=ee, key=ke)
+
+        y = jax.vmap(one)(x, w, e, keys)
+        return y.astype(x.dtype)
+
+
+@dataclasses.dataclass
+class PrefixHook(MatmulHook):
+    """Namespaces an inner hook's site names (repeated sublayers per group)."""
+
+    inner: MatmulHook
+    prefix: str
+
+    def __call__(self, site: str, x: Array, w: Array) -> Array:
+        return self.inner(f"{self.prefix}{site}", x, w)
+
+    def batched(self, site: str, x: Array, w: Array) -> Array:
+        return self.inner.batched(f"{self.prefix}{site}", x, w)
+
+
+def hook_for_layer(
+    analog_cfg: Optional[AnalogConfig],
+    layer_energies: Optional[Dict[str, Array]],
+    key: Optional[jax.Array],
+    layer_idx,
+) -> MatmulHook:
+    if analog_cfg is None or layer_energies is None:
+        return MatmulHook()
+    lk = jax.random.fold_in(key, layer_idx)
+    return AnalogHook(cfg=analog_cfg, energies=layer_energies, key=lk)

@@ -1,0 +1,475 @@
+"""Shared model layers: norms, RoPE, attention (chunked online-softmax,
+local-window, decode), MLPs, embeddings, chunked cross-entropy.
+
+All attention paths are pure jnp (XLA SPMD-compatible); score/value matmuls
+run in f32. Memory never materializes a full (T, S) score matrix for long
+sequences: training/prefill attention scans over KV chunks with an online
+softmax (flash-attention dataflow expressed in XLA), and an optional
+python-unrolled ``causal_skip`` mode performs exact-causal work by slicing
+the KV prefix per query chunk.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.hooks import MatmulHook
+from repro.models.sharding import constrain
+
+Array = jax.Array
+NEG_INF = -1e30
+
+
+def rms_norm(x: Array, scale: Array, eps: float = 1e-5) -> Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def rope_tables(positions: Array, head_dim: int, theta: float) -> Tuple[Array, Array]:
+    """cos/sin tables for given positions; shapes (..., T, head_dim//2)."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (..., T, half)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: Array, cos: Array, sin: Array) -> Array:
+    """x: (B, T, H, D); cos/sin: (B, T, half) or (T, half)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    if cos.ndim == 2:
+        cos = cos[None, :, None, :]
+        sin = sin[None, :, None, :]
+    else:
+        cos = cos[:, :, None, :]
+        sin = sin[:, :, None, :]
+    o1 = x1 * cos - x2 * sin
+    o2 = x2 * cos + x1 * sin
+    return jnp.concatenate([o1, o2], axis=-1).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# attention
+# --------------------------------------------------------------------------
+
+
+def _chunk(x: Array, size: int, axis: int) -> Array:
+    """(.., N, ..) -> (n_chunks, .., size, ..) moving chunk axis to front."""
+    n = x.shape[axis] // size
+    new_shape = x.shape[:axis] + (n, size) + x.shape[axis + 1 :]
+    x = x.reshape(new_shape)
+    return jnp.moveaxis(x, axis, 0)
+
+
+def _online_block(
+    carry, qc: Array, kc: Array, vc: Array, mask: Array, scale: float
+):
+    """One (q-chunk x kv-chunk) online-softmax update.
+
+    qc: (B, Tq, KH, G, D); kc/vc: (B, Tk, KH, D); mask: (Tq, Tk) bool.
+    carry = (m, l, acc): (B, KH, G, Tq), (B, KH, G, Tq), (B, Tq, KH, G, D).
+    """
+    m, l, acc = carry
+    s = jnp.einsum(
+        "bqhgd,bkhd->bhgqk", qc.astype(jnp.float32), kc.astype(jnp.float32)
+    ) * scale
+    s = jnp.where(mask[None, None, None, :, :], s, NEG_INF)
+    m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[..., None])
+    corr = jnp.exp(m - m_new)
+    l_new = l * corr + jnp.sum(p, axis=-1)
+    pv = jnp.einsum("bhgqk,bkhd->bqhgd", p, vc.astype(jnp.float32))
+    acc_new = acc * jnp.moveaxis(corr, -1, 1)[..., None] + pv
+    return (m_new, l_new, acc_new)
+
+
+def _mask_for(iq, jk, q_chunk, kv_chunk, q_offset, causal, window):
+    qp = jnp.arange(q_chunk) + iq * q_chunk + q_offset
+    kp = jnp.arange(kv_chunk) + jk * kv_chunk
+    m = jnp.ones((q_chunk, kv_chunk), bool)
+    if causal:
+        m &= qp[:, None] >= kp[None, :]
+    if window is not None:
+        m &= (qp[:, None] - kp[None, :]) < window
+    return m
+
+
+def _flash_fwd(q5, k, v, cfg: tuple):
+    """q5: (B, T, KH, G, D); k/v: (B, S, KH, D).
+    Returns (out5 (B,T,KH,G,D) f32, lse (B,KH,G,T) f32)."""
+    q_chunk, kv_chunk, causal, window, q_offset, causal_skip = cfg
+    b, t, kh, g, d = q5.shape
+    s = k.shape[1]
+    nq, nk = t // q_chunk, s // kv_chunk
+    scale = 1.0 / (d**0.5)
+    qs = _chunk(q5, q_chunk, 1)
+    ks = _chunk(k, kv_chunk, 1)
+    vs = _chunk(v, kv_chunk, 1)
+
+    def run_q_chunk(iq, qc, ks_sub, vs_sub, jk_idx):
+        init = (
+            jnp.full((b, kh, g, q_chunk), NEG_INF, jnp.float32),
+            jnp.zeros((b, kh, g, q_chunk), jnp.float32),
+            jnp.zeros((b, q_chunk, kh, g, d), jnp.float32),
+        )
+
+        def inner(carry, xs):
+            kc, vc, jk = xs
+            mask = _mask_for(iq, jk, q_chunk, kv_chunk, q_offset, causal, window)
+            return _online_block(carry, qc, kc, vc, mask, scale), None
+
+        (m, l, acc), _ = jax.lax.scan(inner, init, (ks_sub, vs_sub, jk_idx))
+        out = acc / jnp.maximum(l, 1e-30)[..., None].swapaxes(1, 3).swapaxes(2, 3)
+        lse = m + jnp.log(jnp.maximum(l, 1e-30))  # (B, KH, G, qc)
+        return out, lse
+
+    if causal_skip and causal and window is None:
+        # triangular scan: ONE scan over only the valid (iq, jk) block pairs
+        # (exact-causal FLOPs), carrying the online-softmax state of every
+        # query chunk as a stack — constant buffers, no python unrolling.
+        pairs = [
+            (iq, jk)
+            for iq in range(nq)
+            for jk in range(max(1, min(nk, -(-((iq + 1) * q_chunk + int(q_offset)) // kv_chunk))))
+        ]
+        iq_idx = jnp.asarray([p[0] for p in pairs], jnp.int32)
+        jk_idx = jnp.asarray([p[1] for p in pairs], jnp.int32)
+
+        def pair_body(carry, xs):
+            m_st, l_st, acc_st = carry  # stacks over q chunks
+            iq, jk = xs
+            qc = jnp.take(qs, iq, axis=0)
+            kc = jnp.take(ks, jk, axis=0)
+            vc = jnp.take(vs, jk, axis=0)
+            mask = _mask_for(iq, jk, q_chunk, kv_chunk, q_offset, causal, window)
+            blk = (
+                jnp.take(m_st, iq, axis=0),
+                jnp.take(l_st, iq, axis=0),
+                jnp.take(acc_st, iq, axis=0),
+            )
+            m_n, l_n, acc_n = _online_block(blk, qc, kc, vc, mask, scale)
+            return (
+                m_st.at[iq].set(m_n),
+                l_st.at[iq].set(l_n),
+                acc_st.at[iq].set(acc_n),
+            ), None
+
+        init = (
+            jnp.full((nq, b, kh, g, q_chunk), NEG_INF, jnp.float32),
+            jnp.zeros((nq, b, kh, g, q_chunk), jnp.float32),
+            jnp.zeros((nq, b, q_chunk, kh, g, d), jnp.float32),
+        )
+        (m_st, l_st, acc_st), _ = jax.lax.scan(pair_body, init, (iq_idx, jk_idx))
+        out = acc_st / jnp.maximum(l_st, 1e-30)[..., None].swapaxes(2, 4).swapaxes(3, 4)
+        lse = m_st + jnp.log(jnp.maximum(l_st, 1e-30))
+    else:
+
+        def outer(_, xs):
+            qc, iq = xs
+            return None, run_q_chunk(iq, qc, ks, vs, jnp.arange(nk))
+
+        _, (out, lse) = jax.lax.scan(outer, None, (qs, jnp.arange(nq)))
+
+    out = jnp.moveaxis(out, 0, 1).reshape(b, t, kh, g, d)
+    lse = jnp.moveaxis(lse, 0, 3).reshape(b, kh, g, t)
+    return out, lse
+
+
+def _flash_bwd_impl(q5, k, v, out, lse, do, cfg: tuple):
+    """Two-pass flash backward: recompute p per block from (q,k,lse)."""
+    q_chunk, kv_chunk, causal, window, q_offset, causal_skip = cfg
+    b, t, kh, g, d = q5.shape
+    s = k.shape[1]
+    nq, nk = t // q_chunk, s // kv_chunk
+    scale = 1.0 / (d**0.5)
+
+    qs = _chunk(q5, q_chunk, 1)  # (nq, B, qc, KH, G, D)
+    ks = _chunk(k, kv_chunk, 1)
+    vs = _chunk(v, kv_chunk, 1)
+    dos = _chunk(do, q_chunk, 1)  # (nq, B, qc, KH, G, D)
+    lses = _chunk(jnp.moveaxis(lse, 3, 1), q_chunk, 1)  # (nq, B, qc, KH, G)
+    # delta_i = sum_d do * out (per query)
+    delta = jnp.sum(do * out, axis=-1)  # (B, T, KH, G)
+    deltas = _chunk(delta, q_chunk, 1)  # (nq, B, qc, KH, G)
+
+    # pass 2 contracts the (possibly sequence-sharded) q dim inside a scan —
+    # gather q/do/lse/delta to full sequence once, or the partitioner emits
+    # an all-reduce per (q-chunk x kv-chunk) block.
+    def _full_seq(x):
+        return constrain(x, None, "batch", *([None] * (x.ndim - 2)))
+
+    qs_f, dos_f = _full_seq(qs), _full_seq(dos)
+    lses_f, deltas_f = _full_seq(lses), _full_seq(deltas)
+
+    def p_block(qc, kc, lse_c, iq, jk):
+        sblk = jnp.einsum(
+            "bqhgd,bkhd->bhgqk", qc.astype(jnp.float32), kc.astype(jnp.float32)
+        ) * scale
+        mask = _mask_for(iq, jk, q_chunk, kv_chunk, q_offset, causal, window)
+        sblk = jnp.where(mask[None, None, None], sblk, NEG_INF)
+        # lse_c: (B, qc, KH, G) -> (B, KH, G, qc, 1)
+        l5 = jnp.moveaxis(lse_c, 1, 3)[..., None]
+        return jnp.exp(sblk - l5)
+
+    # pass 1: dq per q chunk (scan over kv chunks inside)
+    def dq_chunk(_, xs):
+        qc, doc, lse_c, dlt, iq = xs
+
+        def inner(acc, ys):
+            kc, vc, jk = ys
+            p = p_block(qc, kc, lse_c, iq, jk)  # (B,KH,G,qc,kc)
+            dp = jnp.einsum("bqhgd,bkhd->bhgqk", doc.astype(jnp.float32), vc.astype(jnp.float32))
+            ds = p * (dp - jnp.moveaxis(dlt, 1, 3)[..., None])
+            acc = acc + jnp.einsum("bhgqk,bkhd->bqhgd", ds, kc.astype(jnp.float32)) * scale
+            return acc, None
+
+        acc0 = jnp.zeros((b, q_chunk, kh, g, d), jnp.float32)
+        acc, _ = jax.lax.scan(inner, acc0, (ks, vs, jnp.arange(nk)))
+        return None, acc
+
+    _, dq = jax.lax.scan(dq_chunk, None, (qs, dos, lses, deltas, jnp.arange(nq)))
+    dq = jnp.moveaxis(dq, 0, 1).reshape(b, t, kh, g, d)
+
+    # pass 2: dk/dv per kv chunk (scan over q chunks inside)
+    def dkv_chunk(_, xs):
+        kc, vc, jk = xs
+
+        def inner(carry, ys):
+            dk_c, dv_c = carry
+            qc, doc, lse_c, dlt, iq = ys
+            p = p_block(qc, kc, lse_c, iq, jk)
+            dv_c = dv_c + jnp.einsum("bhgqk,bqhgd->bkhd", p, doc.astype(jnp.float32))
+            dp = jnp.einsum("bqhgd,bkhd->bhgqk", doc.astype(jnp.float32), vc.astype(jnp.float32))
+            ds = p * (dp - jnp.moveaxis(dlt, 1, 3)[..., None])
+            dk_c = dk_c + jnp.einsum("bhgqk,bqhgd->bkhd", ds, qc.astype(jnp.float32)) * scale
+            return (dk_c, dv_c), None
+
+        z = jnp.zeros((b, kv_chunk, kh, d), jnp.float32)
+        (dk_c, dv_c), _ = jax.lax.scan(
+            inner, (z, z), (qs_f, dos_f, lses_f, deltas_f, jnp.arange(nq))
+        )
+        return None, (dk_c, dv_c)
+
+    _, (dk, dv) = jax.lax.scan(dkv_chunk, None, (ks, vs, jnp.arange(nk)))
+    dk = jnp.moveaxis(dk, 0, 1).reshape(b, s, kh, d)
+    dv = jnp.moveaxis(dv, 0, 1).reshape(b, s, kh, d)
+    return dq, dk, dv
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _flash_attention(q5, k, v, cfg: tuple):
+    out, _ = _flash_fwd(q5, k, v, cfg)
+    return out
+
+
+def _flash_vjp_fwd(q5, k, v, cfg):
+    out, lse = _flash_fwd(q5, k, v, cfg)
+    return out, (q5, k, v, out, lse)
+
+
+def _flash_vjp_bwd(cfg, res, do):
+    q5, k, v, out, lse = res
+    dq, dk, dv = _flash_bwd_impl(q5, k, v, out, lse, do.astype(jnp.float32), cfg)
+    return dq.astype(q5.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+_flash_attention.defvjp(_flash_vjp_fwd, _flash_vjp_bwd)
+
+
+def chunked_attention(
+    q: Array,
+    k: Array,
+    v: Array,
+    *,
+    q_chunk: int,
+    kv_chunk: int,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset=0,
+    causal_skip: bool = False,
+) -> Array:
+    """Flash attention in pure XLA; q: (B, T, H, D), k/v: (B, S, KH, D).
+
+    Forward scans KV chunks with an online softmax; the custom VJP saves only
+    (q, k, v, out, logsumexp) and recomputes score blocks in the backward
+    (two passes: dq, then dk/dv) — O(T) residual memory instead of the
+    O(T^2/chunk) a scan-of-blocks autodiff would retain.
+
+    ``causal_skip=True`` unrolls the query-chunk loop in Python and slices
+    only the needed KV prefix per chunk: exact-causal FLOPs at the cost of a
+    larger (but static) HLO.
+    """
+    b, t, h, d = q.shape
+    _, s, kh, _ = k.shape
+    g = h // kh
+    q_chunk = min(q_chunk, t)
+    kv_chunk = min(kv_chunk, s)
+    while t % q_chunk:  # largest divisor not exceeding the requested chunk
+        q_chunk -= 1
+    while s % kv_chunk:
+        kv_chunk -= 1
+    cfg = (q_chunk, kv_chunk, bool(causal), window, int(q_offset), bool(causal_skip))
+    q5 = q.reshape(b, t, kh, g, d)
+    out = _flash_attention(q5, k, v, cfg)
+    return out.reshape(b, t, h, d).astype(q.dtype)
+
+
+def local_attention(
+    q: Array, k: Array, v: Array, *, window: int, q_offset=0
+) -> Array:
+    """Sliding-window causal attention with linear cost: chunk size = window,
+    each query chunk attends to (previous, current) key chunks only."""
+    b, t, h, d = q.shape
+    if t <= window or t % window:
+        # short or non-aligned sequences: masked chunked path (correct, and
+        # only quadratic within the actual sequence length)
+        return chunked_attention(
+            q, k, v, q_chunk=min(t, window), kv_chunk=min(k.shape[1], window),
+            causal=True, window=window, q_offset=q_offset,
+        )
+    g = h // k.shape[2]
+    scale = 1.0 / (d**0.5)
+    nq = t // window
+    q5 = q.reshape(b, t, k.shape[2], g, d)
+    outs = []
+    for iq in range(nq):
+        q_lo = iq * window
+        k_lo = max(0, q_lo - window)
+        qc = q5[:, q_lo : q_lo + window]
+        kc = k[:, k_lo : q_lo + window]
+        vc = v[:, k_lo : q_lo + window]
+        s = jnp.einsum(
+            "bqhgd,bkhd->bhgqk", qc.astype(jnp.float32), kc.astype(jnp.float32)
+        ) * scale
+        qp = jnp.arange(window) + q_lo + q_offset
+        kp = jnp.arange(kc.shape[1]) + k_lo
+        mask = (qp[:, None] >= kp[None, :]) & ((qp[:, None] - kp[None, :]) < window)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        outs.append(jnp.einsum("bhgqk,bkhd->bqhgd", p, vc.astype(jnp.float32)))
+    out = jnp.concatenate(outs, axis=1).reshape(b, t, h, d)
+    return out.astype(q.dtype)
+
+
+def decode_attention(
+    q: Array,
+    k_cache: Array,
+    v_cache: Array,
+    pos: Array,
+    slot_pos: Optional[Array] = None,
+    window: Optional[int] = None,
+) -> Array:
+    """Single-token attention against a KV cache.
+
+    q: (B, 1, H, D); caches: (B, S, KH, D); pos: scalar/(B,) current position.
+    ``slot_pos``: (S,) or (B, S) absolute position of each cache slot (ring
+    buffers); defaults to arange(S). Softmax reductions over the cache S axis
+    work under SPMD sequence-sharding of the cache (XLA inserts the
+    all-reduce for max/sum -> distributed flash-decode).
+    """
+    b, _, h, d = q.shape
+    _, s, kh, _ = k_cache.shape
+    g = h // kh
+    scale = 1.0 / (d**0.5)
+    if slot_pos is None:
+        slot_pos = jnp.arange(s)
+    if slot_pos.ndim == 1:
+        slot_pos = jnp.broadcast_to(slot_pos[None, :], (b, s))
+    pos_b = jnp.broadcast_to(jnp.asarray(pos), (b,))[:, None]
+
+    q5 = q.reshape(b, kh, g, d)
+    scores = jnp.einsum(
+        "bhgd,bshd->bhgs", q5.astype(jnp.float32), k_cache.astype(jnp.float32)
+    ) * scale
+    valid = (slot_pos <= pos_b) & (slot_pos >= 0)
+    if window is not None:
+        valid &= (pos_b - slot_pos) < window
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, h, d).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# MLPs
+# --------------------------------------------------------------------------
+
+
+def mlp(x: Array, p: dict, mlp_type: str, hook: MatmulHook, prefix: str = "mlp") -> Array:
+    if mlp_type == "swiglu":
+        gate = hook(f"{prefix}_gate", x, p["w_gate"])
+        up = hook(f"{prefix}_up", x, p["w_up"])
+        h = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up
+    else:  # gelu
+        h = hook(f"{prefix}_in", x, p["w_in"])
+        if "b_in" in p:
+            h = h + p["b_in"].astype(h.dtype)
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    h = constrain(h, "batch", "seq", "mlp")
+    y = hook(f"{prefix}_out", x=h, w=p["w_down"])
+    if "b_out" in p:
+        y = y + p["b_out"].astype(y.dtype)
+    return y
+
+
+# --------------------------------------------------------------------------
+# loss
+# --------------------------------------------------------------------------
+
+
+def chunked_xent(
+    h: Array,
+    lm_head: Array,
+    labels: Array,
+    *,
+    chunk: int,
+    n_codebooks: int = 1,
+    vocab: int,
+    hook: Optional[MatmulHook] = None,
+    ignore_label: int = -1,
+) -> Array:
+    """Mean token NLL without materializing full (B, T, V) logits.
+
+    h: (B, T, d); lm_head: (d, n_codebooks * vocab_padded) — pad columns
+    beyond ``vocab`` are masked out of the logsumexp;
+    labels: (B, T) or (B, T, n_codebooks).
+    """
+    b, t, d = h.shape
+    hook = hook or MatmulHook()
+    chunk = min(chunk, t)
+    while t % chunk:
+        chunk -= 1
+    n = t // chunk
+    vocab_padded = lm_head.shape[-1] // n_codebooks
+    if labels.ndim == 2:
+        labels = labels[..., None]
+    hs = _chunk(h, chunk, 1)  # (n, B, chunk, d)
+    ls = _chunk(labels, chunk, 1)  # (n, B, chunk, cb)
+
+    @jax.checkpoint  # recompute logits in bwd: O(B*chunk*V) residuals -> 0
+    def chunk_nll(hc, lc):
+        logits = hook("lm_head", hc, lm_head).astype(jnp.float32)
+        logits = logits.reshape(b, chunk, n_codebooks, vocab_padded)
+        logits = constrain(logits, "batch", None, None, "vocab")
+        if vocab_padded != vocab:
+            pad_mask = jnp.arange(vocab_padded) < vocab
+            logits = jnp.where(pad_mask, logits, NEG_INF)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        lbl = jnp.clip(lc, 0, vocab - 1)
+        gold = jnp.take_along_axis(logits, lbl[..., None], axis=-1)[..., 0]
+        mask = (lc != ignore_label).astype(jnp.float32)
+        return jnp.sum((logz - gold) * mask), jnp.sum(mask)
+
+    def body(carry, xs):
+        tot, cnt = carry
+        hc, lc = xs
+        t_, c_ = chunk_nll(hc, lc)
+        return (tot + t_, cnt + c_), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.zeros(()), jnp.zeros(())), (hs, ls))
+    return tot / jnp.maximum(cnt, 1.0)

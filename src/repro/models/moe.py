@@ -1,0 +1,134 @@
+"""Mixture-of-Experts block: GShard-style grouped einsum dispatch with
+capacity-factor token dropping, top-k routing, optional shared experts.
+
+Tokens are processed in small groups so the one-hot dispatch/combine tensors
+stay tiny relative to expert compute. Experts shard on the "model" mesh axis
+(expert parallelism); XLA inserts the all-to-all at the dispatch einsum
+boundary (visible in the dry-run collective analysis).
+
+Analog integration: expert matmuls run through ``hook.batched`` with
+per-expert energies — expert granularity is the paper's "per-channel"
+idea lifted to MoE (§V: "energy can also be allocated at a finer scale").
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.hooks import MatmulHook
+from repro.models.layers import mlp
+from repro.models.sharding import constrain
+
+Array = jax.Array
+
+
+def router_topk(logits: Array, top_k: int):
+    """probs/ids of the top-k experts; weights renormalized over the k."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gate_vals, ids = jax.lax.top_k(probs, top_k)  # (..., k)
+    if top_k > 1:
+        gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+    return gate_vals, ids
+
+
+def make_dispatch(
+    ids: Array, gate_vals: Array, n_experts: int, capacity: int
+) -> tuple[Array, Array]:
+    """GShard dispatch/combine tensors.
+
+    ids/gate_vals: (G, S, k). Returns (dispatch (G,S,E,C) bool-ish,
+    combine (G,S,E,C) f32). Earlier routing slots get capacity priority.
+    """
+    g, s, k = ids.shape
+    counts = jnp.zeros((g, n_experts), jnp.int32)
+    combine = jnp.zeros((g, s, n_experts, capacity), jnp.float32)
+    for slot in range(k):
+        onehot = jax.nn.one_hot(ids[..., slot], n_experts, dtype=jnp.int32)  # (G,S,E)
+        # position of each token within its expert queue (exclusive cumsum)
+        pos = jnp.cumsum(onehot, axis=1) - onehot + counts[:, None, :]
+        keep = (pos < capacity) & (onehot > 0)
+        pos_oh = jax.nn.one_hot(pos, capacity, dtype=jnp.float32)  # (G,S,E,C)
+        disp_slot = pos_oh * keep[..., None].astype(jnp.float32)
+        combine = combine + disp_slot * gate_vals[..., slot][..., None, None]
+        counts = counts + jnp.sum(onehot * keep.astype(jnp.int32), axis=1)
+    dispatch = (combine > 0.0).astype(jnp.float32)
+    return dispatch, combine
+
+
+def moe_block(
+    x: Array,
+    p: Dict[str, Array],
+    cfg: ModelConfig,
+    hook: MatmulHook,
+) -> Array:
+    """x: (B, T, d) -> (B, T, d)."""
+    b, t, d = x.shape
+    n_tok = b * t
+    gs = min(cfg.moe_group_size, n_tok)
+    while n_tok % gs:  # largest divisor of n_tok not exceeding the target
+        gs -= 1
+    g = n_tok // gs
+    e = cfg.n_experts
+    k = cfg.top_k
+    cap = max(1, int(-(-gs * k * cfg.capacity_factor // e)))
+
+    xg = constrain(x.reshape(g, gs, d), "tokens", None, None)
+    logits = hook("router", xg, p["router"])  # (G, S, E)
+    gate_vals, ids = router_topk(logits, k)
+    dispatch, combine = make_dispatch(ids, gate_vals, e, cap)
+    if cfg.moe_ff_split > 1:
+        # virtual experts: route each token to all ff-splits of its expert;
+        # the combine sum then adds the down-proj partials (exact).
+        dispatch = jnp.repeat(dispatch, cfg.moe_ff_split, axis=2)
+        combine = jnp.repeat(combine, cfg.moe_ff_split, axis=2)
+    dispatch = dispatch.astype(x.dtype)
+    combine = combine.astype(x.dtype)
+
+    # token-major dispatch (fully local: every operand is G-sharded), THEN an
+    # explicit reshard to the expert-major layout — the all-to-all boundary
+    # of expert parallelism. Emitting the expert-major einsum directly makes
+    # the SPMD partitioner all-gather the whole token array instead.
+    xe = jnp.einsum("gsd,gsec->gecd", xg, dispatch)
+    # no-op forward; in backward this forces the cotangent back to token
+    # sharding BEFORE the dispatch-einsum VJP (otherwise the mismatched
+    # batch-dim shardings make the partitioner replicate the whole tensor)
+    xe = constrain(xe, "tokens", None, None, None)
+    xe = jnp.moveaxis(xe, 1, 0)  # (E, G, C, d)
+    # two-step reshard: (1) swap the data-axis owner G->E while keeping G on
+    # (pod, model) (an all-to-all), (2) gather G over "model" only — G keeps
+    # its "pod" shard and E stays sliced. A one-step constraint makes the
+    # partitioner all-gather the full expert-major tensor before slicing E.
+    xe = constrain(xe, "experts", "tokens_pm", None, None)
+    xe = constrain(xe, "experts", "pod_tokens", None, "expert_embed")
+
+    if cfg.mlp_type == "swiglu":
+        gate = hook.batched("moe_gate", xe, p["w_gate"])
+        up = hook.batched("moe_up", xe, p["w_up"])
+        h = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up
+    else:
+        h = hook.batched("moe_in", xe, p["w_in"])
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    h = constrain(h, "experts", "pod_tokens", None, "expert_mlp")
+    ye = hook.batched("moe_down", h, p["w_down"])  # (E, G, C, d)
+    # reverse path: reduce-scatter G onto "model", all-to-all E->G on "data"
+    ye = constrain(ye, "experts", "tokens_pm", None, None)
+    ye = constrain(jnp.moveaxis(ye, 0, 1), "tokens", None, None, None)
+
+    y = jnp.einsum("gecd,gsec->gsd", ye, combine)
+    y = y.reshape(b, t, d)
+
+    if cfg.n_shared_experts:
+        y = y + mlp(x, p["shared"], cfg.mlp_type, hook, prefix="moe_shared")
+    return y
+
+
+def aux_load_balance_loss(logits: Array, ids: Array, n_experts: int) -> Array:
+    """Switch-style auxiliary loss: E * sum_e f_e * p_e (for training)."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    p_mean = jnp.mean(probs.reshape(-1, n_experts), axis=0)
+    top1 = ids[..., 0].reshape(-1)
+    f = jnp.mean(jax.nn.one_hot(top1, n_experts, dtype=jnp.float32), axis=0)
+    return n_experts * jnp.sum(f * p_mean)

@@ -1,0 +1,244 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, parallelizable)
+and sLSTM (scalar memory, sequential) with stabilized exponential gating.
+
+mLSTM recurrence per head (state C: (dk, dv), n: (dk,), m: scalar):
+
+    m_t = max(logf_t + m_{t-1}, logi_t)
+    C_t = exp(logf_t + m_{t-1} - m_t) C_{t-1} + exp(logi_t - m_t) k_t v_t^T
+    n_t = exp(logf_t + m_{t-1} - m_t) n_{t-1} + exp(logi_t - m_t) k_t
+    h_t = (q_t C_t) / max(|q_t . n_t|, exp(-m_t))
+
+evaluated CHUNKWISE: sequential lax.scan over chunks carrying (C, n, m, b_end)
+with quadratic intra-chunk attention — the standard linear-attention chunked
+dataflow (memory O(T*d + dk*dv) instead of O(T*dk*dv)).
+
+sLSTM uses a sequential scan over time with block-diagonal (per-head)
+recurrent weights and the same m-stabilized exponential gates.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.hooks import MatmulHook
+
+Array = jax.Array
+
+
+def mlstm_chunkwise(
+    q: Array,
+    k: Array,
+    v: Array,
+    log_i: Array,
+    log_f: Array,
+    *,
+    chunk: int,
+    state: Optional[Tuple[Array, Array, Array]] = None,
+) -> Tuple[Array, Tuple[Array, Array, Array]]:
+    """q,k,v: (B, T, H, D); log_i/log_f: (B, T, H) (pre-activation gates,
+    log_i = i_tilde, log_f = logsigmoid(f_tilde)). Returns (h, final_state)
+    with state = (C (B,H,D,D), n (B,H,D), m (B,H))."""
+    b, t, h, d = q.shape
+    chunk = min(chunk, t)
+    while t % chunk:  # largest divisor not exceeding the requested chunk
+        chunk -= 1
+    nc = t // chunk
+    scale = 1.0 / (d**0.5)
+
+    def resh(x):  # (B,T,H,...) -> (nc, B, chunk, H, ...)
+        x = x.reshape((b, nc, chunk) + x.shape[2:])
+        return jnp.moveaxis(x, 1, 0)
+
+    qs, ks, vs = resh(q.astype(jnp.float32) * scale), resh(k.astype(jnp.float32)), resh(
+        v.astype(jnp.float32)
+    )
+    lis, lfs = resh(log_i.astype(jnp.float32)), resh(log_f.astype(jnp.float32))
+
+    if state is None:
+        c0 = jnp.zeros((b, h, d, d), jnp.float32)
+        n0 = jnp.zeros((b, h, d), jnp.float32)
+        m0 = jnp.full((b, h), -1e30, jnp.float32)
+    else:
+        c0, n0, m0 = (s.astype(jnp.float32) for s in state)
+
+    idx = jnp.arange(chunk)
+    causal = idx[:, None] >= idx[None, :]  # (chunk, chunk)
+
+    @jax.checkpoint  # recompute intra-chunk tensors in bwd; save carries only
+    def body(carry, xs):
+        c_prev, n_prev, m_prev = carry
+        qc, kc, vc, li, lf = xs  # (B, chunk, H, ...)
+        bcum = jnp.cumsum(lf, axis=1)  # (B, chunk, H) inclusive cumsum of logf
+        b_end = bcum[:, -1]  # (B, H)
+
+        # log weight of source j seen from target i: bcum_i - bcum_j + li_j
+        # stabilizer per target i:
+        src = -bcum + li  # (B, chunk, H): -b_j + logi_j
+        src_max = jax.lax.cummax(src, axis=1)  # running max over j<=i
+        m_intra = bcum + src_max  # (B, chunk, H)
+        m_inter = bcum + m_prev[:, None, :]  # (B, chunk, H)
+        m_i = jnp.maximum(m_intra, m_inter)
+
+        # intra-chunk
+        logw = (
+            bcum[:, :, None, :] - bcum[:, None, :, :] + li[:, None, :, :]
+            - m_i[:, :, None, :]
+        )  # (B, i, j, H)
+        logw = jnp.where(causal[None, :, :, None], logw, -1e30)
+        wgt = jnp.exp(logw)
+        s_ij = jnp.einsum("bihd,bjhd->bijh", qc, kc) * wgt  # decayed scores
+        num_intra = jnp.einsum("bijh,bjhd->bihd", s_ij, vc)
+        # denominator n_i . q_i == sum_j wgt_j (q_i . k_j) == sum_j s_ij
+        den_intra = jnp.sum(s_ij, axis=2)  # (B, i, H)
+
+        # inter-chunk (carried state)
+        w_inter = jnp.exp(m_inter - m_i)  # (B, chunk, H)
+        num_inter = jnp.einsum("bihd,bhde->bihe", qc, c_prev) * w_inter[..., None]
+        den_inter = jnp.einsum("bihd,bhd->bih", qc, n_prev) * w_inter
+
+        num = num_intra + num_inter
+        den = den_intra + den_inter
+        denom = jnp.maximum(jnp.abs(den), jnp.exp(-m_i))
+        h_c = num / denom[..., None]
+
+        # carry update to end of chunk
+        m_next = jnp.maximum(b_end + m_prev, b_end + src_max[:, -1])
+        wk = jnp.exp(b_end[:, None, :] + src - m_next[:, None, :])  # (B, j, H)
+        c_next = (
+            jnp.exp(b_end + m_prev - m_next)[:, :, None, None] * c_prev
+            + jnp.einsum("bjh,bjhd,bjhe->bhde", wk, kc, vc)
+        )
+        n_next = (
+            jnp.exp(b_end + m_prev - m_next)[:, :, None] * n_prev
+            + jnp.einsum("bjh,bjhd->bhd", wk, kc)
+        )
+        return (c_next, n_next, m_next), h_c
+
+    (c_f, n_f, m_f), hs = jax.lax.scan(body, (c0, n0, m0), (qs, ks, vs, lis, lfs))
+    h_out = jnp.moveaxis(hs, 0, 1).reshape(b, t, h, d)
+    return h_out.astype(q.dtype), (c_f, n_f, m_f)
+
+
+def mlstm_decode(
+    q: Array,
+    k: Array,
+    v: Array,
+    log_i: Array,
+    log_f: Array,
+    state: Tuple[Array, Array, Array],
+) -> Tuple[Array, Tuple[Array, Array, Array]]:
+    """Single-step mLSTM. q,k,v: (B, 1, H, D); gates (B, 1, H)."""
+    b, _, h, d = q.shape
+    c0, n0, m0 = (s.astype(jnp.float32) for s in state)
+    scale = 1.0 / (d**0.5)
+    qt = q[:, 0].astype(jnp.float32) * scale
+    kt = k[:, 0].astype(jnp.float32)
+    vt = v[:, 0].astype(jnp.float32)
+    li = log_i[:, 0].astype(jnp.float32)
+    lf = log_f[:, 0].astype(jnp.float32)
+
+    m_t = jnp.maximum(lf + m0, li)
+    fw = jnp.exp(lf + m0 - m_t)
+    iw = jnp.exp(li - m_t)
+    c_t = fw[..., None, None] * c0 + iw[..., None, None] * (
+        kt[..., :, None] * vt[..., None, :]
+    )
+    n_t = fw[..., None] * n0 + iw[..., None] * kt
+    num = jnp.einsum("bhd,bhde->bhe", qt, c_t)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qt, n_t)), jnp.exp(-m_t))
+    h_t = (num / den[..., None]).reshape(b, 1, h, d)
+    return h_t.astype(q.dtype), (c_t, n_t, m_t)
+
+
+def mlstm_block(
+    x: Array,
+    p: Dict[str, Array],
+    hook: MatmulHook,
+    *,
+    n_heads: int,
+    chunk: int = 256,
+    state=None,
+    decode: bool = False,
+):
+    """Full mLSTM block: up-proj (x2), conv-free simplified variant with
+    q/k/v projections, exponential gates, headwise RMS-ish norm, gated
+    output, down projection."""
+    b, t, d = x.shape
+    hd = d // n_heads
+    z = hook("mlstm_z", x, p["w_z"])  # (B,T,d) output gate branch
+    q = hook("mlstm_q", x, p["w_q"]).reshape(b, t, n_heads, hd)
+    k = hook("mlstm_k", x, p["w_k"]).reshape(b, t, n_heads, hd)
+    v = hook("mlstm_v", x, p["w_v"]).reshape(b, t, n_heads, hd)
+    gates = x.astype(jnp.float32) @ p["w_gates"].astype(jnp.float32) + p["b_gates"]
+    li, lf_pre = jnp.split(gates, 2, axis=-1)  # (B,T,H) each
+    lf = jax.nn.log_sigmoid(lf_pre)
+
+    if decode:
+        h, new_state = mlstm_decode(q, k, v, li, lf, state)
+    else:
+        h, new_state = mlstm_chunkwise(q, k, v, li, lf, chunk=chunk, state=state)
+
+    # headwise normalization + output gating
+    h32 = h.astype(jnp.float32)
+    var = jnp.mean(h32 * h32, axis=-1, keepdims=True)
+    h_n = h32 * jax.lax.rsqrt(var + 1e-6) * (1.0 + p["norm"].reshape(n_heads, hd))
+    h_n = h_n.reshape(b, t, d).astype(x.dtype)
+    y = h_n * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    y = hook("mlstm_o", y, p["w_o"])
+    return y, new_state
+
+
+def slstm_block(
+    x: Array,
+    p: Dict[str, Array],
+    hook: MatmulHook,
+    *,
+    n_heads: int,
+    state=None,
+    decode: bool = False,
+):
+    """sLSTM block: sequential scan with block-diagonal recurrent weights.
+
+    state = (c, n, h, m) each (B, d). Gates z/i/f/o from W x + R h_{t-1}.
+    """
+    b, t, d = x.shape
+    hd = d // n_heads
+    # feedforward part of all four gates at once: (B, T, 4d)
+    wx = hook("slstm_wx", x, p["w_x"]).astype(jnp.float32) + p["b"].astype(jnp.float32)
+    # broadcast the recurrent weights over batch BEFORE the time scan: the
+    # per-step weight-grad contributions then accumulate locally in the scan
+    # carry and the batch reduction happens once at the broadcast transpose
+    # (otherwise SPMD all-reduces a (4,H,hd,hd) grad every timestep).
+    r = jnp.broadcast_to(
+        p["r"].astype(jnp.float32), (b,) + p["r"].shape
+    )  # (B, 4, H, hd, hd)
+
+    if state is None:
+        zeros = jnp.zeros((b, d), jnp.float32)
+        state = (zeros, zeros, zeros, jnp.full((b, d), -1e30, jnp.float32))
+
+    @jax.checkpoint  # per-timestep remat: save the (c, n, h, m) carries only
+    def step(carry, wx_t):
+        c, n, h_prev, m = carry
+        hb = h_prev.reshape(b, n_heads, hd)
+        rec = jnp.einsum("bhk,bghkl->bghl", hb, r).reshape(b, 4, d)
+        pre = wx_t.reshape(b, 4, d) + rec
+        z_t = jnp.tanh(pre[:, 0])
+        i_t = pre[:, 1]  # log-space input gate
+        f_t = jax.nn.log_sigmoid(pre[:, 2])  # log-space forget gate
+        o_t = jax.nn.sigmoid(pre[:, 3])
+        m_new = jnp.maximum(f_t + m, i_t)
+        iw = jnp.exp(i_t - m_new)
+        fw = jnp.exp(f_t + m - m_new)
+        c_new = fw * c + iw * z_t
+        n_new = fw * n + iw
+        h_new = o_t * (c_new / jnp.maximum(n_new, 1e-12))
+        return (c_new, n_new, h_new, m_new), h_new
+
+    wx_seq = jnp.moveaxis(wx, 1, 0)  # (T, B, 4d)
+    new_state, hs = jax.lax.scan(step, state, wx_seq)
+    h_seq = jnp.moveaxis(hs, 0, 1).astype(x.dtype)  # (B, T, d)
+    y = hook("slstm_o", h_seq, p["w_o"])
+    return y, new_state

@@ -1,0 +1,11 @@
+from repro.optim.adam import AdamConfig, AdamState, adam_init, adam_update
+from repro.optim.clip import clip_by_global_norm, global_norm
+
+__all__ = [
+    "AdamConfig",
+    "AdamState",
+    "adam_init",
+    "adam_update",
+    "clip_by_global_norm",
+    "global_norm",
+]

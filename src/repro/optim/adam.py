@@ -1,0 +1,79 @@
+"""AdamW as pure-functional (init, update) pairs.
+
+Used both for the paper's energy-allocation learning (Adam, lr=0.01,
+Appendix A) and for full model training. Moments may be stored in bf16 to
+fit large models (state dtype is configurable); update math is f32.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamConfig:
+    lr: float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    state_dtype: Optional[Any] = None  # e.g. jnp.bfloat16 for large models
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class AdamState:
+    step: Array
+    mu: PyTree
+    nu: PyTree
+
+
+def adam_init(params: PyTree, cfg: AdamConfig) -> AdamState:
+    dt = cfg.state_dtype
+
+    def zeros(p):
+        return jnp.zeros(p.shape, dt if dt is not None else p.dtype)
+
+    return AdamState(
+        step=jnp.zeros((), jnp.int32),
+        mu=jax.tree.map(zeros, params),
+        nu=jax.tree.map(zeros, params),
+    )
+
+
+def adam_update(
+    grads: PyTree, state: AdamState, params: PyTree, cfg: AdamConfig
+) -> tuple[PyTree, AdamState]:
+    """Returns (new_params, new_state). Decoupled weight decay (AdamW)."""
+    step = state.step + 1
+    b1, b2 = cfg.b1, cfg.b2
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g32 = g.astype(jnp.float32)
+        m32 = m.astype(jnp.float32) * b1 + (1 - b1) * g32
+        v32 = v.astype(jnp.float32) * b2 + (1 - b2) * g32 * g32
+        mhat = m32 / c1
+        vhat = v32 / c2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if cfg.weight_decay:
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        newp = p.astype(jnp.float32) - cfg.lr * delta
+        return newp.astype(p.dtype), m32.astype(m.dtype), v32.astype(v.dtype)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.mu)
+    flat_v = treedef.flatten_up_to(state.nu)
+    out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, AdamState(step=step, mu=new_m, nu=new_v)

@@ -1,0 +1,80 @@
+"""Gradient compression: int8 quantization with error feedback.
+
+For bandwidth-constrained data-parallel all-reduce (multi-pod DCN), gradients
+are quantized to int8 with a per-tensor scale before the reduce; the
+quantization residual is fed back into the next step's gradient (error
+feedback, Seide et al. / Karimireddy et al.) so the compression bias
+vanishes over time.
+
+Two integration levels:
+  * ``ef_int8_roundtrip`` — stateless quantize->dequantize; inserted in the
+    jitted train step to reproduce the *numerics* of compressed all-reduce
+    under XLA SPMD (where per-device partial gradients are not visible).
+  * ``compressed_psum`` — the real collective, for shard_map-style manual-DP
+    deployments; validated in tests on a multi-device CPU mesh.
+  * ``EFState``/``ef_compress`` — stateful error feedback for driver loops.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def int8_quantize(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32))) / 127.0
+    scale = jnp.maximum(scale, 1e-30)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def int8_dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def ef_int8_roundtrip(grads: PyTree) -> PyTree:
+    """Stateless per-tensor int8 roundtrip (compression numerics in-jit)."""
+
+    def one(g):
+        q, s = int8_quantize(g)
+        return int8_dequantize(q, s).astype(g.dtype)
+
+    return jax.tree.map(one, grads)
+
+
+def ef_compress(grads: PyTree, err: Optional[PyTree]) -> Tuple[PyTree, PyTree]:
+    """Error-feedback compression: returns (decompressed grads, new error).
+
+    new_err = (g + err) - Q(g + err); the returned gradient is Q(g + err).
+    """
+    if err is None:
+        err = jax.tree.map(lambda g: jnp.zeros_like(g, jnp.float32), grads)
+
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        q, s = int8_quantize(corrected)
+        deq = int8_dequantize(q, s)
+        return deq.astype(g.dtype), corrected - deq
+
+    out = jax.tree.map(one, grads, err)
+    flat, treedef = jax.tree.flatten(out, is_leaf=lambda x: isinstance(x, tuple))
+    g_new = treedef.unflatten([t[0] for t in flat])
+    e_new = treedef.unflatten([t[1] for t in flat])
+    return g_new, e_new
+
+
+def compressed_psum(x: jax.Array, axis_name: str) -> jax.Array:
+    """int8-compressed all-reduce for shard_map deployments.
+
+    Two-phase: (1) a scalar pmax establishes a SHARED scale, (2) the int8
+    payload is summed in int32 and rescaled — exact up to one rounding step
+    per participant (no mean-scale bias). Payload bytes: 1/4 of f32.
+    """
+    gmax = jax.lax.pmax(jnp.max(jnp.abs(x.astype(jnp.float32))), axis_name)
+    scale = jnp.maximum(gmax / 127.0, 1e-30)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+    total = jax.lax.psum(q.astype(jnp.int32), axis_name)
+    return total.astype(jnp.float32) * scale

@@ -1,0 +1,25 @@
+"""Affine quantization library (paper §II-B, Eq. 2).
+
+Supports per-tensor and per-channel granularity, straight-through estimators,
+fractional bit counts (paper footnote 1: quantize over ceil(2^B - 1) bins),
+and percentile-clipped calibration (paper Appendix A).
+"""
+from repro.quant.affine import (
+    QuantParams,
+    calibrate_minmax,
+    calibrate_percentile,
+    dequantize,
+    fake_quant,
+    quantize,
+    ste_round,
+)
+
+__all__ = [
+    "QuantParams",
+    "calibrate_minmax",
+    "calibrate_percentile",
+    "dequantize",
+    "fake_quant",
+    "quantize",
+    "ste_round",
+]

@@ -1,0 +1,131 @@
+"""Affine (uniform) quantization with straight-through gradients.
+
+Implements the paper's Eq. 2: values in [x_min, x_max] are mapped onto
+``n_bins = 2^B - 1`` uniform bins of width ``delta = range / n_bins``.
+
+Fractional bit-widths are supported per the paper's footnote 1: a fractional
+``B`` quantizes over ``ceil(2^B - 1)`` bins (e.g. 4.644 bits -> 25 bins).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@jax.custom_jvp
+def ste_round(x: Array) -> Array:
+    """round() with a straight-through gradient (paper §V, [57])."""
+    return jnp.round(x)
+
+
+@ste_round.defjvp
+def _ste_round_jvp(primals, tangents):
+    (x,), (dx,) = primals, tangents
+    return jnp.round(x), dx
+
+
+def ste_snap_levels(e: Array, quantum: float) -> Array:
+    """Snap to positive integer multiples of ``quantum`` with a full
+    straight-through gradient (gradient 1 even below one quantum, so learned
+    energies can recover from the floor)."""
+    snapped = jnp.maximum(jnp.round(e / quantum), 1.0) * quantum
+    return e + jax.lax.stop_gradient(snapped - e)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class QuantParams:
+    """Quantizer state for one tensor (or one channel axis of it).
+
+    ``x_min``/``x_max`` may be scalars (per-tensor) or vectors broadcastable
+    against the tensor (per-channel).  ``bits`` may be fractional.
+    """
+
+    x_min: Array
+    x_max: Array
+    bits: float = dataclasses.field(metadata=dict(static=True), default=8.0)
+
+    @property
+    def n_bins(self) -> Array:
+        # ceil(2^B - 1) bins supports fractional bit counts (paper fn. 1).
+        return jnp.ceil(2.0 ** jnp.asarray(self.bits, jnp.float32) - 1.0)
+
+    @property
+    def delta(self) -> Array:
+        rng = jnp.asarray(self.x_max, jnp.float32) - jnp.asarray(self.x_min, jnp.float32)
+        return rng / jnp.maximum(self.n_bins, 1.0)
+
+    @property
+    def zero_point(self) -> Array:
+        return ste_round(-jnp.asarray(self.x_min, jnp.float32) / jnp.maximum(self.delta, 1e-30))
+
+
+def quantize(x: Array, qp: QuantParams) -> Array:
+    """Map float x -> integer codes in [0, n_bins] (stored as f32 for STE)."""
+    delta = jnp.maximum(qp.delta, 1e-30)
+    code = ste_round(x / delta) + qp.zero_point
+    return jnp.clip(code, 0.0, qp.n_bins)
+
+
+def dequantize(code: Array, qp: QuantParams) -> Array:
+    return (code - qp.zero_point) * qp.delta
+
+
+def fake_quant(x: Array, qp: QuantParams) -> Array:
+    """Quantize-dequantize with straight-through gradient.
+
+    The returned tensor equals ``x`` up to quantization error bounded by
+    ``delta/2`` inside the clip range.
+    """
+    return dequantize(quantize(x, qp), qp)
+
+
+def calibrate_minmax(
+    x: Array, *, bits: float = 8.0, channel_axis: Optional[int] = None
+) -> QuantParams:
+    """Min/max calibration; per-channel if ``channel_axis`` is given.
+
+    Per-channel keeps the stats along ``channel_axis`` and reduces the rest,
+    matching the paper's per-channel weight quantization (Appendix A).
+    """
+    if channel_axis is None:
+        lo = jnp.min(x)
+        hi = jnp.max(x)
+    else:
+        axes = tuple(i for i in range(x.ndim) if i != channel_axis % x.ndim)
+        lo = jnp.min(x, axis=axes, keepdims=True)
+        hi = jnp.max(x, axis=axes, keepdims=True)
+    # Guarantee 0 is representable and the range is non-degenerate.
+    lo = jnp.minimum(lo, 0.0)
+    hi = jnp.maximum(hi, lo + 1e-8)
+    return QuantParams(x_min=lo, x_max=hi, bits=bits)
+
+
+def calibrate_percentile(
+    x: Array, *, bits: float = 8.0, percentile: float = 99.99
+) -> QuantParams:
+    """Percentile-clipped activation calibration (paper Appendix A, [66,67]).
+
+    Clips the range at the given two-sided percentile; used for the thermal
+    noise experiments where noise magnitude scales with activation range.
+    """
+    flat = x.reshape(-1).astype(jnp.float32)
+    hi = jnp.percentile(flat, percentile)
+    lo = jnp.percentile(flat, 100.0 - percentile)
+    lo = jnp.minimum(lo, 0.0)
+    hi = jnp.maximum(hi, lo + 1e-8)
+    return QuantParams(x_min=lo, x_max=hi, bits=bits)
+
+
+def merge_running(qp: QuantParams, new: QuantParams, momentum: float = 0.99) -> QuantParams:
+    """Moving-average range tracking (paper Appendix A, weight-noise setup)."""
+    return QuantParams(
+        x_min=momentum * qp.x_min + (1.0 - momentum) * new.x_min,
+        x_max=momentum * qp.x_max + (1.0 - momentum) * new.x_max,
+        bits=qp.bits,
+    )

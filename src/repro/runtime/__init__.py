@@ -1,0 +1,3 @@
+from repro.runtime.driver import SimulatedFailure, StragglerMonitor, TrainDriver
+
+__all__ = ["SimulatedFailure", "StragglerMonitor", "TrainDriver"]

@@ -1,0 +1,193 @@
+"""Fault-tolerant training driver.
+
+The control loop a real cluster job runs:
+
+  restore latest valid checkpoint -> build jitted step -> loop:
+      fetch batch(step)   (deterministic in step -> replay-exact restarts)
+      run step
+      watch step time     (straggler monitor: EWMA + outlier flags)
+      periodic async checkpoint
+  on failure: tear down, restore, continue  (bounded restarts)
+  on elastic resize request: checkpoint, rebuild mesh/shardings, reshard
+
+Failures are injected in tests via ``failure_hook`` (raise SimulatedFailure
+at chosen steps — including *mid-save* to exercise atomicity); the driver's
+contract, asserted by tests, is that a run with failures produces bit-exact
+final state vs. an uninterrupted run.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint.store import CheckpointManager, reshard
+from repro.data.pipeline import TokenTaskConfig, markov_batch
+from repro.launch.steps import TrainConfig, make_train_step
+from repro.models import lm
+from repro.models.config import ModelConfig
+from repro.models.sharding import use_mesh
+from repro.optim.adam import adam_init
+
+
+class SimulatedFailure(RuntimeError):
+    """Raised by failure_hook to simulate a node crash."""
+
+
+class StragglerMonitor:
+    """EWMA step-time tracker; flags steps slower than ``threshold`` x EWMA.
+
+    ``persistent`` trips after ``patience`` consecutive flags — the driver's
+    cue to trigger mitigation (re-mesh without the slow host, or rebalance).
+    """
+
+    def __init__(self, alpha: float = 0.1, threshold: float = 2.0, patience: int = 3):
+        self.alpha = alpha
+        self.threshold = threshold
+        self.patience = patience
+        self.ewma: Optional[float] = None
+        self.consecutive = 0
+        self.flags: list = []
+
+    def observe(self, step: int, dt: float) -> bool:
+        slow = self.ewma is not None and dt > self.threshold * self.ewma
+        if slow:
+            self.flags.append((step, dt, self.ewma))
+            self.consecutive += 1
+        else:
+            self.consecutive = 0
+            # only fold non-outlier samples into the baseline
+            self.ewma = dt if self.ewma is None else (1 - self.alpha) * self.ewma + self.alpha * dt
+        return slow
+
+    @property
+    def persistent(self) -> bool:
+        return self.consecutive >= self.patience
+
+
+@dataclasses.dataclass
+class DriverConfig:
+    max_steps: int = 100
+    ckpt_every: int = 20
+    ckpt_async: bool = True
+    max_restarts: int = 5
+    log_every: int = 10
+
+
+class TrainDriver:
+    def __init__(
+        self,
+        model_cfg: ModelConfig,
+        data_cfg: TokenTaskConfig,
+        mesh,
+        *,
+        ckpt_dir: str,
+        train_cfg: TrainConfig = TrainConfig(),
+        driver_cfg: DriverConfig = DriverConfig(),
+        failure_hook: Optional[Callable[[int], None]] = None,
+        seed: int = 0,
+    ):
+        self.model_cfg = model_cfg
+        self.data_cfg = data_cfg
+        self.mesh = mesh
+        self.train_cfg = train_cfg
+        self.cfg = driver_cfg
+        self.failure_hook = failure_hook
+        self.seed = seed
+        self.ckpt = CheckpointManager(ckpt_dir)
+        self.monitor = StragglerMonitor()
+        self.metrics_log: list = []
+        self.restarts = 0
+        self._build()
+
+    # -- construction / recovery ------------------------------------------
+
+    def _build(self):
+        with use_mesh(self.mesh):
+            _, jit_for, shardings = make_train_step(self.model_cfg, self.mesh, self.train_cfg)
+            self._shardings = shardings
+            sample = markov_batch(self.data_cfg, 0)
+            specs = {
+                k: jax.ShapeDtypeStruct(v.shape, v.dtype) for k, v in sample.items()
+            }
+            self._jit_step = jit_for(specs)
+
+    def _init_state(self):
+        with use_mesh(self.mesh):
+            params = jax.jit(
+                lambda k: lm.init_params(k, self.model_cfg),
+                out_shardings=self._shardings["params"],
+            )(jax.random.PRNGKey(self.seed))
+            opt = jax.jit(
+                lambda p: adam_init(p, self.train_cfg.adam()),
+                out_shardings=self._shardings["opt"],
+            )(params)
+        return {"params": params, "opt": opt}
+
+    def _restore_or_init(self):
+        template = jax.eval_shape(lambda: self._init_state())
+        restored = None
+        try:
+            restored = self.ckpt.restore_latest(template)
+        except FileNotFoundError:
+            restored = None
+        if restored is None:
+            return 0, self._init_state()
+        step, host_state = restored
+        state = {
+            "params": reshard(host_state["params"], self._shardings["params"]),
+            "opt": reshard(host_state["opt"], self._shardings["opt"]),
+        }
+        return step, state
+
+    # -- main loop ----------------------------------------------------------
+
+    def run(self) -> Dict[str, Any]:
+        while True:
+            try:
+                return self._run_once()
+            except SimulatedFailure:
+                self.restarts += 1
+                if self.restarts > self.cfg.max_restarts:
+                    raise
+                self.ckpt.wait()
+                continue
+
+    def _run_once(self) -> Dict[str, Any]:
+        step, state = self._restore_or_init()
+        with use_mesh(self.mesh):
+            while step < self.cfg.max_steps:
+                if self.failure_hook is not None:
+                    self.failure_hook(step)
+                batch = markov_batch(self.data_cfg, step)
+                t0 = time.monotonic()
+                state["params"], state["opt"], metrics = self._jit_step(
+                    state["params"], state["opt"], batch
+                )
+                jax.block_until_ready(metrics["loss"])
+                dt = time.monotonic() - t0
+                self.monitor.observe(step, dt)
+                step += 1
+                if step % self.cfg.log_every == 0 or step == self.cfg.max_steps:
+                    self.metrics_log.append(
+                        {"step": step, "loss": float(metrics["loss"]), "dt": dt}
+                    )
+                if step % self.cfg.ckpt_every == 0 or step == self.cfg.max_steps:
+                    self.ckpt.save(step, state, blocking=not self.cfg.ckpt_async)
+        self.ckpt.wait()
+        return {"step": step, "state": state, "metrics": self.metrics_log}
+
+    # -- elastic ------------------------------------------------------------
+
+    def resize(self, new_mesh) -> None:
+        """Elastic re-mesh: checkpoint live state, rebuild step for the new
+        mesh, reshard state onto it."""
+        step, state = self._restore_or_init()
+        self.mesh = new_mesh
+        self._build()
+        # state arrays carry old shardings; recommit onto the new mesh
+        host = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), state)
+        self.ckpt.save(step, host, blocking=True)

@@ -1,0 +1,76 @@
+"""Checkpoint store: roundtrip, atomicity, corruption handling, retention."""
+import json
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.store import (
+    CheckpointManager,
+    latest_step,
+    restore_checkpoint,
+    save_checkpoint,
+)
+
+
+@pytest.fixture
+def tree():
+    return {
+        "a": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+        "b": {"c": jnp.ones((2, 2), jnp.bfloat16) * 1.5, "d": jnp.asarray(7, jnp.int32)},
+    }
+
+
+def test_roundtrip_bitexact(tmp_path, tree):
+    save_checkpoint(str(tmp_path), 5, tree)
+    step, restored = restore_checkpoint(str(tmp_path), template=tree)
+    assert step == 5
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        assert a.dtype == np.asarray(b).dtype or str(a.dtype) == str(b.dtype)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_bfloat16_preserved(tmp_path):
+    t = {"w": (jnp.arange(7, dtype=jnp.float32) * 0.3).astype(jnp.bfloat16)}
+    save_checkpoint(str(tmp_path), 0, t)
+    _, r = restore_checkpoint(str(tmp_path), template=t)
+    assert np.asarray(r["w"]).dtype == jnp.bfloat16
+    np.testing.assert_array_equal(np.asarray(t["w"]).view(np.uint16),
+                                  np.asarray(r["w"]).view(np.uint16))
+
+
+def test_latest_skips_corrupt(tmp_path, tree):
+    save_checkpoint(str(tmp_path), 1, tree)
+    save_checkpoint(str(tmp_path), 2, tree)
+    # corrupt step 2's shard: latest must fall back to step 1
+    shard = os.path.join(str(tmp_path), "step_000000002", "shard_00000.ckpt")
+    with open(shard, "r+b") as f:
+        f.seek(10)
+        f.write(b"\x00\x00\x00\x00")
+    assert latest_step(str(tmp_path)) == 1
+
+
+def test_missing_manifest_invalid(tmp_path, tree):
+    save_checkpoint(str(tmp_path), 3, tree)
+    os.remove(os.path.join(str(tmp_path), "step_000000003", "MANIFEST.json"))
+    assert latest_step(str(tmp_path)) is None
+
+
+def test_manager_async_and_retention(tmp_path, tree):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, tree, blocking=False)
+    mgr.wait()
+    steps = sorted(int(n[5:]) for n in os.listdir(str(tmp_path)) if n.startswith("step_"))
+    assert steps == [3, 4]
+    got = mgr.restore_latest(tree)
+    assert got is not None and got[0] == 4
+
+
+def test_restore_template_structure(tmp_path, tree):
+    save_checkpoint(str(tmp_path), 0, tree)
+    _, r = restore_checkpoint(str(tmp_path), template=tree)
+    assert jax.tree.structure(r) == jax.tree.structure(tree)

@@ -1,0 +1,91 @@
+"""Serving correctness: prefill+decode must agree with the full forward for
+every architecture family (the cache/ring/state machinery is exact)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, get_smoke_config
+from repro.models import decode_step, forward_hidden, init_params, prefill
+from repro.models import lm
+
+KEY = jax.random.PRNGKey(0)
+B, T = 2, 32
+
+
+def _f32(cfg):
+    return dataclasses.replace(cfg, dtype="float32")
+
+
+@pytest.mark.parametrize(
+    "arch",
+    ["granite-3-8b", "grok-1-314b", "llama4-maverick-400b-a17b", "recurrentgemma-2b",
+     "xlstm-1.3b", "qwen2.5-32b", "musicgen-large", "internvl2-2b"],
+)
+def test_decode_matches_full_forward(arch):
+    cfg = _f32(get_smoke_config(arch))
+    if cfg.family == "moe":  # avoid capacity drops for exactness
+        cfg = dataclasses.replace(cfg, capacity_factor=float(cfg.n_experts))
+    params = init_params(KEY, cfg)
+
+    if cfg.frontend == "frames":
+        embeds = jax.random.normal(KEY, (B, T + 1, cfg.d_model), jnp.float32)
+        full_batch = {"embeds": embeds}
+        pre_batch = {"embeds": embeds[:, :T]}
+        dec_batch = {"embeds": embeds[:, T : T + 1]}
+    elif cfg.frontend == "patch":
+        p = cfg.n_frontend_tokens
+        toks = jax.random.randint(KEY, (B, T + 1 - p), 0, cfg.vocab_size)
+        patches = jax.random.normal(KEY, (B, p, cfg.d_model), jnp.float32)
+        full_batch = {"tokens": toks, "patch_embeds": patches}
+        pre_batch = {"tokens": toks[:, :-1], "patch_embeds": patches}
+        dec_batch = {"tokens": toks[:, -1:]}
+    else:
+        toks = jax.random.randint(KEY, (B, T + 1), 0, cfg.vocab_size)
+        full_batch = {"tokens": toks}
+        pre_batch = {"tokens": toks[:, :T]}
+        dec_batch = {"tokens": toks[:, T:]}
+
+    h_full, _ = forward_hidden(params, full_batch, cfg, mode="train")
+    logits_full = lm.logits_last(params, h_full[:, -1:], cfg)
+
+    cache, _ = prefill(params, pre_batch, cfg, cache_len=T + 1)
+    logits_dec, new_cache = decode_step(params, cache, dec_batch, T, cfg)
+
+    err = float(jnp.abs(logits_full - logits_dec).max())
+    scale = float(jnp.abs(logits_full).max()) + 1e-6
+    assert err < 3e-2 * scale + 1e-3, (arch, err, scale)
+    # cache structure preserved
+    assert jax.tree.structure(cache) == jax.tree.structure(new_cache)
+
+
+def test_two_step_decode_chain():
+    """Decode twice; compare against full forward at T+2."""
+    cfg = _f32(get_smoke_config("granite-3-8b"))
+    params = init_params(KEY, cfg)
+    toks = jax.random.randint(KEY, (B, T + 2), 0, cfg.vocab_size)
+    h_full, _ = forward_hidden(params, {"tokens": toks}, cfg, mode="train")
+    want = lm.logits_last(params, h_full[:, -1:], cfg)
+
+    cache, _ = prefill(params, {"tokens": toks[:, :T]}, cfg, cache_len=T + 2)
+    _, cache = decode_step(params, cache, {"tokens": toks[:, T : T + 1]}, T, cfg)
+    got, _ = decode_step(params, cache, {"tokens": toks[:, T + 1 :]}, T + 1, cfg)
+    err = float(jnp.abs(want - got).max())
+    assert err < 3e-2 * float(jnp.abs(want).max()) + 1e-3
+
+
+def test_griffin_ring_buffer_wraps():
+    """Decode far past the window: ring cache slots must stay coherent."""
+    cfg = _f32(get_smoke_config("recurrentgemma-2b"))
+    w = cfg.local_window
+    params = init_params(KEY, cfg)
+    total = w + 8  # forces wraparound
+    toks = jax.random.randint(KEY, (B, total + 1), 0, cfg.vocab_size)
+    h_full, _ = forward_hidden(params, {"tokens": toks}, cfg, mode="train")
+    want = lm.logits_last(params, h_full[:, -1:], cfg)
+
+    cache, _ = prefill(params, {"tokens": toks[:, :total]}, cfg, cache_len=total + 1)
+    got, _ = decode_step(params, cache, {"tokens": toks[:, total:]}, total, cfg)
+    err = float(jnp.abs(want - got).max())
+    assert err < 3e-2 * float(jnp.abs(want).max()) + 1e-3

@@ -1,0 +1,115 @@
+"""MoE dispatch invariants + virtual-expert equivalence."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import ModelConfig, init_params, train_loss
+from repro.models.hooks import MatmulHook
+from repro.models.moe import make_dispatch, moe_block, router_topk
+
+KEY = jax.random.PRNGKey(3)
+
+
+def test_topk_weights_normalized():
+    logits = jax.random.normal(KEY, (4, 16, 8))
+    gates, ids = router_topk(logits, 2)
+    np.testing.assert_allclose(np.asarray(gates.sum(-1)), 1.0, rtol=1e-5)
+    assert int(ids.max()) < 8
+
+
+def test_dispatch_capacity_respected():
+    g, s, e, c, k = 2, 64, 4, 8, 2
+    logits = jax.random.normal(KEY, (g, s, e))
+    gates, ids = router_topk(logits, k)
+    dispatch, combine = make_dispatch(ids, gates, e, c)
+    # each (expert, slot) holds at most one token
+    per_slot = np.asarray(dispatch.sum(axis=1))  # (g, e, c)
+    assert per_slot.max() <= 1.0
+    # each token occupies at most k slots
+    per_token = np.asarray(dispatch.sum(axis=(2, 3)))  # (g, s)
+    assert per_token.max() <= k
+    # combine weights of surviving tokens sum to <= 1
+    w_tok = np.asarray(combine.sum(axis=(2, 3)))
+    assert w_tok.max() <= 1.0 + 1e-5
+
+
+def test_high_capacity_drops_nothing():
+    g, s, e, k = 1, 32, 4, 2
+    logits = jax.random.normal(KEY, (g, s, e))
+    gates, ids = router_topk(logits, k)
+    dispatch, _ = make_dispatch(ids, gates, e, capacity=s * k)
+    per_token = np.asarray(dispatch.sum(axis=(2, 3)))
+    np.testing.assert_allclose(per_token, k)
+
+
+def _moe_cfg(**kw):
+    base = dict(
+        name="m", family="moe", n_layers=2, d_model=32, n_heads=4, n_kv_heads=4,
+        d_ff=64, vocab_size=64, n_experts=4, top_k=2, moe_every=1,
+        capacity_factor=8.0, moe_group_size=64, attn_q_chunk=16,
+        attn_kv_chunk=16, loss_chunk=16, dtype="float32",
+    )
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def test_moe_block_matches_dense_reference():
+    """With capacity high enough to drop nothing, the dispatch/combine path
+    equals explicitly computing every expert and mixing with gate weights."""
+    cfg = _moe_cfg()
+    d, e, ff = cfg.d_model, cfg.n_experts, cfg.d_ff
+    keys = jax.random.split(KEY, 5)
+    p = {
+        "router": jax.random.normal(keys[0], (d, e)) * 0.5,
+        "w_gate": jax.random.normal(keys[1], (e, d, ff)) / np.sqrt(d),
+        "w_up": jax.random.normal(keys[2], (e, d, ff)) / np.sqrt(d),
+        "w_down": jax.random.normal(keys[3], (e, ff, d)) / np.sqrt(ff),
+    }
+    x = jax.random.normal(keys[4], (2, 16, d))
+    got = moe_block(x, p, cfg, MatmulHook())
+
+    logits = jnp.einsum("btd,de->bte", x, p["router"])
+    gates, ids = router_topk(logits, cfg.top_k)
+    h = jax.nn.silu(jnp.einsum("btd,edf->ebtf", x, p["w_gate"])) * jnp.einsum(
+        "btd,edf->ebtf", x, p["w_up"]
+    )
+    ye = jnp.einsum("ebtf,efd->ebtd", h, p["w_down"])
+    oh = jax.nn.one_hot(ids, e)  # (b,t,k,e)
+    w = jnp.einsum("btke,btk->ebt", oh, gates)
+    want = jnp.einsum("ebtd,ebt->btd", ye, w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-4)
+
+
+def test_virtual_expert_split_equivalence():
+    """moe_ff_split=2 must be numerically identical given split weights."""
+    cfg1 = _moe_cfg()
+    cfg2 = dataclasses.replace(cfg1, moe_ff_split=2)
+    p1 = init_params(KEY, cfg1)
+    moe = p1["blocks"]["moe"]
+
+    def split_ff(w):  # (L, E, d, ff) -> (L, 2E, d, ff/2)
+        L, E, d, ff = w.shape
+        w2 = w.reshape(L, E, d, 2, ff // 2)
+        return jnp.moveaxis(w2, 3, 2).reshape(L, 2 * E, d, ff // 2)
+
+    def split_in(w):  # (L, E, ff, d) -> (L, 2E, ff/2, d)
+        L, E, ff, d = w.shape
+        return w.reshape(L, 2 * E, ff // 2, d)
+
+    p2 = dict(p1)
+    p2["blocks"] = dict(p1["blocks"])
+    p2["blocks"]["moe"] = {
+        "router": moe["router"],
+        "w_gate": split_ff(moe["w_gate"]),
+        "w_up": split_ff(moe["w_up"]),
+        "w_down": split_in(moe["w_down"]),
+    }
+    batch = {
+        "tokens": jax.random.randint(KEY, (2, 32), 0, cfg1.vocab_size),
+        "labels": jnp.ones((2, 32), jnp.int32),
+    }
+    l1, l2 = train_loss(p1, batch, cfg1), train_loss(p2, batch, cfg2)
+    assert abs(float(l1) - float(l2)) < 1e-4

@@ -1,0 +1,131 @@
+"""Noise models (Eqs. 3-5, 9-11): moments, scaling laws, analytic variance."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import noise as noise_lib
+from repro.core import AnalogConfig, SiteQuant, analog_dot
+from repro.quant import calibrate_minmax
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _draws(cfg, x, w, energy, n=256, sq=None):
+    clean = x @ w
+
+    def one(k):
+        return analog_dot(x, w, cfg=cfg, energy=jnp.asarray(energy), key=k, sq=sq)
+
+    ys = jax.vmap(one)(jax.random.split(KEY, n))
+    return ys - clean[None]
+
+
+@pytest.fixture(scope="module")
+def xw():
+    x = jax.random.normal(KEY, (16, 64))
+    w = jax.random.normal(jax.random.fold_in(KEY, 1), (64, 24)) * 0.2
+    return x, w
+
+
+def test_inv_sqrt_energy_scaling_all_kinds(xw):
+    """Noise std ~ 1/sqrt(E) — the redundant-coding law (paper §IV)."""
+    x, w = xw
+    sq = SiteQuant(
+        wqp=calibrate_minmax(w, channel_axis=1),
+        xqp=calibrate_minmax(x),
+        oqp=None,
+    )
+    for cfg in (
+        AnalogConfig.shot(),
+        AnalogConfig.thermal(0.02, out_bits=None),
+        AnalogConfig.weight(0.02, out_bits=None),
+    ):
+        s1 = float(jnp.std(_draws(cfg, x, w, 2.0, sq=sq)))
+        s4 = float(jnp.std(_draws(cfg, x, w, 8.0, sq=sq)))
+        assert s1 / s4 == pytest.approx(2.0, rel=0.15), cfg.noise.kind
+
+
+def test_shot_noise_matches_eq11_analytically(xw):
+    x, w = xw
+    cfg = AnalogConfig.shot()
+    e = 10.0
+    err = _draws(cfg, x, w, e, n=512)
+    emp_std = np.asarray(jnp.std(err, axis=0))  # (16, 24)
+    photons = e / noise_lib.PHOTON_ENERGY_AJ
+    pred = (
+        np.linalg.norm(np.asarray(w), axis=0)[None, :]
+        * np.linalg.norm(np.asarray(x), axis=1)[:, None]
+        / np.sqrt(64 * photons)
+    )
+    np.testing.assert_allclose(emp_std, pred, rtol=0.25)
+
+
+def test_thermal_noise_matches_eq9(xw):
+    x, w = xw
+    sq = SiteQuant(
+        wqp=calibrate_minmax(w, channel_axis=1), xqp=calibrate_minmax(x), oqp=None
+    )
+    cfg = AnalogConfig.thermal(0.01, out_bits=None)
+    e = 4.0
+    err = _draws(cfg, x, w, e, n=512, sq=sq)
+    emp = float(jnp.std(err))
+    w_rng = np.asarray(sq.wqp.x_max - sq.wqp.x_min).mean()
+    x_rng = float(sq.xqp.x_max - sq.xqp.x_min)
+    pred = np.sqrt(64) * w_rng * x_rng * 0.01 / np.sqrt(e)
+    assert emp == pytest.approx(pred, rel=0.2)
+
+
+def test_weight_noise_scales_with_input_norm(xw):
+    """Eq. 10: output variance = (r sigma/sqrt(E))^2 ||x||^2."""
+    x, w = xw
+    sq = SiteQuant(
+        wqp=calibrate_minmax(w, channel_axis=1), xqp=calibrate_minmax(x), oqp=None
+    )
+    cfg = AnalogConfig.weight(0.05, out_bits=None)
+    err = _draws(cfg, x, w, 4.0, n=512, sq=sq)
+    emp_std_per_row = np.asarray(jnp.std(err, axis=(0, 2)))  # (16,)
+    x_norms = np.linalg.norm(np.asarray(x), axis=1)
+    corr = np.corrcoef(emp_std_per_row, x_norms)[0, 1]
+    assert corr > 0.98
+
+
+def test_per_channel_energy_reduces_noise_only_there(xw):
+    x, w = xw
+    cfg = AnalogConfig.shot(granularity="per_channel")
+    e = jnp.full((24,), 2.0).at[0].set(200.0)
+    err = _draws(cfg, x, w, e, n=256)
+    stds = np.asarray(jnp.std(err, axis=(0, 1)))
+    assert stds[0] < stds[1:].min() / 3
+
+
+def test_discrete_energy_snaps_to_photon_quanta(xw):
+    x, w = xw
+    cfg = AnalogConfig.shot(discrete_energy=True)
+    # 0.2 aJ with quantum 0.128 aJ -> snaps to 0.256 (2 photons)
+    y1 = analog_dot(x, w, cfg=cfg, energy=jnp.asarray(0.2), key=KEY)
+    cfg2 = AnalogConfig.shot()
+    y2 = analog_dot(x, w, cfg=cfg2, energy=jnp.asarray(2 * noise_lib.PHOTON_ENERGY_AJ), key=KEY)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(e=st.floats(min_value=0.5, max_value=100.0))
+def test_noise_variance_analytic_positive(e):
+    var = noise_lib.noise_variance_for_layer(
+        noise_lib.NoiseSpec(kind="thermal", sigma=0.01),
+        n_macs=64,
+        energy=jnp.asarray(e),
+        w_range=jnp.asarray(1.0),
+        x_range=jnp.asarray(2.0),
+    )
+    assert float(var) > 0
+    var2 = noise_lib.noise_variance_for_layer(
+        noise_lib.NoiseSpec(kind="thermal", sigma=0.01),
+        n_macs=64,
+        energy=jnp.asarray(4 * e),
+        w_range=jnp.asarray(1.0),
+        x_range=jnp.asarray(2.0),
+    )
+    assert float(var / var2) == pytest.approx(4.0, rel=1e-3)

@@ -1,0 +1,69 @@
+"""Noise-bits analysis (paper §III): Eq. 7/8 and the Table-I equivalence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import noise_bits, noise_var_from_bits, thermal_noise_bits
+from repro.core.precision import empirical_noise_var
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    rng=st.floats(min_value=1e-2, max_value=1e3),
+    bits=st.floats(min_value=1.0, max_value=12.0),
+)
+def test_bits_variance_inverse_roundtrip(rng, bits):
+    var = noise_var_from_bits(rng, bits)
+    b = noise_bits(rng, var)
+    assert float(b) == pytest.approx(bits, rel=1e-4)
+
+
+def test_noise_bits_monotonic_in_noise():
+    rng = 4.0
+    bits = [float(noise_bits(rng, v)) for v in (1e-6, 1e-4, 1e-2, 1.0)]
+    assert bits == sorted(bits, reverse=True)
+
+
+def test_eq8_matches_generic_formula():
+    """Eq. 8 == Eq. 7 applied to the Eq. 3 thermal variance."""
+    n, wr, xr, sig, e, out_rng = 256, 1.5, 2.5, 0.01, 4.0, 3.0
+    var = n * (wr * xr * sig) ** 2 / e
+    b_generic = noise_bits(out_rng, var)
+    b_explicit = thermal_noise_bits(out_rng, n, wr, xr, sig, e)
+    assert float(b_generic) == pytest.approx(float(b_explicit), rel=1e-5)
+
+
+def test_noisy_accuracy_matches_equivalent_bits():
+    """Table-I mechanism at unit scale: evaluating a linear layer under
+    gaussian noise of variance V ~= quantizing its output to B_eps(V) bits
+    (measured as MSE agreement within 2x)."""
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (2048, 32))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (32, 8)) * 0.3
+    y = x @ w
+    out_rng = float(y.max() - y.min())
+    for target_bits in (3.0, 5.0, 7.0):
+        var = float(noise_var_from_bits(out_rng, target_bits))
+        noisy = y + jax.random.normal(jax.random.fold_in(key, 2), y.shape) * np.sqrt(var)
+        # quantize to the equivalent number of bits
+        from repro.quant import QuantParams, fake_quant
+
+        qp = QuantParams(
+            x_min=jnp.asarray(float(y.min())),
+            x_max=jnp.asarray(float(y.max())),
+            bits=target_bits,
+        )
+        quantized = fake_quant(y, qp)
+        mse_noise = float(jnp.mean((noisy - y) ** 2))
+        mse_quant = float(jnp.mean((quantized - y) ** 2))
+        ratio = mse_noise / mse_quant
+        assert 1 / 2.5 < ratio < 2.5, (target_bits, ratio)
+
+
+def test_empirical_noise_var():
+    key = jax.random.PRNGKey(3)
+    clean = jnp.zeros((4096,))
+    noisy = clean + 0.3 * jax.random.normal(key, clean.shape)
+    assert float(empirical_noise_var(clean, noisy)) == pytest.approx(0.09, rel=0.1)

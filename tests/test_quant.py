@@ -1,0 +1,93 @@
+"""Affine quantization: unit + property tests (paper §II-B, Eq. 2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.quant import (
+    QuantParams,
+    calibrate_minmax,
+    calibrate_percentile,
+    dequantize,
+    fake_quant,
+    quantize,
+    ste_round,
+)
+
+
+def test_roundtrip_error_bounded_by_half_delta():
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (512,)) * 3.0
+    qp = calibrate_minmax(x, bits=8)
+    err = jnp.abs(fake_quant(x, qp) - x)
+    assert float(err.max()) <= float(qp.delta) / 2 + 1e-6
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    bits=st.floats(min_value=2.0, max_value=8.0),
+    scale=st.floats(min_value=1e-2, max_value=1e3),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_quant_property_roundtrip(bits, scale, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=64) * scale, jnp.float32)
+    qp = calibrate_minmax(x, bits=bits)
+    y = fake_quant(x, qp)
+    # inside the calibrated range, error <= delta/2
+    assert float(jnp.abs(y - x).max()) <= float(qp.delta) / 2 + 1e-4 * scale
+    # idempotent
+    y2 = fake_quant(y, qp)
+    np.testing.assert_allclose(np.asarray(y2), np.asarray(y), rtol=1e-6, atol=1e-6)
+
+
+def test_fractional_bits_bins():
+    """Paper footnote 1: 4.644 bits -> 25 bins (rounding up)."""
+    qp = QuantParams(x_min=jnp.zeros(()), x_max=jnp.ones(()), bits=4.644)
+    assert int(qp.n_bins) == 25
+
+
+def test_codes_are_integers_in_range():
+    x = jnp.linspace(-2, 5, 101)
+    qp = calibrate_minmax(x, bits=4)
+    codes = quantize(x, qp)
+    assert float(jnp.min(codes)) >= 0
+    assert float(jnp.max(codes)) <= float(qp.n_bins)
+    np.testing.assert_allclose(np.asarray(codes), np.round(np.asarray(codes)))
+    # dequantize stays within range bounds (up to one delta)
+    y = dequantize(codes, qp)
+    assert float(y.min()) >= float(x.min()) - float(qp.delta)
+    assert float(y.max()) <= float(x.max()) + float(qp.delta)
+
+
+def test_per_channel_calibration_shapes():
+    x = jnp.stack([jnp.linspace(-1, 1, 32), jnp.linspace(-5, 5, 32)], axis=1)
+    qp = calibrate_minmax(x, bits=8, channel_axis=1)
+    assert qp.x_max.shape == (1, 2)
+    # channel 1 has 5x the range
+    ratio = float(qp.delta[0, 1] / qp.delta[0, 0])
+    assert 4.5 < ratio < 5.5
+
+
+def test_percentile_clipping_shrinks_range():
+    key = jax.random.PRNGKey(1)
+    x = jax.random.normal(key, (10000,))
+    x = x.at[0].set(100.0)  # outlier
+    qp_mm = calibrate_minmax(x)
+    qp_pct = calibrate_percentile(x, percentile=99.9)
+    assert float(qp_pct.x_max) < float(qp_mm.x_max) / 10
+
+
+def test_ste_gradient_is_identity():
+    g = jax.grad(lambda x: jnp.sum(ste_round(x * 3.0)))(jnp.ones((4,)))
+    np.testing.assert_allclose(np.asarray(g), 3.0)
+
+
+def test_fake_quant_gradient_flows():
+    x = jnp.linspace(-1, 1, 16)
+    qp = calibrate_minmax(x, bits=4)
+    g = jax.grad(lambda v: jnp.sum(fake_quant(v, qp)))(x)
+    # STE: gradient 1 strictly inside the clip range (ties at the exact
+    # endpoints get jnp.maximum's 0.5 subgradient)
+    assert float(jnp.abs(g[1:-1] - 1.0).max()) < 1e-6

@@ -1,0 +1,88 @@
+"""xLSTM / Griffin internals: chunkwise == step-by-step recurrence,
+associative scan == sequential reference."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.griffin import causal_conv1d, rg_lru_scan
+from repro.models.xlstm import mlstm_chunkwise, mlstm_decode
+
+KEY = jax.random.PRNGKey(5)
+
+
+def test_mlstm_chunkwise_equals_stepwise():
+    b, t, h, d = 2, 32, 2, 8
+    q = jax.random.normal(KEY, (b, t, h, d))
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (b, t, h, d))
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (b, t, h, d))
+    li = jax.random.normal(jax.random.fold_in(KEY, 3), (b, t, h)) * 0.5
+    lf = jax.nn.log_sigmoid(jax.random.normal(jax.random.fold_in(KEY, 4), (b, t, h)) + 1.0)
+
+    for chunk in (4, 8, 16, 32):
+        out_c, st_c = mlstm_chunkwise(q, k, v, li, lf, chunk=chunk)
+        # stepwise reference via mlstm_decode
+        st = None
+        outs = []
+        for i in range(t):
+            o, st = mlstm_decode(
+                q[:, i : i + 1], k[:, i : i + 1], v[:, i : i + 1],
+                li[:, i : i + 1], lf[:, i : i + 1],
+                st or (jnp.zeros((b, h, d, d)), jnp.zeros((b, h, d)),
+                       jnp.full((b, h), -1e30)),
+            )
+            outs.append(o)
+        out_s = jnp.concatenate(outs, axis=1)
+        np.testing.assert_allclose(
+            np.asarray(out_c), np.asarray(out_s), rtol=2e-4, atol=2e-4,
+        )
+        # final states agree
+        for a, b_ in zip(st_c[:2], st[:2]):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b_), rtol=2e-4, atol=2e-4)
+
+
+def test_mlstm_state_carry_across_segments():
+    b, t, h, d = 1, 16, 2, 4
+    q = jax.random.normal(KEY, (b, t, h, d))
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (b, t, h, d))
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (b, t, h, d))
+    li = jnp.zeros((b, t, h))
+    lf = jnp.full((b, t, h), -0.2)
+    full, _ = mlstm_chunkwise(q, k, v, li, lf, chunk=4)
+    first, st = mlstm_chunkwise(q[:, :8], k[:, :8], v[:, :8], li[:, :8], lf[:, :8], chunk=4)
+    second, _ = mlstm_chunkwise(
+        q[:, 8:], k[:, 8:], v[:, 8:], li[:, 8:], lf[:, 8:], chunk=4, state=st
+    )
+    np.testing.assert_allclose(
+        np.asarray(jnp.concatenate([first, second], 1)), np.asarray(full),
+        rtol=2e-4, atol=2e-4,
+    )
+
+
+def test_rg_lru_scan_equals_sequential():
+    b, t, r = 2, 24, 8
+    a = jax.nn.sigmoid(jax.random.normal(KEY, (b, t, r)))
+    x = jax.random.normal(jax.random.fold_in(KEY, 1), (b, t, r))
+    h0 = jax.random.normal(jax.random.fold_in(KEY, 2), (b, r))
+    got = rg_lru_scan(a, x, h0)
+    h = h0
+    seq = []
+    for i in range(t):
+        h = a[:, i] * h + x[:, i]
+        seq.append(h)
+    want = jnp.stack(seq, axis=1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_causal_conv_state_continuity():
+    b, t, r, cw = 2, 16, 4, 4
+    w = jax.random.normal(KEY, (cw, r))
+    bias = jnp.zeros((r,))
+    x = jax.random.normal(jax.random.fold_in(KEY, 1), (b, t, r))
+    full, _ = causal_conv1d(x, w, bias)
+    first, st = causal_conv1d(x[:, :10], w, bias)
+    second, _ = causal_conv1d(x[:, 10:], w, bias, state=st)
+    np.testing.assert_allclose(
+        np.asarray(jnp.concatenate([first, second], 1)), np.asarray(full),
+        rtol=1e-5, atol=1e-5,
+    )

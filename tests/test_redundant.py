@@ -1,0 +1,72 @@
+"""Redundant coding (paper §IV, Fig. 3): K-repeat averaging laws."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import AnalogConfig
+from repro.core.redundant import discrete_levels, spatial_averaged_dot, time_averaged_dot
+from repro.core.analog import analog_dot
+
+KEY = jax.random.PRNGKey(7)
+
+
+@pytest.fixture(scope="module")
+def xw():
+    x = jax.random.normal(KEY, (8, 48))
+    w = jax.random.normal(jax.random.fold_in(KEY, 1), (48, 16)) * 0.2
+    return x, w
+
+
+def _std(fn, n=192):
+    ys = jax.vmap(fn)(jax.random.split(KEY, n))
+    return float(jnp.std(ys - jnp.mean(ys, axis=0)[None]))
+
+
+def test_time_averaging_reduces_noise_sqrt_k(xw):
+    """Fig. 3a: K clock cycles -> noise / sqrt(K)."""
+    x, w = xw
+    cfg = AnalogConfig.shot()
+    e0 = 1.0
+    s1 = _std(lambda k: time_averaged_dot(x, w, cfg=cfg, base_energy=jnp.asarray(e0), key=k, k_repeats=1))
+    s4 = _std(lambda k: time_averaged_dot(x, w, cfg=cfg, base_energy=jnp.asarray(e0), key=k, k_repeats=4))
+    assert s1 / s4 == pytest.approx(2.0, rel=0.2)
+
+
+def test_time_averaging_equals_single_high_energy_draw(xw):
+    """K repeats at E0 is statistically identical to one draw at K*E0 —
+    the identity that justifies the continuous-E parameterization."""
+    x, w = xw
+    cfg = AnalogConfig.shot()
+    s_rep = _std(lambda k: time_averaged_dot(x, w, cfg=cfg, base_energy=jnp.asarray(2.0), key=k, k_repeats=8))
+    s_one = _std(lambda k: analog_dot(x, w, cfg=cfg, energy=jnp.asarray(16.0), key=k))
+    assert s_rep == pytest.approx(s_one, rel=0.15)
+
+
+def test_spatial_averaging_weight_noise(xw):
+    """Fig. 3b: K spatial copies of W with independent device noise."""
+    x, w = xw
+    cfg = AnalogConfig.weight(0.1, out_bits=None, weight_bits=None, act_bits=None)
+    s1 = _std(lambda k: spatial_averaged_dot(x, w, cfg=cfg, base_energy=jnp.asarray(1.0), key=k, k_repeats=1))
+    s4 = _std(lambda k: spatial_averaged_dot(x, w, cfg=cfg, base_energy=jnp.asarray(1.0), key=k, k_repeats=4))
+    assert s1 / s4 == pytest.approx(2.0, rel=0.25)
+
+
+def test_spatial_averaging_unbiased(xw):
+    x, w = xw
+    cfg = AnalogConfig.weight(0.05, out_bits=None, weight_bits=None, act_bits=None)
+    ys = jax.vmap(
+        lambda k: spatial_averaged_dot(x, w, cfg=cfg, base_energy=jnp.asarray(1.0), key=k, k_repeats=4)
+    )(jax.random.split(KEY, 256))
+    np.testing.assert_allclose(
+        np.asarray(jnp.mean(ys, axis=0)), np.asarray(x @ w), atol=0.05
+    )
+
+
+def test_discrete_levels_ste():
+    e = jnp.asarray([0.3, 1.2, 2.7])
+    q = discrete_levels(e, 1.0)
+    np.testing.assert_allclose(np.asarray(q), [1.0, 1.0, 3.0])
+    # STE gradient passes through
+    g = jax.grad(lambda v: jnp.sum(discrete_levels(v, 1.0)))(e)
+    np.testing.assert_allclose(np.asarray(g), 1.0)
