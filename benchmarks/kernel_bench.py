@@ -1,17 +1,32 @@
-"""Microbenchmark: fused analog-matmul kernel vs unfused jnp composition.
+"""Microbenchmark: fused K-repeat analog matmul vs the unfused composition.
 
-On CPU the Pallas kernel runs in interpret mode (a correctness vehicle, not
-a timing proxy for TPU), so the wall-clock comparison that matters here is
-jnp analog path vs plain matmul (the analog-simulation overhead XLA pays),
-plus the ANALYTIC HBM-traffic comparison that motivates the fusion on TPU:
+Sweeps (shape x K) over the dynamic-precision repeat count K (paper §IV).
+Three execution forms per cell:
 
-  unfused: read x, w; write y; write+read noise tensor; read+write y (add);
-           read+write y (requant)            = xw + 6*|y| HBM touches
-  fused:   read x, w; write y (noise + requant in-register)
-                                             = xw + 1*|y|
+  explicit — ``time_averaged_dot_explicit``: K full analog matmuls + K
+             HBM-resident (M, N) noise tensors, then a mean. What the
+             simulation cost USED to be.
+  fused    — the model hot path: one ``analog_dot`` with ``n_repeats=K``
+             (on CPU the jnp single-draw-at-K*E equivalent; on TPU the
+             fused Pallas kernel).
+  kernel   — the Pallas kernel itself. On CPU this runs in interpret mode
+             (a correctness vehicle, not a timing proxy for TPU), so it is
+             timed with few iters and reported separately.
+
+ANALYTIC HBM traffic per cell (f32 bytes; the fusion argument on TPU):
+
+  unfused: per draw — read x, w; write y; write+read noise; read+write y
+           (add); read+write y (requant) = xw + 6*|y| touches, times K
+           draws, plus the K-way mean ((K+1)*|y|).
+  fused:   read x, w once; write y once — noise generated and averaged
+           in-register, INDEPENDENT of K.
+
+Persisted via ``cache_json`` so the BENCH trajectory records every run.
+``--smoke`` runs a tiny sweep for CI.
 """
 from __future__ import annotations
 
+import argparse
 import time
 
 import jax
@@ -19,9 +34,26 @@ import jax.numpy as jnp
 
 from benchmarks.common import cache_json
 from repro.core import AnalogConfig, analog_dot
+from repro.core.redundant import time_averaged_dot_explicit
 from repro.kernels import analog_matmul
 
-M, K, N = 512, 512, 512
+SHAPES = [(256, 256, 256), (512, 512, 512), (384, 640, 512)]
+K_REPEATS = [1, 4, 16]
+SMOKE_SHAPES = [(128, 128, 128)]
+SMOKE_K_REPEATS = [1, 4]
+
+
+def analytic_traffic(m: int, k: int, n: int, k_repeats: int) -> dict:
+    """Analytic HBM byte counts (f32) for the unfused vs fused K-repeat op."""
+    bytes_xw = (m * k + k * n) * 4
+    bytes_y = m * n * 4
+    unfused = k_repeats * (bytes_xw + 6 * bytes_y) + (k_repeats + 1) * bytes_y
+    fused = bytes_xw + bytes_y  # one x/w read + one y write, regardless of K
+    return {
+        "hbm_bytes_unfused": unfused,
+        "hbm_bytes_fused": fused,
+        "hbm_traffic_saving_x": unfused / fused,
+    }
 
 
 def _time(fn, *args, iters=20):
@@ -33,35 +65,99 @@ def _time(fn, *args, iters=20):
     return (time.perf_counter() - t0) / iters * 1e6  # us
 
 
-@cache_json("kernel_bench")
-def kernel_bench():
+def _sweep(shapes, k_repeats, iters, kernel_iters):
     key = jax.random.PRNGKey(0)
-    x = jax.random.normal(key, (M, K))
-    w = jax.random.normal(jax.random.fold_in(key, 1), (K, N)) * 0.1
     cfg = AnalogConfig.shot()
     e = jnp.asarray(10.0)
-
-    plain = jax.jit(lambda a, b: a @ b)
-    analog_jnp = jax.jit(lambda a, b, k: analog_dot(a, b, cfg=cfg, energy=e, key=k))
-    kernel = jax.jit(
-        lambda a, b, k: analog_matmul(a, b, energy=e, key=k, cfg=cfg, block=(256, 256, 256))
+    rows = []
+    for m, k, n in shapes:
+        x = jax.random.normal(key, (m, k))
+        w = jax.random.normal(jax.random.fold_in(key, 1), (k, n)) * 0.1
+        t_plain = _time(jax.jit(lambda a, b: a @ b), x, w, iters=iters)
+        for r in k_repeats:
+            explicit = jax.jit(
+                lambda a, b, kk, r=r: time_averaged_dot_explicit(
+                    a, b, cfg=cfg, base_energy=e, key=kk, k_repeats=r
+                )
+            )
+            fused = jax.jit(
+                lambda a, b, kk, r=r: analog_dot(
+                    a, b, cfg=cfg, energy=e, key=kk, n_repeats=r
+                )
+            )
+            row = {
+                "shape": [m, k, n],
+                "k_repeats": r,
+                "plain_matmul_us": t_plain,
+                "explicit_us": _time(explicit, x, w, key, iters=iters),
+                "fused_us": _time(fused, x, w, key, iters=iters),
+                **analytic_traffic(m, k, n, r),
+            }
+            row["speedup_x"] = row["explicit_us"] / row["fused_us"]
+            row["analog_overhead_x"] = row["fused_us"] / t_plain
+            # interpret-mode kernel timing is K-independent noise on CPU:
+            # record it once per shape, not per K
+            if kernel_iters and r == k_repeats[0]:
+                kern = jax.jit(
+                    lambda a, b, kk, r=r: analog_matmul(
+                        a, b, energy=e, key=kk, cfg=cfg, n_repeats=r,
+                        block=(min(256, m), min(256, n), min(256, k)),
+                    )
+                )
+                row["kernel_interpret_us"] = _time(kern, x, w, key, iters=kernel_iters)
+            rows.append(row)
+    # headline rows for the CSV trajectory: the biggest (MACs) shape, with
+    # analog_overhead_x defined at K=1 (fused single draw vs plain matmul,
+    # the pre-sweep definition) and speedup/saving at the largest K.
+    big = max(rows, key=lambda r: (r["shape"][0] * r["shape"][1] * r["shape"][2], r["k_repeats"]))
+    base = next(
+        r for r in rows if r["shape"] == big["shape"] and r["k_repeats"] == k_repeats[0]
     )
-
-    t_plain = _time(plain, x, w)
-    t_jnp = _time(analog_jnp, x, w, key)
-    t_kernel = _time(kernel, x, w, key, iters=3)  # interpret mode: slow, correctness only
-
-    bytes_xw = (M * K + K * N) * 4
-    bytes_y = M * N * 4
-    unfused_traffic = bytes_xw + 6 * bytes_y
-    fused_traffic = bytes_xw + 1 * bytes_y
     return {
-        "shape": [M, K, N],
-        "plain_matmul_us": t_plain,
-        "analog_jnp_us": t_jnp,
-        "analog_overhead_x": t_jnp / t_plain,
-        "kernel_interpret_us": t_kernel,
-        "hbm_bytes_unfused": unfused_traffic,
-        "hbm_bytes_fused": fused_traffic,
-        "hbm_traffic_saving_x": unfused_traffic / fused_traffic,
+        "backend": jax.default_backend(),
+        "rows": rows,
+        "analog_overhead_x": base["analog_overhead_x"],
+        "hbm_traffic_saving_x": big["hbm_traffic_saving_x"],
+        "speedup_x": big["speedup_x"],
     }
+
+
+# "_sweep" cache names: the pre-sweep "kernel_bench" JSON had a different
+# (flat) schema; a fresh name keeps stale caches from crashing the readers.
+@cache_json("kernel_bench_sweep")
+def kernel_bench():
+    return _sweep(SHAPES, K_REPEATS, iters=20, kernel_iters=2)
+
+
+@cache_json("kernel_bench_sweep_smoke")
+def kernel_bench_smoke():
+    return _sweep(SMOKE_SHAPES, SMOKE_K_REPEATS, iters=3, kernel_iters=1)
+
+
+def _print_table(out):
+    hdr = (
+        f"{'shape':>16} {'K':>3} {'explicit_us':>12} {'fused_us':>10} "
+        f"{'speedup':>8} {'unfused_MB':>11} {'fused_MB':>9} {'saving':>7}"
+    )
+    print(f"backend={out['backend']}")
+    print(hdr)
+    for r in out["rows"]:
+        print(
+            f"{'x'.join(map(str, r['shape'])):>16} {r['k_repeats']:>3} "
+            f"{r['explicit_us']:>12.1f} {r['fused_us']:>10.1f} "
+            f"{r['speedup_x']:>7.1f}x {r['hbm_bytes_unfused'] / 1e6:>10.2f} "
+            f"{r['hbm_bytes_fused'] / 1e6:>8.2f} {r['hbm_traffic_saving_x']:>6.1f}x"
+        )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true", help="tiny sweep for CI")
+    ap.add_argument("--force", action="store_true", help="ignore cached JSON")
+    args = ap.parse_args()
+    fn = kernel_bench_smoke if args.smoke else kernel_bench
+    _print_table(fn(force=args.force))
+
+
+if __name__ == "__main__":
+    main()

@@ -65,7 +65,8 @@ def main() -> None:
             f"{k}:{v:.3f}" for k, v in o["allocations_aj_per_mac"].items()
         ))
     run("kernel_bench", kb.kernel_bench,
-        lambda o: f"analog_overhead={o['analog_overhead_x']:.2f}x "
+        lambda o: f"fused_speedup={o['speedup_x']:.2f}x "
+                  f"analog_overhead={o['analog_overhead_x']:.2f}x "
                   f"hbm_saving={o['hbm_traffic_saving_x']:.2f}x")
 
     if only is None or "roofline" in only:

@@ -48,7 +48,10 @@ def _trained_params():
         driver_cfg=DriverConfig(max_steps=80, ckpt_every=40, ckpt_async=False),
     )
     out = driver.run()
-    print(f"pre-trained to loss {out['metrics'][-1]['loss']:.3f}")
+    if out["metrics"]:  # empty when a cached checkpoint already hit max_steps
+        print(f"pre-trained to loss {out['metrics'][-1]['loss']:.3f}")
+    else:
+        print("restored pre-trained checkpoint")
     return out["state"]["params"]
 
 
@@ -58,6 +61,11 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--backend", default="auto", choices=["auto", "pallas", "jnp"],
+                    help="matmul backend (pallas = fused kernel; interpret on CPU)")
+    ap.add_argument("--repeats", type=int, default=1,
+                    help="dynamic-precision K: repeat each analog op K times "
+                         "and average (fused in-kernel on pallas)")
     args = ap.parse_args()
 
     key = jax.random.PRNGKey(0)
@@ -67,7 +75,10 @@ def main():
     prompts = jnp.asarray(markov_batch(data, 0)["tokens"])
 
     energies = init_energy_tree(CFG, args.energy)
-    analog = AnalogSpec(cfg=AnalogConfig.shot(), energies=energies, key=key)
+    analog = AnalogSpec(
+        cfg=AnalogConfig.shot(backend=args.backend), energies=energies, key=key,
+        n_repeats=args.repeats,
+    )
     cache_len = args.prompt_len + args.gen
 
     # --- analog and digital generations side by side ------------------------
@@ -90,8 +101,9 @@ def main():
 
     agree = float(jnp.mean(outs["digital"] == outs["analog"]))
     macs = energy_macs(CFG, 1)  # per generated token
-    e_tot = float(total_energy(energies, macs))
-    print(f"generated {args.gen} tokens x {args.batch} sequences")
+    e_tot = float(total_energy(energies, macs)) * args.repeats
+    print(f"generated {args.gen} tokens x {args.batch} sequences "
+          f"[backend={args.backend}, K={args.repeats}]")
     print(f"digital vs analog token agreement: {agree:.1%} at {args.energy} aJ/MAC")
     print(f"optical energy per generated token: {e_tot/1e6:.3f} microJ "
           f"({e_tot / PHOTON_ENERGY_AJ:.2e} photons)")

@@ -1,4 +1,4 @@
-"""Sharded, atomic, async checkpointing (msgpack + zstd).
+"""Sharded, atomic, async checkpointing (msgpack + zstd, zlib fallback).
 
 Layout: <dir>/step_<N>/shard_<i>.ckpt + MANIFEST (written last). A
 checkpoint is valid iff its MANIFEST exists and checksums match — writers
@@ -25,10 +25,35 @@ import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard
+import zlib
+
+try:
+    import zstandard
+except ImportError:  # optional dep: fall back to stdlib zlib
+    zstandard = None
 
 PyTree = Any
 _MANIFEST = "MANIFEST.json"
+_ZSTD_MAGIC = b"\x28\xb5\x2f\xfd"
+_CODEC = "zstd" if zstandard is not None else "zlib"
+
+
+def _compress(data: bytes) -> bytes:
+    if zstandard is not None:
+        return zstandard.ZstdCompressor(level=3).compress(data)
+    return zlib.compress(data, 6)
+
+
+def _decompress(blob: bytes) -> bytes:
+    """Codec is detected from the frame magic, so a checkpoint written with
+    either codec restores on any host that has the matching decoder."""
+    if blob[:4] == _ZSTD_MAGIC:
+        if zstandard is None:
+            raise RuntimeError(
+                "checkpoint is zstd-compressed but zstandard is not installed"
+            )
+        return zstandard.ZstdDecompressor().decompress(blob)
+    return zlib.decompress(blob)
 
 
 def _path_str(path) -> str:
@@ -81,9 +106,7 @@ def save_checkpoint(directory: str, step: int, tree: PyTree, *, shard_id: int = 
     stage = tempfile.mkdtemp(prefix=".stage_", dir=directory)
     try:
         rec = _tree_to_records(tree)
-        blob = zstandard.ZstdCompressor(level=3).compress(
-            msgpack.packb(rec, use_bin_type=True)
-        )
+        blob = _compress(msgpack.packb(rec, use_bin_type=True))
         shard_name = f"shard_{shard_id:05d}.ckpt"
         with open(os.path.join(stage, shard_name), "wb") as f:
             f.write(blob)
@@ -92,7 +115,7 @@ def save_checkpoint(directory: str, step: int, tree: PyTree, *, shard_id: int = 
         manifest = {
             "step": step,
             "shards": {shard_name: hashlib.sha256(blob).hexdigest()},
-            "format": "msgpack+zstd/v1",
+            "format": f"msgpack+{_CODEC}/v1",
         }
         with open(os.path.join(stage, _MANIFEST), "w") as f:
             json.dump(manifest, f)
@@ -146,11 +169,7 @@ def restore_checkpoint(
     rec: dict = {}
     for shard in manifest["shards"]:
         blob = open(os.path.join(ckpt_dir, shard), "rb").read()
-        rec.update(
-            msgpack.unpackb(
-                zstandard.ZstdDecompressor().decompress(blob), raw=False
-            )
-        )
+        rec.update(msgpack.unpackb(_decompress(blob), raw=False))
     leaves = _records_to_leaves(rec)
     if template is None:
         return step, leaves

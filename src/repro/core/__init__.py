@@ -4,7 +4,7 @@
   precision  - noise-bits analysis (Eqs. 6-8, Tables I/III)
   analog     - the analog_dot execution primitive + AnalogConfig
   energy     - energy accounting + Eq.-14 log-penalty
-  redundant  - explicit K-repeat redundant coding (Fig. 3)
+  redundant  - K-repeat redundant coding (Fig. 3): fused hot path + oracles
   calibrate  - Eq.-14 energy learning (frozen weights)
   search     - min-energy binary search (<2% degradation)
 """

@@ -25,6 +25,7 @@ import jax.numpy as jnp
 
 from repro.core import noise as noise_lib
 from repro.core.noise import NoiseSpec
+from repro.kernels.dispatch import fused_dot, resolve_backend
 from repro.quant.affine import QuantParams, fake_quant
 
 Array = jax.Array
@@ -49,7 +50,10 @@ class AnalogConfig:
     energy_quantum: float = dataclasses.field(
         metadata=dict(static=True), default=noise_lib.PHOTON_ENERGY_AJ
     )
-    #: route the fused Pallas kernel (TPU target; interpret=True on CPU).
+    #: execution backend: "auto" picks the fused Pallas kernel when shape /
+    #: platform permit (see kernels/dispatch.py), "pallas"/"jnp" force a path.
+    backend: str = dataclasses.field(metadata=dict(static=True), default="auto")
+    #: legacy alias for backend="pallas" (kept for existing configs/tests).
     use_kernel: bool = dataclasses.field(metadata=dict(static=True), default=False)
 
     def __post_init__(self):
@@ -57,6 +61,8 @@ class AnalogConfig:
             raise ValueError(f"bad mode {self.mode!r}")
         if self.granularity not in (PER_LAYER, PER_CHANNEL):
             raise ValueError(f"bad granularity {self.granularity!r}")
+        if self.backend not in ("auto", "pallas", "jnp"):
+            raise ValueError(f"bad backend {self.backend!r}")
 
     @classmethod
     def shot(cls, **kw) -> "AnalogConfig":
@@ -122,14 +128,22 @@ def analog_dot(
     key: Optional[jax.Array] = None,
     sq: Optional[SiteQuant] = None,
     precision=None,
+    n_repeats: int = 1,
 ) -> Array:
     """Noisy (or digital) matmul ``(..., K) @ (K, M) -> (..., M)``.
 
     ``energy``: scalar (per-layer) or (M,) per-channel energy/MAC; required in
     analog mode. ``key``: PRNG key for the noise draw; required in analog mode.
+    ``n_repeats``: static K-repeat redundancy (paper §IV): run the op K times
+    at ``energy`` each and average. On the Pallas backend the repeats are
+    averaged in-register inside the fused kernel (one matmul pass, one x/w
+    HBM read); on the jnp path the statistically identical single draw at
+    ``K * energy`` is used. Total energy spent is ``K * energy`` either way.
     """
     if x.shape[-1] != w.shape[0]:
         raise ValueError(f"contract mismatch {x.shape} @ {w.shape}")
+    if n_repeats < 1:
+        raise ValueError(f"n_repeats must be >= 1, got {n_repeats}")
     k_dim, m_dim = w.shape
     compute_dtype = jnp.float32 if cfg.mode == "analog" else x.dtype
 
@@ -145,10 +159,10 @@ def analog_dot(
 
     if energy is None or key is None:
         raise ValueError("analog mode requires energy and key")
-    if cfg.use_kernel:
-        from repro.kernels import ops as kernel_ops
-
-        return kernel_ops.analog_matmul(x, w, energy=energy, key=key, cfg=cfg, sq=sq)
+    if resolve_backend(cfg, x.shape, w.shape) == "pallas":
+        return fused_dot(
+            x, w, cfg=cfg, energy=energy, key=key, sq=sq, n_repeats=n_repeats
+        )
 
     x = x.astype(compute_dtype)
     w = w.astype(compute_dtype)
@@ -157,6 +171,10 @@ def analog_dot(
         from repro.quant.affine import ste_snap_levels
 
         energy = ste_snap_levels(energy, cfg.energy_quantum)
+    if n_repeats > 1:
+        # K repeats at E averaged == one draw at K*E (noise in quadrature);
+        # the explicit-K oracle forms live in core/redundant.py.
+        energy = energy * n_repeats
 
     # --- input/weight quantization (digital-I/O architectures) -------------
     if cfg.weight_bits is not None and sq is not None and sq.wqp is not None:

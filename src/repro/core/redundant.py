@@ -6,9 +6,15 @@ Three physically distinct but statistically equivalent mechanisms:
   * spatial averaging— K device copies encode the same weights (Fig. 3b/3c)
   * the continuous idealization used for learning — noise std / sqrt(E)
 
-This module implements the explicit K-repeat forms so tests can verify the
-1/sqrt(K) law that justifies the continuous ``E`` parameterization used by
-``analog_dot`` (signals add linearly, noise adds in quadrature).
+The public ``time_averaged_dot`` / ``spatial_averaged_dot`` entry points run
+the FUSED execution path: a single ``analog_dot`` with ``n_repeats=K``, which
+the backend dispatch lowers either to the fused Pallas kernel (K noise draws
+averaged in-register, one matmul pass, one x/w HBM read) or to the jnp
+single-draw-at-``K*E`` equivalent. The ``*_explicit`` forms materialize the
+O(K) computation the hardware physically performs — K matmuls over K clock
+cycles, or a K-fold tiled crossbar — and exist as test oracles for the
+1/sqrt(K) law that justifies both the fusion and the continuous ``E``
+parameterization (signals add linearly, noise adds in quadrature).
 """
 from __future__ import annotations
 
@@ -33,16 +39,13 @@ def time_averaged_dot(
 ) -> Array:
     """Fig. 3a: run the op for K clock cycles at base energy and average.
 
-    Statistically identical to a single draw at energy ``K * base_energy``.
+    Fused: one ``analog_dot`` with ``n_repeats=K`` — statistically identical
+    to the explicit K-draw average (and to a single draw at ``K * base``),
+    at 1/K the matmul cost and HBM traffic of the explicit form.
     """
-
-    def one(i):
-        return analog_dot(
-            x, w, cfg=cfg, energy=base_energy, key=jax.random.fold_in(key, i), sq=sq
-        )
-
-    draws = jax.vmap(one)(jnp.arange(k_repeats))
-    return jnp.mean(draws, axis=0)
+    return analog_dot(
+        x, w, cfg=cfg, energy=base_energy, key=key, sq=sq, n_repeats=k_repeats
+    )
 
 
 def spatial_averaged_dot(
@@ -55,17 +58,64 @@ def spatial_averaged_dot(
     k_repeats: int,
     sq: SiteQuant | None = None,
 ) -> Array:
-    """Fig. 3b: compute ``[W; W; ...] . [x, x, ...] / K`` on one big array.
+    """Fig. 3b: K spatial device copies of W, averaged.
+
+    Statistically identical to time averaging (independent per-copy noise
+    averages the same way regardless of whether the copies are laid out in
+    time or space), so the fused path serves both; the physical K-column
+    construction lives in ``spatial_averaged_dot_explicit``.
+    """
+    return analog_dot(
+        x, w, cfg=cfg, energy=base_energy, key=key, sq=sq, n_repeats=k_repeats
+    )
+
+
+def time_averaged_dot_explicit(
+    x: Array,
+    w: Array,
+    *,
+    cfg: AnalogConfig,
+    base_energy: Array,
+    key: jax.Array,
+    k_repeats: int,
+    sq: SiteQuant | None = None,
+) -> Array:
+    """Test oracle: the physical K-cycle form — K independent draws, averaged.
+
+    O(K) matmuls and O(K) noise tensors; the fused path must match this
+    distribution (mean AND variance) for every noise kind.
+    """
+
+    def one(i):
+        return analog_dot(
+            x, w, cfg=cfg, energy=base_energy, key=jax.random.fold_in(key, i), sq=sq
+        )
+
+    draws = jax.vmap(one)(jnp.arange(k_repeats))
+    return jnp.mean(draws, axis=0)
+
+
+def spatial_averaged_dot_explicit(
+    x: Array,
+    w: Array,
+    *,
+    cfg: AnalogConfig,
+    base_energy: Array,
+    key: jax.Array,
+    k_repeats: int,
+    sq: SiteQuant | None = None,
+) -> Array:
+    """Test oracle: compute ``[x, x, ...] . [W; W; ...] / K`` on one big array.
 
     The MAC count grows K-fold (energy K * base), and independent per-copy
     noise averages out. For output-additive noise (thermal/shot) the paper's
     K-column construction is equivalent to K independent draws averaged; we
     build it explicitly for weight noise, where each spatial copy of W reads
-    independent device noise.
+    independent device noise. The K-fold tiled operands are exactly the HBM
+    cost the fused kernel avoids.
     """
-    k_dim, m_dim = w.shape
-    w_tiled = jnp.concatenate([w] * k_repeats, axis=0)  # (K*k, M)
-    x_tiled = jnp.concatenate([x] * k_repeats, axis=-1)  # (..., K*k)
+    w_tiled = jnp.tile(w, (k_repeats, 1))  # (K*k, M)
+    x_tiled = jnp.tile(x, (1,) * (x.ndim - 1) + (k_repeats,))  # (..., K*k)
     y = analog_dot(
         x_tiled, w_tiled, cfg=cfg, energy=base_energy, key=key, sq=sq
     )

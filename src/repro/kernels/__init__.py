@@ -1,10 +1,31 @@
 """Pallas TPU kernels for the perf-critical analog-simulation hot spots.
 
-  analog_matmul  - fused quant -> matmul -> noise -> requant (paper §IV)
-  prng           - counter-based Threefry-2x32 + Box-Muller (in-register noise)
-  ref            - pure-jnp oracles with bit-identical noise draws
-  ops            - jit'd public wrappers
+  analog_matmul  - fused quant -> matmul -> K-repeat noise -> requant
+                   (paper §IV). The dynamic-precision repeat-average is
+                   computed in-register: K independent Threefry gaussian
+                   tiles (salted by repeat index) are averaged inside the
+                   kernel, so the op costs ONE matmul pass and one x/w HBM
+                   read regardless of K — the K-fold tiled operands and the
+                   K HBM-resident noise tensors of the unfused form never
+                   exist.
+  prng           - counter-based Threefry-2x32 + Box-Muller (in-register
+                   noise); ``repeat_averaged_gaussian_tile`` is the shared
+                   kernel/oracle contract for K-repeat draws.
+  ref            - pure-jnp oracles with bit-identical noise draws (any
+                   BlockSpec tiling, any K).
+  ops            - jit'd public wrappers.
+  dispatch       - backend resolution: "auto" routes analog matmuls to this
+                   kernel on TPU for large-enough shapes, to the jnp path
+                   otherwise; "pallas"/"jnp" force a path. ``analog_dot``
+                   and every model hook call through it.
 """
+from repro.kernels.dispatch import fused_dot, resolve_backend
 from repro.kernels.ops import analog_matmul, analog_matmul_reference, prepare_operands
 
-__all__ = ["analog_matmul", "analog_matmul_reference", "prepare_operands"]
+__all__ = [
+    "analog_matmul",
+    "analog_matmul_reference",
+    "fused_dot",
+    "prepare_operands",
+    "resolve_backend",
+]

@@ -19,6 +19,15 @@ Noise kinds (static):
     drawn per (k, j) — identical draw for every row-tile i, as in a single
     physical read of the crossbar.
   * "none": plain (optionally quantized) matmul.
+
+Dynamic precision (static ``n_repeats``): the paper's K-repeat redundancy
+(§IV, Fig. 3) — run the analog op K times at base energy and average — is
+fused into the kernel. Because the matmul is linear in its operands, the
+average of K noisy products equals the clean product plus the *averaged*
+noise, so the kernel draws K independent gaussian tiles per output/weight
+tile (salted by repeat index), averages them in-register, and applies them
+in a SINGLE matmul pass: one x/w HBM read and one y write regardless of K.
+The K-fold tiled operands of the explicit form never exist.
 """
 from __future__ import annotations
 
@@ -60,6 +69,7 @@ def _kernel(
     quant_x: bool,
     quant_w: bool,
     quant_out: bool,
+    n_repeats: int,
 ):
     bm, bn, bk = block
     ti = pl.program_id(0)
@@ -93,13 +103,16 @@ def _kernel(
         wb = _fake_quant(wb, wd, wz, wbins)
     if noise_kind == "weight":
         # std per column lives in cs; counter = (global k, global j); the
-        # salt decorrelates this stream from the output-noise stream.
-        xi = prng.gaussian_tile(
+        # salt decorrelates this stream from the output-noise stream. With
+        # n_repeats > 1 the K independent device reads are averaged here in
+        # VMEM — the (K*k, N) tiled weight array never exists.
+        xi = prng.repeat_averaged_gaussian_tile(
             k0 ^ jnp.uint32(prng.WEIGHT_STREAM_SALT),
             k1,
             tk * bk,
             tj * bn,
             (bk, bn),
+            n_repeats,
         )
         wb = wb + cs_ref[...] * xi
 
@@ -109,7 +122,11 @@ def _kernel(
     def _finish():
         y = out_ref[...]
         if noise_kind == "output":
-            xi = prng.gaussian_tile(k0, k1, ti * bm, tj * bn, (bm, bn))
+            # K repeat draws averaged in-register: one matmul pass, zero
+            # extra HBM traffic for the dynamic-precision redundancy.
+            xi = prng.repeat_averaged_gaussian_tile(
+                k0, k1, ti * bm, tj * bn, (bm, bn), n_repeats
+            )
             y = y + rs_ref[...] * cs_ref[...] * xi
         if quant_out:
             y = _fake_quant(y, sc[0, 3], sc[0, 4], sc[0, 5])
@@ -129,6 +146,7 @@ def analog_matmul_raw(
     quant_x: bool = False,
     quant_w: bool = False,
     quant_out: bool = False,
+    n_repeats: int = 1,
     block: tuple = DEFAULT_BLOCK,
     interpret: Optional[bool] = None,
 ) -> Array:
@@ -136,11 +154,14 @@ def analog_matmul_raw(
 
     row_scale: (M, 1) f32; col_scale: (1, N) f32; wq: (3, N) f32 rows =
     (delta, zp, bins); scalars: (1, 8) f32 = (xd, xz, xbins, od, oz, obins,
-    0, 0); seed: (1, 2) uint32.
+    0, 0); seed: (1, 2) uint32. ``n_repeats`` (static): average K independent
+    noise draws in-register — the fused form of the paper's K-repeat
+    redundancy, with noise std scaled by 1/sqrt(K).
     """
     m, k = x.shape
     k2, n = w.shape
     assert k == k2, (x.shape, w.shape)
+    assert n_repeats >= 1, n_repeats
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
     bm, bn, bk = block
@@ -156,6 +177,7 @@ def analog_matmul_raw(
         quant_x=quant_x,
         quant_w=quant_w,
         quant_out=quant_out,
+        n_repeats=n_repeats,
     )
     kwargs = {}
     if not interpret:  # TPU compiler hints
@@ -186,6 +208,7 @@ def analog_matmul_raw(
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
         interpret=interpret,
+        **kwargs,
     )(
         x.astype(jnp.float32),
         w.astype(jnp.float32),

@@ -1,0 +1,63 @@
+"""Backend dispatch: route analog matmuls to the fused Pallas kernel or jnp.
+
+``analog_dot`` (and through it every model hook) calls ``resolve_backend``
+to decide where a matmul executes:
+
+  * ``cfg.backend == "pallas"`` — always the fused kernel (interpret mode on
+    CPU, compiled on TPU). Also selected by the legacy ``use_kernel=True``.
+  * ``cfg.backend == "jnp"`` — always the pure-jnp path.
+  * ``cfg.backend == "auto"`` (default) — the fused kernel when it is the
+    faster choice: analog mode, running on a TPU, and every matmul dimension
+    at least ``MIN_PALLAS_DIM`` (MXU tiles are 128-aligned; smaller problems
+    gain nothing from the fusion and interpret-mode Pallas on CPU is a
+    correctness vehicle, not a fast path). Everything else falls back to the
+    jnp oracle path, which stays bit-compatible with pre-dispatch behavior.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+Array = jax.Array
+
+AUTO = "auto"
+PALLAS = "pallas"
+JNP = "jnp"
+BACKENDS = (AUTO, PALLAS, JNP)
+
+#: smallest dimension for which "auto" picks the Pallas kernel.
+MIN_PALLAS_DIM = 128
+
+
+def resolve_backend(cfg, x_shape: tuple, w_shape: tuple) -> str:
+    """Resolve the execution backend for one ``(..., K) @ (K, N)`` matmul.
+
+    Returns ``"pallas"`` or ``"jnp"`` (never ``"auto"``). Static: depends
+    only on the config and operand *shapes*, so it is jit/vmap safe.
+    """
+    backend = getattr(cfg, "backend", AUTO)
+    if backend == PALLAS or (backend == AUTO and getattr(cfg, "use_kernel", False)):
+        return PALLAS
+    if backend == JNP:
+        return JNP
+    if cfg.mode != "analog":
+        return JNP
+    if jax.default_backend() != "tpu":
+        return JNP
+    m = int(np.prod(x_shape[:-1], dtype=np.int64)) if len(x_shape) > 1 else 1
+    k = x_shape[-1]
+    n = w_shape[-1]
+    if min(m, k, n) < MIN_PALLAS_DIM:
+        return JNP
+    return PALLAS
+
+
+def fused_dot(
+    x: Array, w: Array, *, cfg, energy, key, sq=None, n_repeats: int = 1
+) -> Array:
+    """The Pallas hot path: fused quant -> matmul -> K-repeat noise -> requant."""
+    from repro.kernels import ops as kernel_ops
+
+    return kernel_ops.analog_matmul(
+        x, w, energy=energy, key=key, cfg=cfg, sq=sq, n_repeats=n_repeats
+    )

@@ -117,10 +117,16 @@ def analog_matmul(
     key,
     cfg,
     sq=None,
+    n_repeats: int = 1,
     block: tuple = DEFAULT_BLOCK,
     interpret: Optional[bool] = None,
 ) -> Array:
-    """Fused analog matmul for arbitrary batch dims: (..., K) @ (K, N)."""
+    """Fused analog matmul for arbitrary batch dims: (..., K) @ (K, N).
+
+    ``n_repeats``: static K-repeat redundancy (paper §IV) fused into the
+    kernel — one matmul pass whose noise is the in-register average of K
+    independent draws at the given (base) energy.
+    """
     batch_shape = x.shape[:-1]
     x2d = x.reshape(-1, x.shape[-1])
     ops = prepare_operands(x2d, w, energy=energy, key=key, cfg=cfg, sq=sq)
@@ -138,13 +144,16 @@ def analog_matmul(
         quant_x=qx,
         quant_w=qw,
         quant_out=qo,
+        n_repeats=n_repeats,
         block=block,
         interpret=interpret,
     )
     return y.reshape(*batch_shape, w.shape[1])
 
 
-def analog_matmul_reference(x: Array, w: Array, *, energy, key, cfg, sq=None) -> Array:
+def analog_matmul_reference(
+    x: Array, w: Array, *, energy, key, cfg, sq=None, n_repeats: int = 1
+) -> Array:
     """Oracle with identical noise draws (pure jnp, no Pallas)."""
     batch_shape = x.shape[:-1]
     x2d = x.reshape(-1, x.shape[-1])
@@ -163,5 +172,6 @@ def analog_matmul_reference(x: Array, w: Array, *, energy, key, cfg, sq=None) ->
         quant_x=qx,
         quant_w=qw,
         quant_out=qo,
+        n_repeats=n_repeats,
     )
     return y.reshape(*batch_shape, w.shape[1])

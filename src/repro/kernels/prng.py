@@ -21,6 +21,8 @@ _ROT_B = (17, 29, 16, 24)
 _PARITY = 0x1BD11BDA  # python int: jnp constants can't be closure-captured in Pallas
 #: salt xored into the key for the weight-noise stream.
 WEIGHT_STREAM_SALT = 0x9E3779B9
+#: multiplier folded into the key word per repeat index (K-repeat averaging).
+REPEAT_STREAM_MULT = 0x85EBCA6B
 
 
 def _rotl(x: Array, d: int) -> Array:
@@ -98,6 +100,40 @@ def gaussian_tile(
     rows = jax.lax.broadcasted_iota(jnp.uint32, (m, n), 0) + r0
     cols = jax.lax.broadcasted_iota(jnp.uint32, (m, n), 1) + c0
     return counter_gaussian(k0, k1, rows, cols)
+
+
+def repeat_key(k1: Array, r: int) -> Array:
+    """Second key word for repeat stream ``r`` of a K-repeat averaged op.
+
+    ``r`` is a static Python int. ``r = 0`` returns ``k1`` unchanged, so the
+    K=1 stream coincides bit-for-bit with the single-draw stream.
+    """
+    return jnp.asarray(k1, jnp.uint32) ^ jnp.uint32((r * REPEAT_STREAM_MULT) & 0xFFFFFFFF)
+
+
+def repeat_averaged_gaussian_tile(
+    k0: Array,
+    k1: Array,
+    row0: Array,
+    col0: Array,
+    shape: tuple[int, int],
+    n_repeats: int,
+) -> Array:
+    """Mean of ``n_repeats`` independent gaussian tiles, one per repeat stream.
+
+    This is the in-register noise of the fused dynamic-precision kernel
+    (paper §IV: repeat the analog op K times and average -> std / sqrt(K)).
+    The sequential accumulation order (r = 0..K-1) and the final
+    ``float32(1/K)`` scale are part of the contract: the Pallas kernel and the
+    pure-jnp oracle both call this function, which is what makes their
+    repeat-averaged draws bit-exact for any output tiling.
+    """
+    xi = gaussian_tile(k0, k1, row0, col0, shape)
+    for r in range(1, n_repeats):
+        xi = xi + gaussian_tile(k0, repeat_key(k1, r), row0, col0, shape)
+    if n_repeats > 1:
+        xi = xi * jnp.float32(1.0 / n_repeats)
+    return xi
 
 
 def key_to_words(key: jax.Array) -> tuple[Array, Array]:

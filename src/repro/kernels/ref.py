@@ -1,9 +1,10 @@
 """Pure-jnp oracle for the fused analog-matmul kernel.
 
 Implements the same math as ``analog_matmul.py`` on full arrays — including
-the identical counter-based gaussians keyed on *global* element indices — so
-`tests/test_kernels.py` can assert elementwise agreement for any BlockSpec
-tiling. This file contains no Pallas.
+the identical counter-based gaussians keyed on *global* element indices and
+the identical K-repeat averaged draws (``n_repeats``) — so the tests can
+assert elementwise agreement for any BlockSpec tiling and any K. This file
+contains no Pallas.
 """
 from __future__ import annotations
 
@@ -34,6 +35,7 @@ def analog_matmul_ref_raw(
     quant_x: bool = False,
     quant_w: bool = False,
     quant_out: bool = False,
+    n_repeats: int = 1,
 ) -> Array:
     m, k = x.shape
     _, n = w.shape
@@ -48,15 +50,15 @@ def analog_matmul_ref_raw(
     if quant_w:
         w = _fake_quant(w, wq[0:1, :], wq[1:2, :], wq[2:3, :])
     if noise_kind == "weight":
-        xi = prng.gaussian_tile(
-            k0 ^ jnp.uint32(prng.WEIGHT_STREAM_SALT), k1, 0, 0, (k, n)
+        xi = prng.repeat_averaged_gaussian_tile(
+            k0 ^ jnp.uint32(prng.WEIGHT_STREAM_SALT), k1, 0, 0, (k, n), n_repeats
         )
         w = w + col_scale.astype(jnp.float32) * xi
 
     y = jnp.dot(x, w, preferred_element_type=jnp.float32)
 
     if noise_kind == "output":
-        xi = prng.gaussian_tile(k0, k1, 0, 0, (m, n))
+        xi = prng.repeat_averaged_gaussian_tile(k0, k1, 0, 0, (m, n), n_repeats)
         y = y + row_scale.astype(jnp.float32) * col_scale.astype(jnp.float32) * xi
     if quant_out:
         y = _fake_quant(y, sc[0, 3], sc[0, 4], sc[0, 5])

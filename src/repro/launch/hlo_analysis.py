@@ -207,7 +207,15 @@ def _group_size(args_text: str, total_devices: int) -> int:
 
 
 def _operand_shape(op: Op, comp: Computation) -> Optional[str]:
-    """Type text of the first operand (looked up in the same computation)."""
+    """Type text of the first operand.
+
+    Handles both HLO print dialects: typed operands
+    (``dot(f32[16,16]{1,0} %x, ...)``) carry the shape inline; untyped
+    (``dot(%x, ...)``) require a lookup in the same computation.
+    """
+    m = re.match(r"\s*(\w+\[[\d,]*\]\S*)\s", op.args_text)
+    if m and _parse_shape(m.group(1)):
+        return m.group(1)
     m = re.match(r"\s*%?([\w\.\-]+)", op.args_text)
     if m and m.group(1) in comp.ops:
         return comp.ops[m.group(1)].type_text

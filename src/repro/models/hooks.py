@@ -33,16 +33,24 @@ class AnalogHook(MatmulHook):
     ``energies`` maps site name -> scalar / (M,) per-channel / (E,) or (E, M)
     for expert-batched sites. All leaves are for the *current layer* (callers
     slice stacked (L, ...) energy trees inside their layer scan).
+
+    Execution routes through the backend dispatch in ``analog_dot``: under
+    ``cfg.backend = "pallas"`` (or "auto" on TPU with large enough shapes)
+    every site runs the fused Pallas kernel — quant, matmul, K-repeat noise
+    averaging and requant in one pass. ``n_repeats`` is the serving-time
+    dynamic-precision knob: K repeats at the per-site energies, averaged
+    in-register by the kernel (noise / sqrt(K) at zero extra HBM traffic).
     """
 
     cfg: AnalogConfig
     energies: Dict[str, Array]
     key: jax.Array
+    n_repeats: int = 1
 
     def __call__(self, site: str, x: Array, w: Array) -> Array:
         e = self.energies[site]
         k = site_key(self.key, site)
-        y = analog_dot(x, w, cfg=self.cfg, energy=e, key=k)
+        y = analog_dot(x, w, cfg=self.cfg, energy=e, key=k, n_repeats=self.n_repeats)
         return y.astype(x.dtype)
 
     def batched(self, site: str, x: Array, w: Array) -> Array:
@@ -52,7 +60,9 @@ class AnalogHook(MatmulHook):
         keys = jax.random.split(site_key(self.key, site), n_e)
 
         def one(xe, we, ee, ke):
-            return analog_dot(xe, we, cfg=self.cfg, energy=ee, key=ke)
+            return analog_dot(
+                xe, we, cfg=self.cfg, energy=ee, key=ke, n_repeats=self.n_repeats
+            )
 
         y = jax.vmap(one)(x, w, e, keys)
         return y.astype(x.dtype)
@@ -77,8 +87,12 @@ def hook_for_layer(
     layer_energies: Optional[Dict[str, Array]],
     key: Optional[jax.Array],
     layer_idx,
+    *,
+    n_repeats: int = 1,
 ) -> MatmulHook:
     if analog_cfg is None or layer_energies is None:
         return MatmulHook()
     lk = jax.random.fold_in(key, layer_idx)
-    return AnalogHook(cfg=analog_cfg, energies=layer_energies, key=lk)
+    return AnalogHook(
+        cfg=analog_cfg, energies=layer_energies, key=lk, n_repeats=n_repeats
+    )

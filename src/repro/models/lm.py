@@ -50,11 +50,17 @@ PyTree = Any
 
 @dataclasses.dataclass
 class AnalogSpec:
-    """Analog execution request for a forward pass."""
+    """Analog execution request for a forward pass.
+
+    ``n_repeats`` is the serving-time dynamic-precision knob (paper §IV):
+    every matmul site runs K-repeat averaged at its per-site energy, fused
+    in-kernel on the Pallas backend (noise / sqrt(K), no extra HBM traffic).
+    """
 
     cfg: AnalogConfig
     energies: PyTree  # from init_energy_tree
     key: jax.Array
+    n_repeats: int = 1
 
 
 # ===========================================================================
@@ -669,6 +675,7 @@ def _run_stack(params, h, cfg: ModelConfig, *, mode, cache, pos, positions, anal
     rope = rope_tables(positions, cfg.head_dim, cfg.rope_theta)
     a_cfg = analog.cfg if analog is not None else None
     a_key = analog.key if analog is not None else None
+    a_rep = getattr(analog, "n_repeats", 1) if analog is not None else 1
     energies = analog.energies["groups"] if analog is not None else None
 
     def group_fwd(h, gp, g_cache, g_energies, idx):
@@ -681,10 +688,10 @@ def _run_stack(params, h, cfg: ModelConfig, *, mode, cache, pos, positions, anal
                         k: (v[sub] if (sub is not None and v.ndim > 0 and k.startswith("mlstm")) else v)
                         for k, v in g_energies.items()
                     }
-                return hook_for_layer(a_cfg, le, a_key, idx)
+                return hook_for_layer(a_cfg, le, a_key, idx, n_repeats=a_rep)
 
             return _xlstm_group(h, gp, cfg, hook_fn, mode=mode, cache=g_cache, group_idx=idx)
-        hook = hook_for_layer(a_cfg, g_energies, a_key, idx)
+        hook = hook_for_layer(a_cfg, g_energies, a_key, idx, n_repeats=a_rep)
         if cfg.family == "griffin":
             return _griffin_group(
                 h, gp, cfg, hook, rope=rope, mode=mode, cache=g_cache,
@@ -727,7 +734,9 @@ def _run_stack(params, h, cfg: ModelConfig, *, mode, cache, pos, positions, anal
                 if analog is not None
                 else None
             )
-            hook = hook_for_layer(a_cfg, t_energies, a_key, g * per + j)
+            hook = hook_for_layer(
+                a_cfg, t_energies, a_key, g * per + j, n_repeats=a_rep
+            )
             h, tc = _griffin_group(
                 h, tp, cfg, hook, rope=rope, mode=mode,
                 cache=t_cache, pos=pos, pattern=("rec",), tail=True,

@@ -143,7 +143,7 @@ def test_min_energy_search_dynamic_below_uniform(problem):
         make_uniform, acc_fn, float_acc=clean_acc, lo=1e-4, hi=10.0, max_iters=7
     )
     res_dyn = min_energy_search(
-        make_dynamic, acc_fn, float_acc=clean_acc, lo=1e-4, hi=10.0, max_iters=5
+        make_dynamic, acc_fn, float_acc=clean_acc, lo=1e-4, hi=10.0, max_iters=7
     )
     assert res_dyn.accuracy >= clean_acc - 0.02
     assert res_dyn.achieved_e_per_mac < res_uni.achieved_e_per_mac, (

@@ -64,7 +64,7 @@ def test_compressed_psum_multidevice_subprocess():
         from jax.sharding import PartitionSpec as P
         from jax.experimental.shard_map import shard_map
         from repro.optim.compress import compressed_psum
-        mesh = jax.make_mesh((8,), ("d",), axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = jax.make_mesh((8,), ("d",))
         x = jax.random.normal(jax.random.PRNGKey(0), (8, 64))
         f = shard_map(lambda v: compressed_psum(v[0], "d")[None],
                       mesh=mesh, in_specs=P("d", None), out_specs=P("d", None))
