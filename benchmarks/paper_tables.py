@@ -133,10 +133,18 @@ def _min_energy(prob, cfg, granularity: str):
             e = to_energy(uniform_log_energies(macs, target))
             return e, float(avg_energy_per_mac(e, macs))
     else:
-        def make(target):
+        def make(target, init=None):
+            # warm start from the search's best feasible allocation: nearby
+            # bisection targets share structure, so the optimization starts
+            # at a neighbouring optimum and half the Eq.-14 steps suffice
+            # (floored at 40 — an under-converged probe near the feasibility
+            # boundary would flip the bisection the wrong way)
+            cal = CAL if init is None else {**CAL, "steps": max(CAL["steps"] // 2, 40)}
+            init_log_e = None if init is None else jax.tree.map(jnp.log, init)
             e, d = learn_energies(
                 apply_fn, macs, prob.train_batches, key=KEY,
-                target_e_per_mac=target, cfg=CalibConfig(**CAL),
+                target_e_per_mac=target, cfg=CalibConfig(**cal),
+                init_log_e=init_log_e,
             )
             return e, d["avg_e_per_mac"]
 

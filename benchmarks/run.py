@@ -25,6 +25,7 @@ def main() -> None:
     from benchmarks import kernel_bench as kb
     from benchmarks import paper_tables as pt
     from benchmarks import roofline_report as rr
+    from benchmarks import serving_bench as sb
 
     only = set(args.only.split(",")) if args.only else None
     print("name,us_per_call,derived")
@@ -68,6 +69,12 @@ def main() -> None:
         lambda o: f"fused_speedup={o['speedup_x']:.2f}x "
                   f"analog_overhead={o['analog_overhead_x']:.2f}x "
                   f"hbm_saving={o['hbm_traffic_saving_x']:.2f}x")
+    run("serving_bench", sb.serving_bench,
+        lambda o: f"engine={o['engine']['tokens_per_s']:.0f}tok/s "
+                  f"naive={o['naive']['tokens_per_s']:.0f}tok/s "
+                  f"speedup={o['throughput_speedup_x']:.2f}x "
+                  f"hit_rate={o['steady_hit_rate']:.0%} "
+                  f"retraces={o['engine']['steady_retraces']}")
 
     if only is None or "roofline" in only:
         t0 = time.perf_counter()

@@ -1,0 +1,277 @@
+"""Serving benchmark: bucket-batched engine vs the naive per-request path.
+
+Drives synthetic mixed-tier traffic — prompt lengths and dynamic-precision
+tiers (K = n_repeats) drawn from a seeded distribution — through both:
+
+  engine — ``repro.serving.ServingEngine``: tier-grouped, bucket-padded
+           batches through AOT-compiled executables (one per (bucket, K)).
+  naive  — one ``jax.jit`` prefill + decode per request at its *exact*
+           shape: every new (prompt_len, K) combination re-traces, and every
+           request runs at batch 1. What serving cost before this engine.
+
+Both sides replay the trace twice: the first replay is warmup (compiles),
+the second is the steady state that the headline numbers come from. The
+engine's contract — asserted here and in CI via --smoke — is a 100%
+steady-state executable-cache hit rate, i.e. ZERO steady-state retraces.
+
+Records tokens/s, p50/p99 request latency, cache hit/miss counters, and
+trace counts; the JSON under artifacts/paper is the repo's serving perf
+trajectory point for this PR.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import cache_json
+from repro.core import AnalogConfig
+from repro.models import init_energy_tree, init_params, lm
+from repro.models.config import ModelConfig
+from repro.serving import ServingEngine
+
+MODEL = dict(
+    name="serve-bench", family="dense", n_layers=2, d_model=128, n_heads=8,
+    n_kv_heads=4, d_ff=256, vocab_size=1024, attn_q_chunk=64,
+    attn_kv_chunk=64, loss_chunk=128, dtype="float32",
+)
+SMOKE_MODEL = dict(MODEL, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128)
+
+TIERS = (1, 2, 4)  # precision tiers: K repeats per analog op
+TIER_WEIGHTS = (0.5, 0.3, 0.2)
+ENERGY_AJ = 20.0
+
+
+def make_trace(n_requests: int, gen: int, max_len: int, seed: int = 0,
+               tiers=TIERS, weights=TIER_WEIGHTS):
+    """Deterministic mixed-tier traffic: [(prompt tokens, K, gen)]."""
+    rng = np.random.default_rng(seed)
+    trace = []
+    for _ in range(n_requests):
+        length = int(rng.integers(8, max_len + 1))
+        k = int(rng.choice(tiers, p=weights))
+        prompt = rng.integers(0, MODEL["vocab_size"], length)
+        trace.append((prompt, k, gen))
+    return trace
+
+
+def _percentiles(latencies):
+    arr = np.asarray(sorted(latencies))
+    return {
+        "p50_ms": float(np.percentile(arr, 50) * 1e3),
+        "p99_ms": float(np.percentile(arr, 99) * 1e3),
+    }
+
+
+# ---------------------------------------------------------------------------
+# engine side
+# ---------------------------------------------------------------------------
+
+
+def _median_by_throughput(candidates):
+    """The median-tokens/s replay's record: one noisy-neighbour window on a
+    shared box can halve (or double) a single replay's wall time, so the
+    steady-state headline comes from the median of several replays."""
+    ranked = sorted(candidates, key=lambda c: c["tokens_per_s"])
+    return ranked[len(ranked) // 2]
+
+
+def run_engine(params, cfg, energies, trace, *, max_gen, steady_replays=3):
+    eng = ServingEngine(
+        params, cfg, analog_cfg=AnalogConfig.shot(), energies=energies,
+        max_gen=max_gen, max_batch=8, max_wait=1.0,
+        batch_buckets=(1, 2, 4, 8), seq_buckets=(32, 64, 128),
+    )
+    candidates = []
+    for replay in range(1 + steady_replays):  # replay 0 is warmup (compiles)
+        if replay == 1:
+            eng.exe_cache.reset_stats()
+        traces_before = eng.trace_count
+        batches_before = eng.stats["batches"]
+        padded_before = eng.stats["padded_rows"]
+        # scheduling runs on a VIRTUAL clock (1ms per arrival) so batch
+        # composition is deterministic and replay-invariant: warmup compiles
+        # exactly the executables steady state hits. Wall time is real.
+        t0 = time.perf_counter()
+        submit_t, finish_t = {}, {}
+        for i, (prompt, k, gen) in enumerate(trace):
+            uid = eng.submit(prompt, n_repeats=k, max_new_tokens=gen, now=i * 1e-3)
+            submit_t[uid] = time.perf_counter()
+            for done_uid in eng.poll(now=i * 1e-3):
+                finish_t[done_uid] = time.perf_counter()
+        for done_uid in eng.flush():
+            finish_t[done_uid] = time.perf_counter()
+        wall = time.perf_counter() - t0
+        if replay >= 1:
+            tokens = sum(gen for _, _, gen in trace)
+            lat = [finish_t[u] - submit_t[u] for u in submit_t]
+            candidates.append({
+                "tokens_per_s": tokens / wall,
+                "wall_s": wall,
+                **_percentiles(lat),
+                # engine latency = submit -> completion through the serial
+                # replay drain: it INCLUDES queueing/batching delay and the
+                # service time of batches dispatched ahead of the request.
+                # Compare tokens/s head-to-head with the naive side; compare
+                # latencies only with this semantic difference in mind.
+                "latency_semantics": "submit->completion incl. queueing",
+                "steady_retraces": eng.trace_count - traces_before,
+                "batches": eng.stats["batches"] - batches_before,
+                "padded_rows": eng.stats["padded_rows"] - padded_before,
+            })
+    out = _median_by_throughput(candidates)
+    out["steady_retraces"] = sum(c["steady_retraces"] for c in candidates)
+    out["cache"] = eng.exe_cache.stats()  # accumulated over all steady replays
+    return out
+
+
+# ---------------------------------------------------------------------------
+# naive side: per-request jit at exact shapes
+# ---------------------------------------------------------------------------
+
+
+def make_naive(params, cfg, energies, *, max_gen):
+    """Per-request serving closures with a trace counter (the old hot path)."""
+    counters = {"traces": 0}
+    jitted = {}
+
+    def fns_for(k_repeats):
+        if k_repeats in jitted:
+            return jitted[k_repeats]
+
+        def pre(params, tokens, key):
+            counters["traces"] += 1
+            analog = lm.AnalogSpec(
+                cfg=AnalogConfig.shot(), energies=energies, key=key,
+                n_repeats=k_repeats,
+            )
+            cache, h_last = lm.prefill(
+                params, {"tokens": tokens}, cfg, analog=analog,
+                cache_len=tokens.shape[1] + max_gen,
+            )
+            logits = lm.logits_last(params, h_last, cfg)
+            return cache, jnp.argmax(logits[:, 0, 0], axis=-1).astype(jnp.int32)
+
+        def dec(params, cache, tok, pos, key):
+            counters["traces"] += 1
+            analog = lm.AnalogSpec(
+                cfg=AnalogConfig.shot(), energies=energies,
+                key=jax.random.fold_in(key, pos), n_repeats=k_repeats,
+            )
+            logits, new_cache = lm.decode_step(
+                params, cache, {"tokens": tok}, pos, cfg, analog=analog
+            )
+            return jnp.argmax(logits[:, 0, 0], axis=-1).astype(jnp.int32), new_cache
+
+        jitted[k_repeats] = (jax.jit(pre), jax.jit(dec, donate_argnums=(1,)))
+        return jitted[k_repeats]
+
+    def serve(prompt, k_repeats, gen, key):
+        pre, dec = fns_for(k_repeats)
+        tokens = jnp.asarray(prompt, jnp.int32)[None, :]
+        cache, tok = pre(params, tokens, key)
+        toks = [tok]
+        for t in range(gen - 1):
+            pos = jnp.asarray(len(prompt) + t, jnp.int32)
+            tok, cache = dec(params, cache, tok[:, None], pos, key)
+            toks.append(tok)
+        return np.stack([np.asarray(t) for t in toks], axis=1)
+
+    return serve, counters
+
+
+def run_naive(params, cfg, energies, trace, *, max_gen, steady_replays=3):
+    serve, counters = make_naive(params, cfg, energies, max_gen=max_gen)
+    base_key = jax.random.PRNGKey(123)
+    candidates = []
+    for replay in range(1 + steady_replays):  # replay 0 is warmup (compiles)
+        traces_before = counters["traces"]
+        t0 = time.perf_counter()
+        lat = []
+        for i, (prompt, k, gen) in enumerate(trace):
+            r0 = time.perf_counter()
+            serve(prompt, k, gen, jax.random.fold_in(base_key, i))
+            lat.append(time.perf_counter() - r0)
+        wall = time.perf_counter() - t0
+        if replay >= 1:
+            tokens = sum(gen for _, _, gen in trace)
+            candidates.append({
+                "tokens_per_s": tokens / wall,
+                "wall_s": wall,
+                **_percentiles(lat),
+                "latency_semantics": "per-request serve time, no queueing",
+                "steady_retraces": counters["traces"] - traces_before,
+            })
+    out = _median_by_throughput(candidates)
+    out["steady_retraces"] = sum(c["steady_retraces"] for c in candidates)
+    out["total_traces"] = counters["traces"]
+    return out
+
+
+# ---------------------------------------------------------------------------
+
+
+def _bench(model_kw, n_requests, gen, max_len, tiers=TIERS, weights=TIER_WEIGHTS):
+    cfg = ModelConfig(**model_kw)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    energies = init_energy_tree(cfg, ENERGY_AJ)
+    trace = make_trace(n_requests, gen, max_len, tiers=tiers, weights=weights)
+    engine = run_engine(params, cfg, energies, trace, max_gen=gen)
+    naive = run_naive(params, cfg, energies, trace, max_gen=gen)
+    return {
+        "backend": jax.default_backend(),
+        "n_requests": n_requests,
+        "gen_per_request": gen,
+        "tiers": list(tiers),
+        "engine": engine,
+        "naive": naive,
+        "throughput_speedup_x": engine["tokens_per_s"] / naive["tokens_per_s"],
+        "steady_hit_rate": engine["cache"]["hit_rate"],
+    }
+
+
+@cache_json("serving_bench")
+def serving_bench():
+    return _bench(MODEL, n_requests=48, gen=16, max_len=96)
+
+
+@cache_json("serving_bench_smoke")
+def serving_bench_smoke():
+    # two tiers + tight length range: groups fill even with few requests
+    return _bench(SMOKE_MODEL, n_requests=16, gen=6, max_len=48,
+                  tiers=(1, 4), weights=(0.6, 0.4))
+
+
+def _print(out):
+    e, n = out["engine"], out["naive"]
+    print(f"backend={out['backend']} requests={out['n_requests']} "
+          f"gen={out['gen_per_request']} tiers={out['tiers']}")
+    print(f"{'':>8} {'tok/s':>9} {'p50_ms':>8} {'p99_ms':>9} {'retraces':>9}")
+    print(f"{'engine':>8} {e['tokens_per_s']:>9.1f} {e['p50_ms']:>8.1f} "
+          f"{e['p99_ms']:>9.1f} {e['steady_retraces']:>9}")
+    print(f"{'naive':>8} {n['tokens_per_s']:>9.1f} {n['p50_ms']:>8.1f} "
+          f"{n['p99_ms']:>9.1f} {n['steady_retraces']:>9}")
+    print(f"speedup={out['throughput_speedup_x']:.2f}x "
+          f"steady_hit_rate={out['steady_hit_rate']:.0%} "
+          f"cache_entries={e['cache']['entries']}")
+    print("(engine latency includes queueing/batching delay; naive latency "
+          "is pure per-request serve time — compare tok/s head-to-head)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true", help="tiny run for CI")
+    ap.add_argument("--force", action="store_true", help="ignore cached JSON")
+    args = ap.parse_args()
+    fn = serving_bench_smoke if args.smoke else serving_bench
+    out = fn(force=args.force)
+    _print(out)
+    assert out["steady_hit_rate"] == 1.0, "engine re-traced in steady state"
+    assert out["engine"]["steady_retraces"] == 0
+
+
+if __name__ == "__main__":
+    main()

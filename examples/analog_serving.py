@@ -1,16 +1,29 @@
-"""Analog serving: batched prefill + autoregressive decode on a simulated
-analog accelerator (the paper's deployment scenario, as a serving loop).
+"""Analog serving: the paper's deployment scenario as a serving client.
 
-The model's every matmul runs through the analog execution path under shot
-noise with per-site energies; the loop reports tokens/step agreement vs the
-digital model and the optical energy per token (aJ) from the MAC accounting.
+Two modes:
+
+  default   — side-by-side digital vs analog generation on one batch: every
+              matmul runs the analog path under shot noise with per-site
+              energies; reports token agreement and optical energy/token.
+
+  --traffic — replays a synthetic *mixed-precision* load through the
+              bucket-batched serving engine (repro.serving): requests with
+              random prompt lengths and dynamic-precision tiers (K = 1/2/4
+              analog repeats) are tier-grouped, padded into power-of-two
+              buckets, and served through AOT-compiled executables. Prints
+              per-tier token/energy accounting and the executable-cache
+              hit/miss counters (steady state re-traces nothing).
 
 Run:  PYTHONPATH=src python examples/analog_serving.py [--energy 10.0]
+      PYTHONPATH=src python examples/analog_serving.py --traffic \
+          [--requests 24] [--gen 8]
 """
 import argparse
+import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import PHOTON_ENERGY_AJ, AnalogConfig, total_energy
 from repro.models import (
@@ -23,6 +36,7 @@ from repro.models import (
 )
 from repro.models.config import ModelConfig
 from repro.data.pipeline import TokenTaskConfig, markov_batch
+from repro.serving import ServingEngine
 
 CFG = ModelConfig(
     name="serve-demo", family="dense", n_layers=4, d_model=256, n_heads=8,
@@ -55,6 +69,53 @@ def _trained_params():
     return out["state"]["params"]
 
 
+def run_traffic(args, params):
+    """Replay a mixed-precision load through the serving engine."""
+    tiers, weights = (1, 2, 4), (0.5, 0.3, 0.2)
+    energies = init_energy_tree(CFG, args.energy)
+    seq_buckets = [32]
+    while seq_buckets[-1] < args.prompt_len:
+        seq_buckets.append(seq_buckets[-1] * 2)
+    engine = ServingEngine(
+        params, CFG, analog_cfg=AnalogConfig.shot(backend=args.backend),
+        energies=energies, max_gen=args.gen, max_batch=8, max_wait=0.5,
+        batch_buckets=(1, 2, 4, 8), seq_buckets=tuple(seq_buckets),
+    )
+    rng = np.random.default_rng(0)
+    reqs = []
+    for i in range(args.requests):
+        length = int(rng.integers(8, args.prompt_len + 1))
+        k = int(rng.choice(tiers, p=weights))
+        reqs.append((rng.integers(0, CFG.vocab_size, length), k))
+
+    t0 = time.perf_counter()
+    uid_tier = {}
+    for i, (prompt, k) in enumerate(reqs):
+        uid = engine.submit(prompt, n_repeats=k, max_new_tokens=args.gen, now=i * 1e-3)
+        uid_tier[uid] = k
+    results = engine.flush()
+    wall = time.perf_counter() - t0
+
+    macs = energy_macs(CFG, 1)
+    e_tok = float(total_energy(energies, macs))
+    total_toks = sum(len(v) for v in results.values())
+    print(f"replayed {args.requests} requests ({total_toks} tokens) "
+          f"in {wall:.2f}s -> {total_toks / wall:.1f} tok/s "
+          f"[backend={args.backend}]")
+    for k in tiers:
+        uids = [u for u, t in uid_tier.items() if t == k]
+        toks = sum(len(results[u]) for u in uids)
+        print(f"  tier K={k}: {len(uids):>3} requests, {toks:>4} tokens, "
+              f"{k * e_tok / 1e6:.3f} pJ/token "
+              f"({k * e_tok / PHOTON_ENERGY_AJ:.2e} photons)")
+    cs = engine.cache_stats()
+    print(f"executables: {cs['entries']} compiled ({cs['compile_s']:.1f}s), "
+          f"{cs['hits']} hits / {cs['misses']} misses; batches="
+          f"{engine.stats['batches']} padded_rows={engine.stats['padded_rows']}")
+    sample = results[min(results)]
+    print("sample tokens:", sample[:12].tolist())
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--energy", type=float, default=10.0, help="aJ per MAC")
@@ -66,7 +127,16 @@ def main():
     ap.add_argument("--repeats", type=int, default=1,
                     help="dynamic-precision K: repeat each analog op K times "
                          "and average (fused in-kernel on pallas)")
+    ap.add_argument("--traffic", action="store_true",
+                    help="replay a mixed-precision load through the "
+                         "bucket-batched serving engine")
+    ap.add_argument("--requests", type=int, default=24,
+                    help="number of requests in --traffic mode")
     args = ap.parse_args()
+
+    if args.traffic:
+        run_traffic(args, _trained_params())
+        return
 
     key = jax.random.PRNGKey(0)
     params = _trained_params()  # untrained logits are near-ties: noise flips argmax
@@ -105,7 +175,7 @@ def main():
     print(f"generated {args.gen} tokens x {args.batch} sequences "
           f"[backend={args.backend}, K={args.repeats}]")
     print(f"digital vs analog token agreement: {agree:.1%} at {args.energy} aJ/MAC")
-    print(f"optical energy per generated token: {e_tot/1e6:.3f} microJ "
+    print(f"optical energy per generated token: {e_tot/1e6:.3f} pJ "
           f"({e_tot / PHOTON_ENERGY_AJ:.2e} photons)")
     print("sample (digital):", outs["digital"][0, :12].tolist())
     print("sample (analog): ", outs["analog"][0, :12].tolist())

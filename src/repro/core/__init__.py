@@ -15,6 +15,9 @@ from repro.core.analog import (
     SiteQuant,
     analog_conv2d,
     analog_dot,
+    fold_key,
+    key_batch,
+    raw_key,
     site_key,
 )
 from repro.core.calibrate import CalibConfig, eval_accuracy, learn_energies, softmax_xent
@@ -45,6 +48,9 @@ __all__ = [
     "SiteQuant",
     "analog_conv2d",
     "analog_dot",
+    "fold_key",
+    "key_batch",
+    "raw_key",
     "avg_energy_per_mac",
     "dense_site_macs",
     "eval_accuracy",

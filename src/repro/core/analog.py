@@ -98,10 +98,52 @@ class SiteQuant:
     oqp: Optional[QuantParams] = None
 
 
+def key_batch(key: Optional[jax.Array]) -> Optional[int]:
+    """Leading batch size of a *stacked* key array, or None for a single key.
+
+    A stacked key carries one independent PRNG stream per request row (the
+    serving engine's per-request noise isolation): raw uint32 keys stack to
+    (B, 2), typed keys to (B,). Every fold/draw maps over the leading axis.
+    """
+    if key is None:
+        return None
+    try:
+        typed = jnp.issubdtype(key.dtype, jax.dtypes.prng_key)
+    except AttributeError:  # very old jax: only raw uint32 keys exist
+        typed = False
+    base_ndim = 0 if typed else 1
+    if key.ndim == base_ndim:
+        return None
+    if key.ndim == base_ndim + 1:
+        return key.shape[0]
+    raise ValueError(f"bad key shape {key.shape}")
+
+
+def fold_key(key: jax.Array, data) -> jax.Array:
+    """``jax.random.fold_in`` that maps over stacked per-request keys."""
+    if key_batch(key) is None:
+        return jax.random.fold_in(key, data)
+    return jax.vmap(lambda k: jax.random.fold_in(k, data))(key)
+
+
+def raw_key(key: jax.Array) -> jax.Array:
+    """Normalize a (possibly typed) PRNG key to raw uint32 data — the
+    stackable, ShapeDtypeStruct-able form the serving engine traffics in."""
+    try:
+        if jnp.issubdtype(key.dtype, jax.dtypes.prng_key):
+            return jax.random.key_data(key)
+    except AttributeError:  # very old jax: only raw uint32 keys exist
+        pass
+    return key
+
+
 def site_key(key: jax.Array, site: str) -> jax.Array:
-    """Deterministic per-site RNG stream derived from a stable name hash."""
+    """Deterministic per-site RNG stream derived from a stable name hash.
+
+    Stacked per-request keys fold elementwise: every request keeps its own
+    stream for the site."""
     h = int.from_bytes(hashlib.blake2s(site.encode(), digest_size=4).digest(), "little")
-    return jax.random.fold_in(key, h)
+    return fold_key(key, h)
 
 
 def _w_range(sq: SiteQuant, w: Array) -> Array:
@@ -144,6 +186,22 @@ def analog_dot(
         raise ValueError(f"contract mismatch {x.shape} @ {w.shape}")
     if n_repeats < 1:
         raise ValueError(f"n_repeats must be >= 1, got {n_repeats}")
+    kb = key_batch(key)
+    if kb is not None:
+        # Stacked per-request keys: one independent noise stream per leading
+        # row. Each row's draw is identical to running that row alone, so a
+        # request's output never depends on what else shares its batch (the
+        # serving engine's batching-invariance contract).
+        if x.ndim < 2 or x.shape[0] != kb:
+            raise ValueError(
+                f"stacked key batch {kb} does not match x leading dim {x.shape}"
+            )
+        return jax.vmap(
+            lambda xr, kr: analog_dot(
+                xr, w, cfg=cfg, energy=energy, key=kr, sq=sq,
+                precision=precision, n_repeats=n_repeats,
+            )
+        )(x, key)
     k_dim, m_dim = w.shape
     compute_dtype = jnp.float32 if cfg.mode == "analog" else x.dtype
 

@@ -15,6 +15,8 @@ to decide where a matmul executes:
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import numpy as np
 
@@ -34,7 +36,16 @@ def resolve_backend(cfg, x_shape: tuple, w_shape: tuple) -> str:
 
     Returns ``"pallas"`` or ``"jnp"`` (never ``"auto"``). Static: depends
     only on the config and operand *shapes*, so it is jit/vmap safe.
+
+    Memoized on (config, shapes, platform): the serving engine's bucketing
+    bounds the distinct shape set, so steady-state serving resolves once per
+    bucket, not once per analog_dot call.
     """
+    return _resolve_cached(cfg, tuple(x_shape), tuple(w_shape), jax.default_backend())
+
+
+@functools.lru_cache(maxsize=4096)
+def _resolve_cached(cfg, x_shape: tuple, w_shape: tuple, platform: str) -> str:
     backend = getattr(cfg, "backend", AUTO)
     if backend == PALLAS or (backend == AUTO and getattr(cfg, "use_kernel", False)):
         return PALLAS
@@ -42,7 +53,7 @@ def resolve_backend(cfg, x_shape: tuple, w_shape: tuple) -> str:
         return JNP
     if cfg.mode != "analog":
         return JNP
-    if jax.default_backend() != "tpu":
+    if platform != "tpu":
         return JNP
     m = int(np.prod(x_shape[:-1], dtype=np.int64)) if len(x_shape) > 1 else 1
     k = x_shape[-1]

@@ -10,7 +10,7 @@ from typing import Dict, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.analog import AnalogConfig, analog_dot, site_key
+from repro.core.analog import AnalogConfig, analog_dot, fold_key, key_batch, site_key
 
 Array = jax.Array
 
@@ -34,6 +34,14 @@ class AnalogHook(MatmulHook):
     for expert-batched sites. All leaves are for the *current layer* (callers
     slice stacked (L, ...) energy trees inside their layer scan).
 
+    ``key`` may be a single PRNG key or a *stacked* (B, ...) array of
+    per-request keys (one per batch row, the serving engine's noise
+    isolation): every site then draws an independent stream per row, so a
+    request's output is invariant to what else shares its batch. Stacked
+    keys are rejected for expert-batched sites — MoE capacity buffers mix
+    tokens from different requests inside one matmul, so per-request noise
+    isolation is physically meaningless there.
+
     Execution routes through the backend dispatch in ``analog_dot``: under
     ``cfg.backend = "pallas"`` (or "auto" on TPU with large enough shapes)
     every site runs the fused Pallas kernel — quant, matmul, K-repeat noise
@@ -54,6 +62,11 @@ class AnalogHook(MatmulHook):
         return y.astype(x.dtype)
 
     def batched(self, site: str, x: Array, w: Array) -> Array:
+        if key_batch(self.key) is not None:
+            raise ValueError(
+                f"stacked per-request keys are unsupported for expert-batched "
+                f"site {site!r} (MoE buffers mix requests)"
+            )
         e = self.energies[site]
         n_e = w.shape[0]
         e = jnp.broadcast_to(jnp.atleast_1d(e), (n_e,) + jnp.shape(e)[1:])
@@ -92,7 +105,7 @@ def hook_for_layer(
 ) -> MatmulHook:
     if analog_cfg is None or layer_energies is None:
         return MatmulHook()
-    lk = jax.random.fold_in(key, layer_idx)
+    lk = fold_key(key, layer_idx)
     return AnalogHook(
         cfg=analog_cfg, energies=layer_energies, key=lk, n_repeats=n_repeats
     )

@@ -26,7 +26,7 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.analog import AnalogConfig
+from repro.core.analog import AnalogConfig, fold_key
 from repro.models import griffin as griffin_lib
 from repro.models import moe as moe_lib
 from repro.models import xlstm as xlstm_lib
@@ -55,6 +55,11 @@ class AnalogSpec:
     ``n_repeats`` is the serving-time dynamic-precision knob (paper §IV):
     every matmul site runs K-repeat averaged at its per-site energy, fused
     in-kernel on the Pallas backend (noise / sqrt(K), no extra HBM traffic).
+
+    ``key`` may be a single PRNG key, or a stacked (B, ...) array of
+    per-request keys (one per batch row): every site then draws an
+    independent noise stream per row, the serving engine's guarantee that a
+    request's tokens don't depend on its batch-mates.
     """
 
     cfg: AnalogConfig
@@ -393,6 +398,21 @@ def energy_macs(cfg: ModelConfig, seq_len: int) -> PyTree:
 # ===========================================================================
 
 
+def _cache_store(cache, new, slot):
+    """Write a one-token KV slab into the cache at ``slot``.
+
+    ``slot`` scalar: uniform position for the whole batch (the classic
+    decode path, a dynamic_update_slice). ``slot`` (B,): per-row slots — the
+    serving engine batches requests with different prompt lengths, so each
+    row writes (and later attends) at its own position. Both forms update
+    one slot per row in place; neither rewrites the cache.
+    """
+    if slot.ndim == 0:
+        return jax.lax.dynamic_update_slice(cache, new.astype(cache.dtype), (0, slot, 0, 0))
+    rows = jnp.arange(cache.shape[0])
+    return cache.at[rows, slot].set(new[:, 0].astype(cache.dtype))
+
+
 def _attn_sublayer(
     x,
     p,
@@ -440,24 +460,23 @@ def _attn_sublayer(
     if mode == "decode":
         k_cache, v_cache = cache  # (B, S, KH, hd)
         s_len = k_cache.shape[1]
+        pos_arr = jnp.asarray(pos)
         if window is not None:
-            slot = jnp.asarray(pos) % window
-            k_cache = jax.lax.dynamic_update_slice(
-                k_cache, k.astype(k_cache.dtype), (0, slot, 0, 0)
-            )
-            v_cache = jax.lax.dynamic_update_slice(
-                v_cache, v.astype(v_cache.dtype), (0, slot, 0, 0)
-            )
+            slot = pos_arr % window
+            k_cache = _cache_store(k_cache, k, slot)
+            v_cache = _cache_store(v_cache, v, slot)
             base = jnp.arange(s_len)
-            slot_pos = jnp.where(base <= slot, pos - slot + base, pos - slot - s_len + base)
+            if pos_arr.ndim == 0:
+                slot_pos = jnp.where(
+                    base <= slot, pos_arr - slot + base, pos_arr - slot - s_len + base
+                )
+            else:  # per-row positions: (B, S) slot->absolute-position map
+                off, wrap = (pos_arr - slot)[:, None], (pos_arr - slot - s_len)[:, None]
+                slot_pos = jnp.where(base[None, :] <= slot[:, None], off + base, wrap + base)
             out = decode_attention(q, k_cache, v_cache, pos, slot_pos=slot_pos, window=window)
         else:
-            k_cache = jax.lax.dynamic_update_slice(
-                k_cache, k.astype(k_cache.dtype), (0, jnp.asarray(pos), 0, 0)
-            )
-            v_cache = jax.lax.dynamic_update_slice(
-                v_cache, v.astype(v_cache.dtype), (0, jnp.asarray(pos), 0, 0)
-            )
+            k_cache = _cache_store(k_cache, k, pos_arr)
+            v_cache = _cache_store(v_cache, v, pos_arr)
             k_cache = constrain(k_cache, "batch", "kv_seq", "kv_heads", None)
             v_cache = constrain(v_cache, "batch", "kv_seq", "kv_heads", None)
             out = decode_attention(q, k_cache, v_cache, pos)
@@ -776,7 +795,7 @@ def train_loss(params, batch, cfg: ModelConfig, analog=None) -> Array:
         hook = AnalogHook(
             cfg=analog.cfg,
             energies={"lm_head": analog.energies["lm_head"]},
-            key=jax.random.fold_in(analog.key, 0x1A57),
+            key=fold_key(analog.key, 0x1A57),
         )
     return chunked_xent(
         h,
@@ -889,23 +908,38 @@ def batch_axes(batch: dict) -> dict:
     return out
 
 
-def prefill(params, batch, cfg: ModelConfig, analog=None, cache_len=None):
-    """Run the prompt; returns (cache, last_hidden (B,1,d))."""
+def prefill(params, batch, cfg: ModelConfig, analog=None, cache_len=None, lengths=None):
+    """Run the prompt; returns (cache, last_hidden (B,1,d)).
+
+    ``lengths`` (B,): per-row true prompt lengths for bucket-padded batches —
+    the last hidden is gathered at each row's final *real* token. Global
+    causal attention guarantees right-padding never reaches positions before
+    it; sliding-window ring caches and recurrent (griffin/xlstm) state DO
+    absorb pad tokens, so bucket-padded serving of those families must not
+    rely on this (the serving engine rejects them).
+    """
     h, cache = forward_hidden(
         params, batch, cfg, mode="prefill", analog=analog, cache_len=cache_len
     )
-    return cache, h[:, -1:]
+    if lengths is None:
+        return cache, h[:, -1:]
+    idx = jnp.clip(jnp.asarray(lengths) - 1, 0, h.shape[1] - 1)[:, None, None]
+    h_last = jnp.take_along_axis(h, jnp.broadcast_to(idx, (h.shape[0], 1, h.shape[2])), axis=1)
+    return cache, h_last
 
 
 def decode_step(params, cache, batch, pos, cfg: ModelConfig, analog=None):
     """One token step. batch: {"tokens": (B,1)} or {"embeds": (B,1,d)}.
-    ``pos``: scalar position of the new token. Returns (logits, new_cache)."""
+    ``pos``: position of the new token — scalar, or (B,) per-row positions
+    (bucket-batched serving: requests with different prompt lengths decode
+    together, each row at its own position). Returns (logits, new_cache)."""
     if cfg.frontend == "patch" and "patch_embeds" not in batch:
         # decode consumes plain tokens after the image prefix
         h = jnp.take(params["embed"], batch["tokens"], axis=0).astype(cfg.compute_dtype)
     else:
         h, _ = _embed_inputs(params, batch, cfg)
-    positions = jnp.full((h.shape[0], 1), pos)
+    pos = jnp.asarray(pos)
+    positions = pos[:, None] if pos.ndim else jnp.full((h.shape[0], 1), pos)
     h, new_cache = _run_stack(
         params, h, cfg, mode="decode", cache=cache, pos=pos,
         positions=positions, analog=analog,

@@ -22,7 +22,6 @@ import time
 from typing import Any, Callable, Dict, Optional
 
 import jax
-import numpy as np
 
 from repro.checkpoint.store import CheckpointManager, reshard
 from repro.data.pipeline import TokenTaskConfig, markov_batch
@@ -183,11 +182,25 @@ class TrainDriver:
     # -- elastic ------------------------------------------------------------
 
     def resize(self, new_mesh) -> None:
-        """Elastic re-mesh: checkpoint live state, rebuild step for the new
-        mesh, reshard state onto it."""
+        """Elastic re-mesh: restore live state, rebuild the step for the new
+        mesh, reshard the live arrays onto it, checkpoint the resharded
+        state.
+
+        Resharding the live arrays before the save commits them onto the
+        new mesh while the old devices are still reachable, so the blocking
+        save reads from the new mesh — on a real cluster the old mesh is
+        exactly what is being drained. (Checkpoint bytes are host numpy
+        either way; the reshard is about which devices the save path and any
+        continued training touch.) After this returns, ``run()`` restores
+        and resumes bit-exactly on the new mesh.
+        """
         step, state = self._restore_or_init()
         self.mesh = new_mesh
         self._build()
-        # state arrays carry old shardings; recommit onto the new mesh
-        host = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), state)
-        self.ckpt.save(step, host, blocking=True)
+        with use_mesh(self.mesh):
+            state = {
+                "params": reshard(state["params"], self._shardings["params"]),
+                "opt": reshard(state["opt"], self._shardings["opt"]),
+            }
+            jax.block_until_ready(state)
+        self.ckpt.save(step, state, blocking=True)

@@ -1,0 +1,25 @@
+"""Bucket-batched analog serving: shape buckets, AOT executable cache,
+precision-tiered scheduling, and the engine tying them to models/lm.py."""
+from repro.serving.bucketing import (
+    DEFAULT_BATCH_BUCKETS,
+    DEFAULT_SEQ_BUCKETS,
+    bucket_shape,
+    next_bucket,
+    pad_to_bucket,
+)
+from repro.serving.cache import ExecutableCache, aot_compile
+from repro.serving.engine import ServingEngine
+from repro.serving.scheduler import Request, TierScheduler
+
+__all__ = [
+    "DEFAULT_BATCH_BUCKETS",
+    "DEFAULT_SEQ_BUCKETS",
+    "ExecutableCache",
+    "Request",
+    "ServingEngine",
+    "TierScheduler",
+    "aot_compile",
+    "bucket_shape",
+    "next_bucket",
+    "pad_to_bucket",
+]

@@ -1,0 +1,72 @@
+"""AOT executable cache: compile once per (bucket, tier, backend), then hit.
+
+Keys are built by the engine from everything that changes the lowered
+program: phase (prefill/decode), bucket shape, cache length, n_repeats tier,
+backend, and noise kind. Values are ``jax.jit(...).lower(...).compile()``
+executables — calling one can *never* re-trace, so a 100% steady-state hit
+rate is equivalent to zero steady-state retraces.
+
+Hit/miss/compile-time counters are first-class: the serving bench asserts
+on them and they belong in any production dashboard.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Dict, Hashable, List
+
+
+class ExecutableCache:
+    """Maps hashable keys -> compiled executables, counting hits/misses."""
+
+    def __init__(self):
+        self._exes: Dict[Hashable, Any] = {}
+        self.hits = 0
+        self.misses = 0
+        self.compile_s = 0.0
+        #: per-miss records [(key, seconds)] — the bench's retrace audit trail
+        self.miss_log: List[tuple] = []
+
+    def get(self, key: Hashable, build: Callable[[], Any]) -> Any:
+        """Return the executable for ``key``, compiling via ``build`` on miss."""
+        exe = self._exes.get(key)
+        if exe is not None:
+            self.hits += 1
+            return exe
+        self.misses += 1
+        t0 = time.perf_counter()
+        exe = build()
+        dt = time.perf_counter() - t0
+        self.compile_s += dt
+        self.miss_log.append((key, dt))
+        self._exes[key] = exe
+        return exe
+
+    def __len__(self) -> int:
+        return len(self._exes)
+
+    def __contains__(self, key: Hashable) -> bool:
+        return key in self._exes
+
+    def reset_stats(self) -> None:
+        """Zero the counters, keeping compiled executables (warmup -> steady)."""
+        self.hits = 0
+        self.misses = 0
+        self.compile_s = 0.0
+        self.miss_log = []
+
+    def stats(self) -> dict:
+        total = self.hits + self.misses
+        return {
+            "hits": self.hits,
+            "misses": self.misses,
+            "hit_rate": self.hits / total if total else 0.0,
+            "entries": len(self._exes),
+            "compile_s": self.compile_s,
+        }
+
+
+def aot_compile(fn, *arg_specs, donate_argnums=()) -> Any:
+    """``jax.jit(fn).lower(specs).compile()`` — the cache's build helper."""
+    import jax
+
+    return jax.jit(fn, donate_argnums=donate_argnums).lower(*arg_specs).compile()

@@ -1,0 +1,324 @@
+"""Bucket-batched analog serving engine.
+
+Takes a queue of heterogeneous generation requests — varying prompt length,
+batch arrival pattern, and precision tier (``n_repeats`` = the paper's
+dynamic-precision K) — and serves them through the fused analog path:
+
+  submit -> TierScheduler groups same-K requests         (scheduler.py)
+         -> pad into a power-of-two (batch, seq) bucket  (bucketing.py)
+         -> AOT executable per (bucket, K, backend)      (cache.py)
+         -> prefill once, then bucketed decode steps     (models/lm.py)
+
+Correctness contract: every request is served with its *own* PRNG key
+stacked into the batch (per-request noise streams, see AnalogHook), its own
+true prompt length (per-row decode positions), and greedy sampling — so its
+tokens are bit-identical to running it alone at the same seq bucket,
+regardless of batch-mates or batch padding. The engine's batching is a pure
+throughput optimization, not a numerics change.
+
+That contract is only sound for dense models with global causal attention,
+and the engine enforces it: sliding-window ring caches keep the last
+`window` positions of the *padded* sequence (rolling a short prompt's keys
+out entirely), recurrent (griffin/xlstm) state scans pad tokens into its
+hidden state, and MoE expert capacity is consumed by pad tokens at the
+expense of real ones. Serving those families needs padding-aware prefill —
+future work, rejected loudly rather than served wrongly.
+
+Precision tiers can never share a batch: K is static in the fused kernel
+(baked into the trace), which is exactly why the tier scheduler exists.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.analog import AnalogConfig, raw_key
+from repro.models import lm
+from repro.models.config import ModelConfig
+from repro.serving.bucketing import (
+    DEFAULT_BATCH_BUCKETS,
+    DEFAULT_SEQ_BUCKETS,
+    bucket_shape,
+    pad_to_bucket,
+)
+from repro.serving.cache import ExecutableCache, aot_compile
+from repro.serving.scheduler import Request, TierScheduler
+
+Array = jax.Array
+
+
+class ServingEngine:
+    """Serves mixed-precision generation traffic over a frozen analog model.
+
+    ``analog_cfg=None`` serves the digital model (same batching machinery,
+    no noise). ``energies`` is an ``init_energy_tree``-shaped allocation —
+    per-site energy at K=1; a tier's total spend is ``K * energy``.
+
+    ``analog_cfg`` and ``energies`` are FROZEN for the engine's lifetime:
+    they are baked into every compiled executable as trace-time constants
+    (the cache key doesn't cover them), so mutation would silently serve
+    stale energies from warm buckets. ``energies`` is a read-only property;
+    a recalibrated allocation means a new engine. ``params`` are runtime
+    arguments and may be swapped freely.
+    """
+
+    def __init__(
+        self,
+        params,
+        model_cfg: ModelConfig,
+        *,
+        analog_cfg: Optional[AnalogConfig] = None,
+        energies=None,
+        max_gen: int = 32,
+        max_batch: int = 8,
+        max_wait: float = 0.05,
+        batch_buckets: Sequence[int] = DEFAULT_BATCH_BUCKETS,
+        seq_buckets: Sequence[int] = DEFAULT_SEQ_BUCKETS,
+        pad_id: int = 0,
+        seed: int = 0,
+    ):
+        if analog_cfg is not None and energies is None:
+            raise ValueError("analog serving requires an energy tree")
+        if model_cfg.family != "dense" or model_cfg.sliding_window is not None:
+            raise ValueError(
+                "ServingEngine supports dense global-attention models only: "
+                "bucket right-padding corrupts windowed ring caches, "
+                "recurrent state, and MoE expert capacity (got family="
+                f"{model_cfg.family!r}, sliding_window={model_cfg.sliding_window})"
+            )
+        self.params = params
+        self.model_cfg = model_cfg
+        self.analog_cfg = analog_cfg
+        self._energies = energies
+        self.max_gen = max_gen
+        self.batch_buckets = tuple(batch_buckets)
+        self.seq_buckets = tuple(seq_buckets)
+        self.pad_id = pad_id
+        self.scheduler = TierScheduler(
+            max_batch=min(max_batch, max(batch_buckets)),
+            max_wait=max_wait,
+            seq_buckets=seq_buckets,
+        )
+        self.exe_cache = ExecutableCache()
+        self._base_key = raw_key(jax.random.PRNGKey(seed))
+        self._param_specs = jax.tree.map(
+            lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), params
+        )
+        self._uid = 0
+        self._clock: Optional[str] = None  # "real" | "virtual", set on first use
+        self._traces = 0  # incremented at trace time inside the step fns
+        self.stats = {
+            "requests": 0,
+            "batches": 0,
+            "tokens_generated": 0,
+            "padded_rows": 0,
+            "decode_steps": 0,
+        }
+
+    # -- request intake ------------------------------------------------------
+
+    def _now(self, now: Optional[float], phase: str) -> float:
+        """Resolve a timestamp, pinning the engine to one clock domain.
+
+        Deadlines compare submit arrivals against poll times, so mixing the
+        real clock (``now=None``) with caller-supplied virtual times would
+        silently dispatch everything immediately (or never) — rejected
+        instead.
+        """
+        mode = "real" if now is None else "virtual"
+        if self._clock is None:
+            self._clock = mode
+        elif self._clock != mode:
+            raise ValueError(
+                f"{phase}() used the {mode} clock but this engine is on the "
+                f"{self._clock} clock; pass `now` consistently (or never)"
+            )
+        return time.monotonic() if now is None else now
+
+    def submit(
+        self,
+        tokens,
+        *,
+        n_repeats: int = 1,
+        max_new_tokens: int = 16,
+        key: Optional[Array] = None,
+        now: Optional[float] = None,
+    ) -> int:
+        """Enqueue one request; returns its uid (results key in poll())."""
+        if max_new_tokens < 1:
+            raise ValueError(f"max_new_tokens must be >= 1, got {max_new_tokens}")
+        if n_repeats < 1:
+            raise ValueError(f"n_repeats must be >= 1, got {n_repeats}")
+        uid = self._uid
+        self._uid += 1
+        if key is None:
+            key = jax.random.fold_in(self._base_key, uid)
+        if self.analog_cfg is None:
+            n_repeats = 1  # digital serving: K is a no-op, don't split batches on it
+        req = Request(
+            uid=uid,
+            tokens=np.asarray(tokens, np.int32).reshape(-1),
+            n_repeats=int(n_repeats),
+            max_new_tokens=min(int(max_new_tokens), self.max_gen),
+            key=raw_key(key),
+            arrival=self._now(now, "submit"),
+        )
+        self.scheduler.submit(req)
+        self.stats["requests"] += 1
+        return uid
+
+    def poll(self, now: Optional[float] = None) -> Dict[int, np.ndarray]:
+        """Run every batch that is ready at ``now``; returns finished uids."""
+        now = self._now(now, "poll")
+        results: Dict[int, np.ndarray] = {}
+        for reqs in self.scheduler.pop_ready(now):
+            results.update(self._run_batch(reqs))
+        return results
+
+    def flush(self) -> Dict[int, np.ndarray]:
+        """Drain the queue regardless of deadlines (end of replay/shutdown)."""
+        results: Dict[int, np.ndarray] = {}
+        for reqs in self.scheduler.flush():
+            results.update(self._run_batch(reqs))
+        return results
+
+    # -- execution -----------------------------------------------------------
+
+    def _cfg_sig(self) -> tuple:
+        if self.analog_cfg is None:
+            return ("digital",)
+        return (self.analog_cfg.backend, self.analog_cfg.noise.kind)
+
+    def _analog_spec(self, keys: Array, n_repeats: int, pos: Optional[Array] = None):
+        """AnalogSpec for one batch: stacked per-request keys, folded with
+        the decode position so every generated token draws fresh noise."""
+        if self.analog_cfg is None:
+            return None
+        k = keys if pos is None else jax.vmap(jax.random.fold_in)(keys, pos)
+        return lm.AnalogSpec(
+            cfg=self.analog_cfg, energies=self._energies, key=k, n_repeats=n_repeats
+        )
+
+    def _keys_spec(self, bb: int) -> jax.ShapeDtypeStruct:
+        """Spec for a stacked raw-key batch, sized from the actual key impl
+        (threefry keys are 2 uint32 words; other impls differ)."""
+        return jax.ShapeDtypeStruct(
+            (bb,) + self._base_key.shape, self._base_key.dtype
+        )
+
+    def _build_prefill(self, bb: int, sb: int, n_repeats: int):
+        cfg = self.model_cfg
+        cache_len = sb + self.max_gen
+
+        def fn(params, tokens, lengths, keys):
+            self._traces += 1  # runs at trace time only: the retrace audit
+            analog = self._analog_spec(keys, n_repeats)
+            cache, h_last = lm.prefill(
+                params, {"tokens": tokens}, cfg,
+                analog=analog, cache_len=cache_len, lengths=lengths,
+            )
+            logits = lm.logits_last(params, h_last, cfg)
+            tok = jnp.argmax(logits[:, 0, 0], axis=-1).astype(jnp.int32)
+            return cache, tok
+
+        i32 = jnp.int32
+        return aot_compile(
+            fn,
+            self._param_specs,
+            jax.ShapeDtypeStruct((bb, sb), i32),
+            jax.ShapeDtypeStruct((bb,), i32),
+            self._keys_spec(bb),
+        )
+
+    def _build_decode(self, bb: int, sb: int, n_repeats: int):
+        cfg = self.model_cfg
+        cache_len = sb + self.max_gen
+
+        def fn(params, cache, tok, pos, keys):
+            self._traces += 1
+            analog = self._analog_spec(keys, n_repeats, pos=pos)
+            logits, new_cache = lm.decode_step(
+                params, cache, {"tokens": tok}, pos, cfg, analog=analog
+            )
+            nxt = jnp.argmax(logits[:, 0, 0], axis=-1).astype(jnp.int32)
+            return nxt, new_cache
+
+        i32 = jnp.int32
+        cache_specs = jax.eval_shape(lambda: lm.init_cache(cfg, bb, cache_len))
+        return aot_compile(
+            fn,
+            self._param_specs,
+            cache_specs,
+            jax.ShapeDtypeStruct((bb, 1), i32),
+            jax.ShapeDtypeStruct((bb,), i32),
+            self._keys_spec(bb),
+            donate_argnums=(1,),
+        )
+
+    def _batch_keys(self, reqs: List[Request], bb: int) -> Array:
+        rows = [r.key for r in reqs]
+        # batch-padding rows get a fixed key; their outputs are discarded and
+        # per-request streams keep them from touching real rows anyway
+        rows += [raw_key(jax.random.PRNGKey(0))] * (bb - len(reqs))
+        return jnp.stack([jnp.asarray(k, self._base_key.dtype) for k in rows])
+
+    def _run_batch(self, reqs: List[Request]) -> Dict[int, np.ndarray]:
+        n_repeats = reqs[0].n_repeats
+        assert all(r.n_repeats == n_repeats for r in reqs), "mixed-K batch"
+        bb, sb = bucket_shape(
+            len(reqs), max(r.prompt_len for r in reqs),
+            batch_buckets=self.batch_buckets, seq_buckets=self.seq_buckets,
+        )
+        tokens_np, lengths_np = pad_to_bucket(
+            [r.tokens for r in reqs], (bb, sb), pad_id=self.pad_id
+        )
+        tokens = jnp.asarray(tokens_np)
+        lengths = jnp.asarray(lengths_np)
+        keys = self._batch_keys(reqs, bb)
+        sig = self._cfg_sig()
+
+        prefill_exe = self.exe_cache.get(
+            ("prefill", bb, sb, n_repeats) + sig,
+            lambda: self._build_prefill(bb, sb, n_repeats),
+        )
+        cache, tok = prefill_exe(self.params, tokens, lengths, keys)
+        toks = [tok]
+        n_steps = max(r.max_new_tokens for r in reqs) - 1
+        if n_steps > 0:  # single-token batches never need the decode exe
+            decode_exe = self.exe_cache.get(
+                ("decode", bb, sb, n_repeats) + sig,
+                lambda: self._build_decode(bb, sb, n_repeats),
+            )
+        for t in range(n_steps):
+            pos = lengths + t
+            tok, cache = decode_exe(self.params, cache, tok[:, None], pos, keys)
+            toks.append(tok)
+
+        seq = np.stack([np.asarray(t) for t in toks], axis=1)  # (bb, n_steps+1)
+        out: Dict[int, np.ndarray] = {}
+        for i, r in enumerate(reqs):
+            out[r.uid] = seq[i, : r.max_new_tokens].copy()
+            self.stats["tokens_generated"] += r.max_new_tokens
+        self.stats["batches"] += 1
+        self.stats["padded_rows"] += bb - len(reqs)
+        self.stats["decode_steps"] += n_steps
+        return out
+
+    # -- introspection -------------------------------------------------------
+
+    @property
+    def energies(self):
+        """The frozen energy allocation (baked into compiled executables)."""
+        return self._energies
+
+    @property
+    def trace_count(self) -> int:
+        """Number of jax traces performed (== executable-cache misses)."""
+        return self._traces
+
+    def cache_stats(self) -> dict:
+        return self.exe_cache.stats()

@@ -1,0 +1,98 @@
+"""Precision-tiered request scheduling.
+
+The fused kernel's repeat count K is *static* (baked into the trace), so a
+single batch cannot mix precision tiers — tier grouping is what makes
+dynamic precision servable at all. The scheduler keeps one FIFO queue per
+(n_repeats, seq_bucket) group and dispatches a group when it fills its
+batch bucket or its oldest request has waited ``max_wait`` seconds (the
+anti-starvation deadline for low-traffic tiers).
+
+Everything here is pure Python and deterministic: the same submissions with
+the same clock readings always produce the same batches in the same order.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.serving.bucketing import DEFAULT_SEQ_BUCKETS, next_bucket
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request at a precision tier.
+
+    ``n_repeats`` is the paper's dynamic-precision knob: K analog repeats
+    per matmul (noise / sqrt(K) at K x energy). ``key`` seeds this request's
+    private noise streams — outputs are reproducible and independent of
+    batch-mates.
+    """
+
+    uid: int
+    tokens: np.ndarray  # (L,) prompt token ids
+    n_repeats: int = 1
+    max_new_tokens: int = 16
+    key: Optional[object] = None  # jax PRNG key; engine fills a default
+    arrival: float = 0.0
+
+    @property
+    def prompt_len(self) -> int:
+        return int(np.asarray(self.tokens).reshape(-1).shape[0])
+
+
+class TierScheduler:
+    """Groups same-tier requests into shared bucket batches with a deadline."""
+
+    def __init__(
+        self,
+        *,
+        max_batch: int = 8,
+        max_wait: float = 0.05,
+        seq_buckets: Sequence[int] = DEFAULT_SEQ_BUCKETS,
+    ):
+        self.max_batch = max_batch
+        self.max_wait = max_wait
+        self.seq_buckets = tuple(seq_buckets)
+        # group (n_repeats, seq_bucket) -> FIFO of requests. OrderedDict so
+        # dispatch order over groups is submission-ordered, not hash-ordered.
+        self._queues: "OrderedDict[Tuple[int, int], List[Request]]" = OrderedDict()
+
+    def group_of(self, req: Request) -> Tuple[int, int]:
+        return (req.n_repeats, next_bucket(req.prompt_len, self.seq_buckets))
+
+    def submit(self, req: Request) -> Tuple[int, int]:
+        g = self.group_of(req)
+        self._queues.setdefault(g, []).append(req)
+        return g
+
+    @property
+    def n_pending(self) -> int:
+        return sum(len(q) for q in self._queues.values())
+
+    def pop_ready(self, now: float) -> List[List[Request]]:
+        """Batches ready at time ``now``: full groups, plus any group whose
+        oldest request has aged past the max-wait deadline."""
+        batches: List[List[Request]] = []
+        for g in list(self._queues):
+            q = self._queues[g]
+            while len(q) >= self.max_batch:
+                batches.append(q[: self.max_batch])
+                del q[: self.max_batch]
+            if q and now - q[0].arrival >= self.max_wait:
+                batches.append(q[:])
+                q.clear()
+            if not q:
+                del self._queues[g]
+        return batches
+
+    def flush(self) -> List[List[Request]]:
+        """Drain everything (shutdown / end of replay), deadline ignored."""
+        batches = []
+        for g in list(self._queues):
+            q = self._queues.pop(g)
+            for i in range(0, len(q), self.max_batch):
+                batches.append(q[i : i + self.max_batch])
+        return batches

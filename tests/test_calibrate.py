@@ -152,6 +152,63 @@ def test_min_energy_search_dynamic_below_uniform(problem):
     )
 
 
+def test_warm_start_plumbing_leaves_search_unchanged(problem):
+    """A make_fn that accepts ``init`` gets the best feasible probe's
+    artifact threaded in — and for a make_fn whose output doesn't depend on
+    it (uniform allocation), the search trajectory and result are identical
+    to the cold path."""
+    apply_fn, macs = problem["apply_fn"], problem["macs"]
+    x, y = problem["x"], problem["y"]
+    test_batch = [(x[3072:], y[3072:])]
+    clean_acc = problem["clean_acc"]
+    seen_inits = []
+
+    def make_cold(target):
+        e = to_energy(uniform_log_energies(macs, target))
+        return e, float(avg_energy_per_mac(e, macs))
+
+    def make_warm(target, init=None):
+        seen_inits.append(init)
+        return make_cold(target)
+
+    def acc_fn(energies):
+        return eval_accuracy(apply_fn, energies, test_batch, key=KEY, n_noise_samples=4)
+
+    kw = dict(float_acc=clean_acc, lo=1e-4, hi=10.0, max_iters=5)
+    res_cold = min_energy_search(make_cold, acc_fn, **kw)
+    res_warm = min_energy_search(make_warm, acc_fn, **kw)
+    assert res_warm.trace == res_cold.trace
+    assert res_warm.min_e_per_mac == res_cold.min_e_per_mac
+    assert res_warm.achieved_e_per_mac == res_cold.achieved_e_per_mac
+    # first probe is cold; once a feasible allocation exists it is threaded
+    assert seen_inits[0] is None
+    assert any(i is not None for i in seen_inits[1:])
+
+
+def test_eval_accuracy_vectorized_matches_loop(problem):
+    """The vmapped-noise eval must reproduce the per-sample loop exactly."""
+    apply_fn, macs = problem["apply_fn"], problem["macs"]
+    x, y = problem["x"], problem["y"]
+    batches = [(x[3072:3456], y[3072:3456]), (x[3456:3840], y[3456:3840])]
+    energies = to_energy(uniform_log_energies(macs, 0.5))
+
+    def loop_eval(n):
+        fwd = jax.jit(apply_fn)
+        correct = total = 0
+        for bi, (xb, yb) in enumerate(batches):
+            for s in range(n):
+                k = jax.random.fold_in(jax.random.fold_in(KEY, bi), s)
+                pred = jnp.argmax(fwd(energies, xb, k), axis=-1)
+                correct += int(jnp.sum(pred == yb))
+                total += int(yb.size)
+        return correct / total
+
+    # n=1/5 take the vmap branch, n=9 the memory-bounded lax.map branch
+    for n in (1, 5, 9):
+        got = eval_accuracy(apply_fn, energies, batches, key=KEY, n_noise_samples=n)
+        assert got == loop_eval(n), n
+
+
 def test_penalty_pulls_energy_down(problem):
     apply_fn, macs = problem["apply_fn"], problem["macs"]
     x, y = problem["x"], problem["y"]

@@ -1,0 +1,305 @@
+"""Serving engine invariants: deterministic bucketing, per-tier batching,
+executable-cache behavior on replayed traffic, and the numerics contract —
+bucket-batched outputs are bit-identical to the unbatched per-request path
+(padded rows and batch-mates can never change a request's tokens)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import AnalogConfig, analog_dot
+from repro.models import init_energy_tree, init_params, lm
+from repro.models.config import ModelConfig
+from repro.serving import (
+    ServingEngine,
+    TierScheduler,
+    bucket_shape,
+    next_bucket,
+    pad_to_bucket,
+)
+from repro.serving.scheduler import Request
+
+KEY = jax.random.PRNGKey(0)
+MODEL = ModelConfig(
+    name="serve-test", family="dense", n_layers=2, d_model=32, n_heads=2,
+    n_kv_heads=1, d_ff=64, vocab_size=128, attn_q_chunk=16, attn_kv_chunk=16,
+    loss_chunk=32, dtype="float32",
+)
+ENERGY_AJ = 20.0
+SB = 32  # single seq bucket for the engine tests
+
+
+@pytest.fixture(scope="module")
+def env():
+    params = init_params(KEY, MODEL)
+    energies = init_energy_tree(MODEL, ENERGY_AJ)
+    engine = ServingEngine(
+        params, MODEL, analog_cfg=AnalogConfig.shot(), energies=energies,
+        max_gen=8, max_batch=4, max_wait=1.0,
+        batch_buckets=(1, 2, 4), seq_buckets=(SB,),
+    )
+    return dict(params=params, energies=energies, engine=engine)
+
+
+# --------------------------------------------------------------------------
+# bucketing: deterministic, total, shape-correct
+# --------------------------------------------------------------------------
+
+
+def test_bucket_selection_deterministic():
+    buckets = (32, 64, 128)
+    for v in (1, 31, 32, 33, 64, 100, 128):
+        assert next_bucket(v, buckets) == next_bucket(v, buckets)
+        assert next_bucket(v, buckets) >= v
+    assert next_bucket(33, buckets) == 64
+    assert bucket_shape(3, 40, batch_buckets=(1, 2, 4), seq_buckets=buckets) == (4, 64)
+    with pytest.raises(ValueError):
+        next_bucket(129, buckets)
+    with pytest.raises(ValueError):
+        next_bucket(0, buckets)
+
+
+def test_pad_to_bucket_shapes_and_lengths():
+    prompts = [np.arange(5), np.arange(9)]
+    tokens, lengths = pad_to_bucket(prompts, (4, 16), pad_id=0)
+    assert tokens.shape == (4, 16) and lengths.shape == (4,)
+    assert lengths.tolist() == [5, 9, 1, 1]
+    assert tokens[0, :5].tolist() == list(range(5))
+    assert (tokens[0, 5:] == 0).all() and (tokens[2:] == 0).all()
+    with pytest.raises(ValueError):
+        pad_to_bucket([np.arange(20)], (1, 16))
+
+
+# --------------------------------------------------------------------------
+# scheduler: per-tier batches, max-wait deadline, determinism
+# --------------------------------------------------------------------------
+
+
+def _req(uid, length, k, arrival):
+    return Request(uid=uid, tokens=np.zeros(length, np.int32), n_repeats=k,
+                   arrival=arrival)
+
+
+def test_mixed_k_queue_produces_per_tier_batches():
+    sch = TierScheduler(max_batch=2, max_wait=10.0, seq_buckets=(32,))
+    for uid, k in enumerate([1, 2, 1, 2, 4]):
+        sch.submit(_req(uid, 8, k, arrival=0.0))
+    batches = sch.pop_ready(now=0.0)  # only full groups dispatch
+    assert [[r.uid for r in b] for b in batches] == [[0, 2], [1, 3]]
+    for b in batches:
+        assert len({r.n_repeats for r in b}) == 1  # never mixes tiers
+    assert sch.n_pending == 1  # the lone K=4 request waits
+
+
+def test_max_wait_deadline_flushes_low_traffic_tier():
+    sch = TierScheduler(max_batch=4, max_wait=5.0, seq_buckets=(32,))
+    sch.submit(_req(0, 8, 4, arrival=0.0))
+    assert sch.pop_ready(now=4.9) == []  # under deadline: keep waiting
+    batches = sch.pop_ready(now=5.0)
+    assert [[r.uid for r in b] for b in batches] == [[0]]
+    assert sch.n_pending == 0
+
+
+def test_scheduler_replay_deterministic():
+    def run():
+        sch = TierScheduler(max_batch=2, max_wait=1.0, seq_buckets=(16, 32))
+        out = []
+        for uid, (length, k, t) in enumerate(
+            [(8, 1, 0.0), (20, 1, 0.1), (8, 2, 0.2), (9, 1, 0.3), (30, 2, 0.4)]
+        ):
+            sch.submit(_req(uid, length, k, arrival=t))
+            out += [[r.uid for r in b] for b in sch.pop_ready(now=t)]
+        out += [[r.uid for r in b] for b in sch.flush()]
+        return out
+
+    assert run() == run()
+
+
+# --------------------------------------------------------------------------
+# stacked per-request keys: the noise-isolation primitive
+# --------------------------------------------------------------------------
+
+
+def test_stacked_keys_match_unbatched_analog_dot():
+    cfg = AnalogConfig.shot()
+    keys = jnp.stack([jax.random.fold_in(KEY, i) for i in range(3)])
+    x = jax.random.normal(KEY, (3, 8, 16))
+    w = jax.random.normal(jax.random.fold_in(KEY, 7), (16, 12)) * 0.1
+    e = jnp.asarray(5.0)
+    y = analog_dot(x, w, cfg=cfg, energy=e, key=keys, n_repeats=2)
+    for i in range(3):
+        solo = analog_dot(x[i], w, cfg=cfg, energy=e, key=keys[i], n_repeats=2)
+        np.testing.assert_array_equal(np.asarray(y[i]), np.asarray(solo))
+    # rows are invariant to their batch-mates
+    y_perm = analog_dot(x[::-1], w, cfg=cfg, energy=e, key=keys[::-1], n_repeats=2)
+    np.testing.assert_array_equal(np.asarray(y_perm[::-1]), np.asarray(y))
+
+
+# --------------------------------------------------------------------------
+# engine: batching is invisible to each request's numerics
+# --------------------------------------------------------------------------
+
+PROMPT_LENS = (7, 19, 28)
+
+
+def _prompts_and_keys():
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, MODEL.vocab_size, L) for L in PROMPT_LENS]
+    keys = [jax.random.fold_in(jax.random.PRNGKey(5), i) for i in range(len(prompts))]
+    return prompts, keys
+
+
+def test_padded_rows_and_batchmates_dont_change_outputs(env):
+    """3 requests share a (4, 32) bucket (1 padded row): every request's
+    tokens must equal its solo run at batch bucket 1."""
+    eng = env["engine"]
+    prompts, keys = _prompts_and_keys()
+
+    uids = [
+        eng.submit(p, n_repeats=2, max_new_tokens=6, key=k, now=0.0)
+        for p, k in zip(prompts, keys)
+    ]
+    padded_before = eng.stats["padded_rows"]
+    batched = eng.flush()
+    assert eng.stats["padded_rows"] - padded_before == 1  # bb=4 held 3 reqs
+
+    for uid, p, k in zip(uids, prompts, keys):
+        solo_uid = eng.submit(p, n_repeats=2, max_new_tokens=6, key=k, now=0.0)
+        solo = eng.flush()[solo_uid]
+        np.testing.assert_array_equal(batched[uid], solo)
+
+
+def test_engine_matches_unbatched_analog_dot_path(env):
+    """Engine tokens == a from-scratch, unjitted prefill/decode loop through
+    the plain analog_dot path (no engine, no AOT, no batching)."""
+    eng, params, energies = env["engine"], env["params"], env["energies"]
+    prompts, keys = _prompts_and_keys()
+    gen = 4
+
+    uids = [
+        eng.submit(p, n_repeats=2, max_new_tokens=gen, key=k, now=0.0)
+        for p, k in zip(prompts, keys)
+    ]
+    got = eng.flush()
+
+    shot = AnalogConfig.shot()
+    for uid, prompt, key in zip(uids, prompts, keys):
+        L = len(prompt)
+        tokens = np.zeros((1, SB), np.int32)
+        tokens[0, :L] = prompt
+        lengths = jnp.asarray([L], jnp.int32)
+        skeys = jnp.stack([key])  # (1, 2): the stacked per-request form
+        analog = lm.AnalogSpec(cfg=shot, energies=energies, key=skeys, n_repeats=2)
+        cache, h_last = lm.prefill(
+            params, {"tokens": jnp.asarray(tokens)}, MODEL,
+            analog=analog, cache_len=SB + eng.max_gen, lengths=lengths,
+        )
+        tok = jnp.argmax(lm.logits_last(params, h_last, MODEL)[:, 0, 0], axis=-1)
+        toks = [int(tok[0])]
+        for t in range(gen - 1):
+            pos = lengths + t
+            analog_t = lm.AnalogSpec(
+                cfg=shot, energies=energies,
+                key=jax.vmap(jax.random.fold_in)(skeys, pos), n_repeats=2,
+            )
+            logits, cache = lm.decode_step(
+                params, cache, {"tokens": tok[:, None].astype(jnp.int32)},
+                pos, MODEL, analog=analog_t,
+            )
+            tok = jnp.argmax(logits[:, 0, 0], axis=-1)
+            toks.append(int(tok[0]))
+        np.testing.assert_array_equal(got[uid], np.asarray(toks, np.int32))
+
+
+def test_executable_cache_hits_on_replayed_trace(env):
+    """Replaying a mixed-tier trace after warmup: zero misses, zero retraces,
+    and hits == 2 executables (prefill+decode) per dispatched batch."""
+    eng = env["engine"]
+    prompts, keys = _prompts_and_keys()
+
+    def replay():
+        for p, k in zip(prompts, keys):
+            eng.submit(p, n_repeats=2, max_new_tokens=4, key=k, now=0.0)
+        eng.submit(prompts[0], n_repeats=1, max_new_tokens=4, key=keys[0], now=0.0)
+        return eng.flush()
+
+    replay()  # warmup: compiles whatever earlier tests haven't
+    eng.exe_cache.reset_stats()
+    traces_before = eng.trace_count
+    batches_before = eng.stats["batches"]
+    out = replay()
+    assert len(out) == 4
+    n_batches = eng.stats["batches"] - batches_before
+    assert n_batches == 2  # one K=2 batch, one K=1 batch: tiers never mix
+    stats = eng.exe_cache.stats()
+    assert stats["misses"] == 0
+    assert stats["hits"] == 2 * n_batches
+    assert eng.trace_count == traces_before  # zero steady-state retraces
+
+
+@pytest.mark.parametrize("arch", ["granite-3-8b", "recurrentgemma-2b"])
+def test_per_row_positions_match_scalar_pos(arch):
+    """decode_step with pos=(B,) full of p must equal pos=p bit-exactly —
+    including the windowed ring-cache path (griffin local attention)."""
+    import dataclasses
+
+    from repro.configs import get_smoke_config
+
+    cfg = dataclasses.replace(get_smoke_config(arch), dtype="float32")
+    params = init_params(KEY, cfg)
+    b, t = 2, 16
+    toks = jax.random.randint(KEY, (b, t + 1), 0, cfg.vocab_size)
+    cache, _ = lm.prefill(params, {"tokens": toks[:, :t]}, cfg, cache_len=t + 1)
+    dec = {"tokens": toks[:, t:]}
+    logits_s, cache_s = lm.decode_step(params, cache, dec, t, cfg)
+    logits_v, cache_v = lm.decode_step(
+        params, cache, dec, jnp.full((b,), t, jnp.int32), cfg
+    )
+    np.testing.assert_array_equal(np.asarray(logits_s), np.asarray(logits_v))
+    for a, bb in zip(jax.tree.leaves(cache_s), jax.tree.leaves(cache_v)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(bb))
+
+
+def test_engine_rejects_padding_unsafe_families(env):
+    """Right-padding corrupts windowed ring caches / recurrent state / MoE
+    capacity — the engine must refuse those configs, not serve them wrongly."""
+    import dataclasses
+
+    windowed = dataclasses.replace(MODEL, sliding_window=8)
+    with pytest.raises(ValueError, match="dense global-attention"):
+        ServingEngine(env["params"], windowed)
+    griffin = dataclasses.replace(MODEL, family="griffin")
+    with pytest.raises(ValueError, match="dense global-attention"):
+        ServingEngine(env["params"], griffin)
+
+
+def test_digital_engine_and_tier_energy_accounting(env):
+    """analog_cfg=None serves the digital model: K is a no-op there, so
+    mixed-K submissions coalesce into one batch; submissions above max_gen
+    clip; uid results cover every request."""
+    eng = ServingEngine(
+        env["params"], MODEL, max_gen=4, max_batch=2, max_wait=0.0,
+        batch_buckets=(1, 2), seq_buckets=(SB,),
+    )
+    u0 = eng.submit(np.arange(10) % MODEL.vocab_size, max_new_tokens=99, now=0.0)
+    u1 = eng.submit(np.arange(4) % MODEL.vocab_size, n_repeats=4,
+                    max_new_tokens=2, now=0.0)
+    out = eng.flush()
+    assert set(out) == {u0, u1}
+    assert out[u0].shape == (4,) and out[u1].shape == (2,)
+    assert eng.stats["batches"] == 1  # digital mode never splits on K
+
+
+def test_engine_rejects_mixed_clock_domains(env):
+    eng = ServingEngine(
+        env["params"], MODEL, max_gen=4, max_batch=2, max_wait=0.0,
+        batch_buckets=(1, 2), seq_buckets=(SB,),
+    )
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        eng.submit(np.arange(4), max_new_tokens=0, now=0.0)
+    with pytest.raises(ValueError, match="n_repeats"):
+        eng.submit(np.arange(4), n_repeats=0, now=0.0)
+    eng.submit(np.arange(4) % MODEL.vocab_size, now=0.0)  # virtual clock
+    with pytest.raises(ValueError, match="clock"):
+        eng.poll()  # real clock: would mis-evaluate every deadline
+    assert eng.flush()  # flush ignores deadlines and drains fine
