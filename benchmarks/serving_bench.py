@@ -39,6 +39,14 @@ MODEL = dict(
     attn_kv_chunk=64, loss_chunk=128, dtype="float32",
 )
 SMOKE_MODEL = dict(MODEL, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128)
+#: non-dense smoke coverage: length-aware prefill serves stateful families;
+#: window 16 < the seq buckets, so ring gathers + recurrent pad suffixes run
+GRIFFIN_SMOKE_MODEL = dict(
+    name="serve-bench-griffin", family="griffin", n_layers=3, d_model=64,
+    n_heads=4, n_kv_heads=1, head_dim=16, d_ff=128, vocab_size=1024,
+    rnn_width=64, conv_width=4, local_window=16, attn_q_chunk=32,
+    attn_kv_chunk=32, loss_chunk=128, dtype="float32",
+)
 
 TIERS = (1, 2, 4)  # precision tiers: K repeats per analog op
 TIER_WEIGHTS = (0.5, 0.3, 0.2)
@@ -241,8 +249,13 @@ def serving_bench():
 @cache_json("serving_bench_smoke")
 def serving_bench_smoke():
     # two tiers + tight length range: groups fill even with few requests
-    return _bench(SMOKE_MODEL, n_requests=16, gen=6, max_len=48,
-                  tiers=(1, 4), weights=(0.6, 0.4))
+    out = _bench(SMOKE_MODEL, n_requests=16, gen=6, max_len=48,
+                 tiers=(1, 4), weights=(0.6, 0.4))
+    # one stateful (non-dense) family through the same engine-vs-naive
+    # harness: CI proof that length-aware prefill serves it retrace-free
+    out["griffin"] = _bench(GRIFFIN_SMOKE_MODEL, n_requests=8, gen=4,
+                            max_len=40, tiers=(1, 2), weights=(0.5, 0.5))
+    return out
 
 
 def _print(out):
@@ -268,9 +281,16 @@ def main() -> None:
     args = ap.parse_args()
     fn = serving_bench_smoke if args.smoke else serving_bench
     out = fn(force=args.force)
-    _print(out)
-    assert out["steady_hit_rate"] == 1.0, "engine re-traced in steady state"
-    assert out["engine"]["steady_retraces"] == 0
+    records = [("dense", out)]
+    if "griffin" in out:
+        records.append(("griffin", out["griffin"]))
+    for label, rec in records:
+        print(f"--- {label} ---")
+        _print(rec)
+        assert rec["steady_hit_rate"] == 1.0, (
+            f"{label} engine re-traced in steady state"
+        )
+        assert rec["engine"]["steady_retraces"] == 0
 
 
 if __name__ == "__main__":

@@ -137,6 +137,21 @@ def raw_key(key: jax.Array) -> jax.Array:
     return key
 
 
+def collapse_keys(key: jax.Array) -> jax.Array:
+    """XOR-fold a stacked (B, ...) key array into ONE batch-level raw key.
+
+    Expert-batched MoE matmuls mix tokens from every request in shared
+    capacity buffers, so per-request noise streams are physically meaningless
+    there; those sites instead draw a single stream from this batch-level
+    key. Deterministic and order-invariant in the batch, but (necessarily)
+    dependent on the set of keys sharing the batch. Single keys pass through
+    unchanged."""
+    if key_batch(key) is None:
+        return key
+    raw = raw_key(key)
+    return jax.lax.reduce(raw, raw.dtype.type(0), jax.lax.bitwise_xor, (0,))
+
+
 def site_key(key: jax.Array, site: str) -> jax.Array:
     """Deterministic per-site RNG stream derived from a stable name hash.
 

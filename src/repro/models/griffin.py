@@ -55,12 +55,18 @@ def rg_lru_scan(a: Array, b: Array, h0: Optional[Array] = None) -> Array:
 
 
 def causal_conv1d(
-    x: Array, w: Array, b: Array, state: Optional[Array] = None
+    x: Array, w: Array, b: Array, state: Optional[Array] = None,
+    lengths: Optional[Array] = None,
 ) -> Tuple[Array, Array]:
     """Depthwise causal conv along time. x: (B, T, R); w: (cw, R); b: (R,).
 
     ``state``: (B, cw-1, R) trailing inputs from the previous segment.
-    Returns (y, new_state)."""
+    ``lengths``: (B,) per-row true lengths for right-padded batches — the
+    returned state then holds each row's last ``cw-1`` *real* inputs (rows
+    shorter than ``cw-1`` backfill from the zero/previous state), so decode
+    resumes as if the padding never existed. Conv taps never cross the length
+    boundary for real outputs (causality); pad-position outputs are garbage
+    the caller must mask. Returns (y, new_state)."""
     cw = w.shape[0]
     bsz, t, r = x.shape
     if state is None:
@@ -70,7 +76,12 @@ def causal_conv1d(
     for i in range(cw):
         y = y + xp[:, i : i + t].astype(jnp.float32) * w[i].astype(jnp.float32)
     y = y + b.astype(jnp.float32)
-    new_state = xp[:, t:]  # last cw-1 inputs
+    if lengths is None:
+        new_state = xp[:, t:]  # last cw-1 inputs
+    else:
+        # xp index L..L+cw-2 == x positions L-cw+1..L-1 (state region if < 0)
+        idx = jnp.asarray(lengths)[:, None] + jnp.arange(cw - 1)[None, :]
+        new_state = jnp.take_along_axis(xp, idx[..., None], axis=1)
     return y.astype(x.dtype), new_state
 
 
@@ -81,16 +92,30 @@ def recurrent_mix(
     *,
     h0: Optional[Array] = None,
     conv_state: Optional[Array] = None,
+    pad_mask: Optional[Array] = None,
+    lengths: Optional[Array] = None,
 ) -> Tuple[Array, Array, Array]:
     """The Griffin recurrent temporal-mixing block.
 
     x: (B, T, d). Returns (y (B,T,d), h_last (B,R), conv_state (B,cw-1,R)).
+
+    ``pad_mask`` (B, T) / ``lengths`` (B,): right-padded batches. Pad steps
+    become the scan identity (a=1, b=0) so the carried state passes through
+    them untouched and ``h_last`` is exactly each row's state after its last
+    *real* token; the conv state is gathered at the length boundary. Outputs
+    at pad positions are garbage the caller must never read.
     """
     gate = jax.nn.gelu(hook("rec_gate", x, p["w_gate"]).astype(jnp.float32))
     xr = hook("rec_in", x, p["w_x"])  # (B, T, R)
     xr = constrain(xr, "batch", "seq", "rnn")
-    xr, conv_state = causal_conv1d(xr, p["conv_w"], p["conv_b"], conv_state)
+    xr, conv_state = causal_conv1d(
+        xr, p["conv_w"], p["conv_b"], conv_state, lengths=lengths
+    )
     a, b = rg_lru_coeffs(xr, p, hook)
+    if pad_mask is not None:
+        # identity carry at pad steps: exact in fp (h*1.0 + 0.0 == h)
+        a = jnp.where(pad_mask[..., None], 1.0, a)
+        b = jnp.where(pad_mask[..., None], 0.0, b)
     h = rg_lru_scan(a, b, h0)  # (B, T, R) f32
     h_last = h[:, -1]
     y = (h * gate).astype(x.dtype)

@@ -10,7 +10,13 @@ from typing import Dict, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.analog import AnalogConfig, analog_dot, fold_key, key_batch, site_key
+from repro.core.analog import (
+    AnalogConfig,
+    analog_dot,
+    collapse_keys,
+    fold_key,
+    site_key,
+)
 
 Array = jax.Array
 
@@ -37,10 +43,12 @@ class AnalogHook(MatmulHook):
     ``key`` may be a single PRNG key or a *stacked* (B, ...) array of
     per-request keys (one per batch row, the serving engine's noise
     isolation): every site then draws an independent stream per row, so a
-    request's output is invariant to what else shares its batch. Stacked
-    keys are rejected for expert-batched sites — MoE capacity buffers mix
-    tokens from different requests inside one matmul, so per-request noise
-    isolation is physically meaningless there.
+    request's output is invariant to what else shares its batch. For
+    expert-batched sites, stacked keys are XOR-folded into one batch-level
+    stream (``collapse_keys``) — MoE capacity buffers mix tokens from
+    different requests inside one matmul, so per-request noise isolation is
+    physically meaningless there and analog MoE serving is reproducible
+    per batch composition rather than per request.
 
     Execution routes through the backend dispatch in ``analog_dot``: under
     ``cfg.backend = "pallas"`` (or "auto" on TPU with large enough shapes)
@@ -62,15 +70,11 @@ class AnalogHook(MatmulHook):
         return y.astype(x.dtype)
 
     def batched(self, site: str, x: Array, w: Array) -> Array:
-        if key_batch(self.key) is not None:
-            raise ValueError(
-                f"stacked per-request keys are unsupported for expert-batched "
-                f"site {site!r} (MoE buffers mix requests)"
-            )
+        key = collapse_keys(self.key)  # expert buffers mix requests: one stream
         e = self.energies[site]
         n_e = w.shape[0]
         e = jnp.broadcast_to(jnp.atleast_1d(e), (n_e,) + jnp.shape(e)[1:])
-        keys = jax.random.split(site_key(self.key, site), n_e)
+        keys = jax.random.split(site_key(key, site), n_e)
 
         def one(xe, we, ee, ke):
             return analog_dot(

@@ -426,6 +426,7 @@ def _attn_sublayer(
     pos=None,
     window=None,
     cache_len=None,
+    lengths=None,
 ):
     b, t, d = x.shape
     hd, qh, kh = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
@@ -498,13 +499,33 @@ def _attn_sublayer(
         if mode == "prefill":
             if window is not None:
                 w = window
-                if t >= w:
+                # ring size matches init_cache: a cache shorter than the
+                # window never wraps (all positions < cache_len), so decode's
+                # slot = pos % w stays linear there
+                ring = w if cache_len is None else min(cache_len, w)
+                if lengths is not None:
+                    # per-row ring: slot s holds the row's most recent REAL
+                    # position p < L with p % w == s; slots whose p is
+                    # negative (row shorter than the window) are zeroed and
+                    # stay masked at decode until overwritten
+                    start = jnp.asarray(lengths)[:, None] - w  # (B, 1)
+                    slots = jnp.arange(ring)[None, :]
+                    if ring == w:
+                        p_abs = start + jnp.mod(slots - start, w)  # (B, ring)
+                    else:  # ring == cache_len > t: linear layout, slot == pos
+                        p_abs = jnp.broadcast_to(slots, (b, ring))
+                    p_abs = jnp.where(p_abs < jnp.asarray(lengths)[:, None], p_abs, -1)
+                    idx = jnp.clip(p_abs, 0, t - 1)[..., None, None]
+                    ok = (p_abs >= 0)[..., None, None]
+                    kc = jnp.where(ok, jnp.take_along_axis(k_gqa, idx, axis=1), 0)
+                    vc = jnp.where(ok, jnp.take_along_axis(v_gqa, idx, axis=1), 0)
+                elif t >= ring:
                     # ring layout: slot s holds position p with p % w == s
-                    kc = jnp.roll(k_gqa[:, -w:], t % w, axis=1)
-                    vc = jnp.roll(v_gqa[:, -w:], t % w, axis=1)
+                    kc = jnp.roll(k_gqa[:, -ring:], t % ring, axis=1)
+                    vc = jnp.roll(v_gqa[:, -ring:], t % ring, axis=1)
                 else:
-                    kc = jnp.pad(k_gqa, ((0, 0), (0, w - t), (0, 0), (0, 0)))
-                    vc = jnp.pad(v_gqa, ((0, 0), (0, w - t), (0, 0), (0, 0)))
+                    kc = jnp.pad(k_gqa, ((0, 0), (0, ring - t), (0, 0), (0, 0)))
+                    vc = jnp.pad(v_gqa, ((0, 0), (0, ring - t), (0, 0), (0, 0)))
                 new_cache = (kc.astype(cfg.compute_dtype), vc.astype(cfg.compute_dtype))
             else:
                 kc, vc = k_gqa, v_gqa
@@ -520,7 +541,10 @@ def _attn_sublayer(
     return y, new_cache
 
 
-def _transformer_group(x, gp, cfg, hook, *, rope, mode, cache, pos, cache_len=None):
+def _transformer_group(
+    x, gp, cfg, hook, *, rope, mode, cache, pos, cache_len=None,
+    pad_mask=None, lengths=None,
+):
     """One scan group of the dense/moe families. cache: dict of per-sublayer
     entries with leading dim `per` (or None)."""
     _, per = group_structure(cfg)
@@ -533,7 +557,7 @@ def _transformer_group(x, gp, cfg, hook, *, rope, mode, cache, pos, cache_len=No
         y, upd = _attn_sublayer(
             h, gp[f"attn{i}"], cfg, hook, f"attn{i}",
             rope=rope, mode=mode, cache=sub_cache, pos=pos,
-            window=cfg.sliding_window, cache_len=cache_len,
+            window=cfg.sliding_window, cache_len=cache_len, lengths=lengths,
         )
         x = x + y
         if upd is not None:
@@ -542,7 +566,7 @@ def _transformer_group(x, gp, cfg, hook, *, rope, mode, cache, pos, cache_len=No
         h = rms_norm(x, gp[f"ln2_{i}"], cfg.norm_eps)
         is_moe = cfg.family == "moe" and i == per - 1
         if is_moe:
-            y = moe_lib.moe_block(h, gp["moe"], cfg, hook)
+            y = moe_lib.moe_block(h, gp["moe"], cfg, hook, pad_mask=pad_mask)
         else:
             y = mlp(h, gp[f"mlp{i}"], cfg.mlp_type, hook, prefix=f"mlp{i}")
         x = x + y
@@ -559,7 +583,10 @@ def _transformer_group(x, gp, cfg, hook, *, rope, mode, cache, pos, cache_len=No
     return x, new_cache
 
 
-def _griffin_group(x, gp, cfg, hook, *, rope, mode, cache, pos, pattern, tail=False):
+def _griffin_group(
+    x, gp, cfg, hook, *, rope, mode, cache, pos, pattern, tail=False,
+    cache_len=None, pad_mask=None, lengths=None,
+):
     new_cache = {}
     for i, kind in enumerate(pattern):
         sfx = "" if tail else f"_{i}"
@@ -579,7 +606,8 @@ def _griffin_group(x, gp, cfg, hook, *, rope, mode, cache, pos, pattern, tail=Fa
                     y, h_new, cs_new = griffin_lib.recurrent_decode(h, rec_p, rec_hook, h0, cs)
                 else:
                     y, h_new, cs_new = griffin_lib.recurrent_mix(
-                        h, rec_p, rec_hook, h0=h0, conv_state=cs
+                        h, rec_p, rec_hook, h0=h0, conv_state=cs,
+                        pad_mask=pad_mask, lengths=lengths,
                     )
                 if mode in ("decode", "prefill"):
                     out_cache[f"h{i}"] = h_new
@@ -589,7 +617,7 @@ def _griffin_group(x, gp, cfg, hook, *, rope, mode, cache, pos, pattern, tail=Fa
                 y, upd = _attn_sublayer(
                     h, gp[f"attn{i}"], cfg, hook, f"attn{i}",
                     rope=rope, mode=mode, cache=sub_cache, pos=pos,
-                    window=cfg.local_window,
+                    window=cfg.local_window, cache_len=cache_len, lengths=lengths,
                 )
                 if upd is not None:
                     out_cache[f"k{i}"] = upd[0]
@@ -607,7 +635,7 @@ def _griffin_group(x, gp, cfg, hook, *, rope, mode, cache, pos, pattern, tail=Fa
     return x, (new_cache or None)
 
 
-def _xlstm_group(x, gp, cfg, hook_fn, *, mode, cache, group_idx):
+def _xlstm_group(x, gp, cfg, hook_fn, *, mode, cache, group_idx, pad_mask=None):
     """hook_fn(sub_idx_or_None) -> hook for an inner layer."""
     _, per = group_structure(cfg)
     m = per - 1
@@ -619,7 +647,7 @@ def _xlstm_group(x, gp, cfg, hook_fn, *, mode, cache, group_idx):
         y, st_new = xlstm_lib.mlstm_block(
             h, pj, hook_fn(j), n_heads=cfg.n_heads,
             chunk=min(cfg.attn_kv_chunk, 512), state=st,
-            decode=(mode == "decode"),
+            decode=(mode == "decode"), pad_mask=pad_mask,
         )
         out = xj + y
         out = constrain(out, "batch", "act_seq" if mode == "train" else "seq", None)
@@ -652,7 +680,7 @@ def _xlstm_group(x, gp, cfg, hook_fn, *, mode, cache, group_idx):
         st = (states["sc"], states["sn"], states["sh"], states["sm"])
     y, st_new = xlstm_lib.slstm_block(
         h, gp["slstm"], hook_fn(None), n_heads=cfg.n_heads,
-        state=st, decode=(mode == "decode"),
+        state=st, decode=(mode == "decode"), pad_mask=pad_mask,
     )
     x = x + y
     if mode in ("decode", "prefill"):
@@ -688,14 +716,33 @@ def _maybe_dequant(tree):
     return tree
 
 
-def _run_stack(params, h, cfg: ModelConfig, *, mode, cache, pos, positions, analog, cache_len=None):
-    """Scan over layer groups; returns (h, new_cache)."""
+def _run_stack(
+    params, h, cfg: ModelConfig, *, mode, cache, pos, positions, analog,
+    cache_len=None, lengths=None,
+):
+    """Scan over layer groups; returns (h, new_cache).
+
+    ``lengths`` (B,): per-row true lengths for right-padded bucket batches.
+    In prefill/train, positions >= length are pad: windowed ring caches are
+    gathered from each row's last real tokens, recurrent (griffin/xlstm)
+    scans treat pad steps as identity, and MoE routing drops pad tokens. In
+    decode, a row with length 0 is batch padding (its token is masked out of
+    MoE capacity; other families keep pad rows isolated by construction).
+    """
     g, per = group_structure(cfg)
     rope = rope_tables(positions, cfg.head_dim, cfg.rope_theta)
     a_cfg = analog.cfg if analog is not None else None
     a_key = analog.key if analog is not None else None
     a_rep = getattr(analog, "n_repeats", 1) if analog is not None else 1
     energies = analog.energies["groups"] if analog is not None else None
+
+    pad_mask = None
+    if lengths is not None:
+        lengths = jnp.asarray(lengths)
+        if mode == "decode":
+            pad_mask = (lengths == 0)[:, None]  # (B, 1): batch-padding rows
+        else:
+            pad_mask = jnp.arange(h.shape[1])[None, :] >= lengths[:, None]
 
     def group_fwd(h, gp, g_cache, g_energies, idx):
         gp = _maybe_dequant(gp)
@@ -709,16 +756,20 @@ def _run_stack(params, h, cfg: ModelConfig, *, mode, cache, pos, positions, anal
                     }
                 return hook_for_layer(a_cfg, le, a_key, idx, n_repeats=a_rep)
 
-            return _xlstm_group(h, gp, cfg, hook_fn, mode=mode, cache=g_cache, group_idx=idx)
+            return _xlstm_group(
+                h, gp, cfg, hook_fn, mode=mode, cache=g_cache, group_idx=idx,
+                pad_mask=pad_mask,
+            )
         hook = hook_for_layer(a_cfg, g_energies, a_key, idx, n_repeats=a_rep)
         if cfg.family == "griffin":
             return _griffin_group(
                 h, gp, cfg, hook, rope=rope, mode=mode, cache=g_cache,
-                pos=pos, pattern=cfg.griffin_pattern,
+                pos=pos, pattern=cfg.griffin_pattern, cache_len=cache_len,
+                pad_mask=pad_mask, lengths=lengths,
             )
         return _transformer_group(
             h, gp, cfg, hook, rope=rope, mode=mode, cache=g_cache, pos=pos,
-            cache_len=cache_len,
+            cache_len=cache_len, pad_mask=pad_mask, lengths=lengths,
         )
 
     if cfg.remat and mode == "train":
@@ -759,6 +810,7 @@ def _run_stack(params, h, cfg: ModelConfig, *, mode, cache, pos, positions, anal
             h, tc = _griffin_group(
                 h, tp, cfg, hook, rope=rope, mode=mode,
                 cache=t_cache, pos=pos, pattern=("rec",), tail=True,
+                cache_len=cache_len, pad_mask=pad_mask, lengths=lengths,
             )
             if tc is not None:
                 tail_cache.append({"h0": tc["h0"], "conv0": tc["conv0"]})
@@ -769,12 +821,12 @@ def _run_stack(params, h, cfg: ModelConfig, *, mode, cache, pos, positions, anal
 
 def forward_hidden(
     params, batch, cfg: ModelConfig, *, mode="train", cache=None, pos=None,
-    analog=None, cache_len=None,
+    analog=None, cache_len=None, lengths=None,
 ):
     h, positions = _embed_inputs(params, batch, cfg)
     h, new_cache = _run_stack(
         params, h, cfg, mode=mode, cache=cache, pos=pos, positions=positions,
-        analog=analog, cache_len=cache_len,
+        analog=analog, cache_len=cache_len, lengths=lengths,
     )
     h = rms_norm(h, params["final_ln"], cfg.norm_eps)
     return h, new_cache
@@ -912,14 +964,17 @@ def prefill(params, batch, cfg: ModelConfig, analog=None, cache_len=None, length
     """Run the prompt; returns (cache, last_hidden (B,1,d)).
 
     ``lengths`` (B,): per-row true prompt lengths for bucket-padded batches —
-    the last hidden is gathered at each row's final *real* token. Global
-    causal attention guarantees right-padding never reaches positions before
-    it; sliding-window ring caches and recurrent (griffin/xlstm) state DO
-    absorb pad tokens, so bucket-padded serving of those families must not
-    rely on this (the serving engine rejects them).
+    the last hidden is gathered at each row's final *real* token, and pad
+    positions are inert in every family's state: global causal attention
+    masks them for real queries by construction; windowed ring caches gather
+    each row's last real `w` tokens; griffin/xlstm recurrences treat pad
+    steps as identity (state carries through exactly); MoE routing drops pad
+    tokens from expert capacity. A length of 0 marks a batch-padding row
+    (zero state, outputs garbage-but-isolated).
     """
     h, cache = forward_hidden(
-        params, batch, cfg, mode="prefill", analog=analog, cache_len=cache_len
+        params, batch, cfg, mode="prefill", analog=analog, cache_len=cache_len,
+        lengths=lengths,
     )
     if lengths is None:
         return cache, h[:, -1:]
@@ -928,11 +983,14 @@ def prefill(params, batch, cfg: ModelConfig, analog=None, cache_len=None, length
     return cache, h_last
 
 
-def decode_step(params, cache, batch, pos, cfg: ModelConfig, analog=None):
+def decode_step(params, cache, batch, pos, cfg: ModelConfig, analog=None, lengths=None):
     """One token step. batch: {"tokens": (B,1)} or {"embeds": (B,1,d)}.
     ``pos``: position of the new token — scalar, or (B,) per-row positions
     (bucket-batched serving: requests with different prompt lengths decode
-    together, each row at its own position). Returns (logits, new_cache)."""
+    together, each row at its own position). ``lengths`` (B,): per-row true
+    prompt lengths; a row with length 0 is batch padding, masked out of MoE
+    expert capacity (all other ops are row-independent, so pad rows can't
+    touch real rows regardless). Returns (logits, new_cache)."""
     if cfg.frontend == "patch" and "patch_embeds" not in batch:
         # decode consumes plain tokens after the image prefix
         h = jnp.take(params["embed"], batch["tokens"], axis=0).astype(cfg.compute_dtype)
@@ -942,7 +1000,7 @@ def decode_step(params, cache, batch, pos, cfg: ModelConfig, analog=None):
     positions = pos[:, None] if pos.ndim else jnp.full((h.shape[0], 1), pos)
     h, new_cache = _run_stack(
         params, h, cfg, mode="decode", cache=cache, pos=pos,
-        positions=positions, analog=analog,
+        positions=positions, analog=analog, lengths=lengths,
     )
     h = rms_norm(h, params["final_ln"], cfg.norm_eps)
     return logits_last(params, h, cfg), new_cache

@@ -35,18 +35,27 @@ def router_topk(logits: Array, top_k: int):
 
 
 def make_dispatch(
-    ids: Array, gate_vals: Array, n_experts: int, capacity: int
+    ids: Array, gate_vals: Array, n_experts: int, capacity: int,
+    valid: Array | None = None,
 ) -> tuple[Array, Array]:
     """GShard dispatch/combine tensors.
 
     ids/gate_vals: (G, S, k). Returns (dispatch (G,S,E,C) bool-ish,
     combine (G,S,E,C) f32). Earlier routing slots get capacity priority.
+
+    ``valid``: (G, S) bool — tokens marked False (bucket padding in serving)
+    are dropped from routing entirely: they occupy no expert capacity, shift
+    no real token's queue position, and their combine weights are zero.
+    Masking router *logits* alone cannot do this (a softmax over masked
+    logits still tops-k somewhere), so padding is excluded here at dispatch.
     """
     g, s, k = ids.shape
     counts = jnp.zeros((g, n_experts), jnp.int32)
     combine = jnp.zeros((g, s, n_experts, capacity), jnp.float32)
     for slot in range(k):
         onehot = jax.nn.one_hot(ids[..., slot], n_experts, dtype=jnp.int32)  # (G,S,E)
+        if valid is not None:
+            onehot = onehot * valid.astype(jnp.int32)[..., None]
         # position of each token within its expert queue (exclusive cumsum)
         pos = jnp.cumsum(onehot, axis=1) - onehot + counts[:, None, :]
         keep = (pos < capacity) & (onehot > 0)
@@ -63,8 +72,14 @@ def moe_block(
     p: Dict[str, Array],
     cfg: ModelConfig,
     hook: MatmulHook,
+    pad_mask: Array | None = None,
 ) -> Array:
-    """x: (B, T, d) -> (B, T, d)."""
+    """x: (B, T, d) -> (B, T, d).
+
+    ``pad_mask`` (B, T): True marks bucket-padding tokens (serving). They are
+    excluded from expert dispatch — no capacity consumed, zero output — so a
+    real token's routing depends only on the real tokens sharing its group.
+    """
     b, t, d = x.shape
     n_tok = b * t
     gs = min(cfg.moe_group_size, n_tok)
@@ -76,9 +91,14 @@ def moe_block(
     cap = max(1, int(-(-gs * k * cfg.capacity_factor // e)))
 
     xg = constrain(x.reshape(g, gs, d), "tokens", None, None)
-    logits = hook("router", xg, p["router"])  # (G, S, E)
+    # route on the (B, T, d) layout, not the grouped one: rowwise-identical
+    # math, but the leading dim stays the batch so stacked per-request noise
+    # keys (serving) vmap per request — router noise is request-isolated
+    logits = hook("router", x, p["router"]).reshape(g, gs, e)  # (G, S, E)
+    logits = constrain(logits, "tokens", None, None)
     gate_vals, ids = router_topk(logits, k)
-    dispatch, combine = make_dispatch(ids, gate_vals, e, cap)
+    valid = None if pad_mask is None else jnp.logical_not(pad_mask).reshape(g, gs)
+    dispatch, combine = make_dispatch(ids, gate_vals, e, cap, valid=valid)
     if cfg.moe_ff_split > 1:
         # virtual experts: route each token to all ff-splits of its expert;
         # the combine sum then adds the down-proj partials (exact).

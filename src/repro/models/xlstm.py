@@ -161,10 +161,17 @@ def mlstm_block(
     chunk: int = 256,
     state=None,
     decode: bool = False,
+    pad_mask: Optional[Array] = None,
 ):
     """Full mLSTM block: up-proj (x2), conv-free simplified variant with
     q/k/v projections, exponential gates, headwise RMS-ish norm, gated
-    output, down projection."""
+    output, down projection.
+
+    ``pad_mask`` (B, T): right-padded batches. Pad steps are forced to the
+    recurrence identity at the gate level (log_i = -inf, log_f = 0), so they
+    contribute nothing to the matrix memory (C, n, m) and the carried state
+    crosses the pad suffix bit-exactly. Pad-position outputs are garbage the
+    caller must never read."""
     b, t, d = x.shape
     hd = d // n_heads
     z = hook("mlstm_z", x, p["w_z"])  # (B,T,d) output gate branch
@@ -174,6 +181,9 @@ def mlstm_block(
     gates = x.astype(jnp.float32) @ p["w_gates"].astype(jnp.float32) + p["b_gates"]
     li, lf_pre = jnp.split(gates, 2, axis=-1)  # (B,T,H) each
     lf = jax.nn.log_sigmoid(lf_pre)
+    if pad_mask is not None:
+        li = jnp.where(pad_mask[..., None], -1e30, li)  # exp(li - m) -> 0
+        lf = jnp.where(pad_mask[..., None], 0.0, lf)  # carry weight exp(0) = 1
 
     if decode:
         h, new_state = mlstm_decode(q, k, v, li, lf, state)
@@ -198,15 +208,29 @@ def slstm_block(
     n_heads: int,
     state=None,
     decode: bool = False,
+    pad_mask: Optional[Array] = None,
 ):
     """sLSTM block: sequential scan with block-diagonal recurrent weights.
 
     state = (c, n, h, m) each (B, d). Gates z/i/f/o from W x + R h_{t-1}.
+
+    ``pad_mask`` (B, T): right-padded batches. Pad steps pin the gate
+    pre-activations (i -> -inf, f -> +inf) so (c, n, m) carry through the pad
+    suffix exactly; the recurrent input h drifts at pad steps (its o-gated
+    readout is recomputed), so the returned h state is re-gathered at each
+    row's last real step. Pad-position outputs are garbage to the caller.
     """
     b, t, d = x.shape
     hd = d // n_heads
     # feedforward part of all four gates at once: (B, T, 4d)
     wx = hook("slstm_wx", x, p["w_x"]).astype(jnp.float32) + p["b"].astype(jnp.float32)
+    if pad_mask is not None:
+        # gate column blocks of wx: [z | i | f | o]; the recurrent term added
+        # per step is O(1)-sized and absorbed by the +-1e30 pins in f32
+        col = jnp.arange(4 * d) // d
+        pad3 = pad_mask[..., None]
+        wx = jnp.where(pad3 & (col == 1), -1e30, wx)  # iw = exp(i - m) -> 0
+        wx = jnp.where(pad3 & (col == 2), 1e30, wx)  # f = logsig(inf) = 0 -> fw = 1
     # broadcast the recurrent weights over batch BEFORE the time scan: the
     # per-step weight-grad contributions then accumulate locally in the scan
     # carry and the batch reduction happens once at the broadcast transpose
@@ -240,5 +264,16 @@ def slstm_block(
     wx_seq = jnp.moveaxis(wx, 1, 0)  # (T, B, 4d)
     new_state, hs = jax.lax.scan(step, state, wx_seq)
     h_seq = jnp.moveaxis(hs, 0, 1).astype(x.dtype)  # (B, T, d)
+    if pad_mask is not None:
+        # h after the last REAL step (pad steps carry c/n/m but recompute the
+        # h readout from garbage o-gates); all-pad rows keep their initial h
+        lengths = jnp.sum(jnp.logical_not(pad_mask), axis=1)  # (B,)
+        idx = jnp.clip(lengths - 1, 0, t - 1)[:, None, None]
+        h_real = jnp.take_along_axis(
+            jnp.moveaxis(hs, 0, 1), jnp.broadcast_to(idx, (b, 1, d)), axis=1
+        )[:, 0]
+        h_real = jnp.where(lengths[:, None] > 0, h_real, state[2])
+        c_f, n_f, _, m_f = new_state
+        new_state = (c_f, n_f, h_real, m_f)
     y = hook("slstm_o", h_seq, p["w_o"])
     return y, new_state

@@ -50,17 +50,22 @@ def pad_to_bucket(
     """Right-pad prompts into a (Bb, Sb) token block.
 
     Returns (tokens (Bb, Sb) int32, lengths (Bb,) int32). Rows beyond
-    ``len(prompts)`` are batch padding: all-pad tokens with length 1. Their
-    outputs are discarded by the engine, and per-request noise keys keep
-    them from perturbing real rows.
+    ``len(prompts)`` are batch padding: all-pad tokens with length 0 — the
+    models treat length-0 rows as fully inert (no recurrent-state update, no
+    MoE capacity, last-token gathers clip to position 0). Their outputs are
+    discarded by the engine, and per-request noise keys keep them from
+    perturbing real rows. Real prompts must be non-empty (the engine
+    validates at submit), so a real row is never aliased to a pad row.
     """
     bb, sb = bucket
     if len(prompts) > bb:
         raise ValueError(f"{len(prompts)} prompts > batch bucket {bb}")
     tokens = np.full((bb, sb), pad_id, np.int32)
-    lengths = np.ones((bb,), np.int32)
+    lengths = np.zeros((bb,), np.int32)
     for i, p in enumerate(prompts):
         p = np.asarray(p, np.int32).reshape(-1)
+        if p.size == 0:
+            raise ValueError(f"prompt {i} is empty; length 0 marks pad rows")
         if p.size > sb:
             raise ValueError(f"prompt length {p.size} > seq bucket {sb}")
         tokens[i, : p.size] = p

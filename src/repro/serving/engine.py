@@ -16,13 +16,17 @@ tokens are bit-identical to running it alone at the same seq bucket,
 regardless of batch-mates or batch padding. The engine's batching is a pure
 throughput optimization, not a numerics change.
 
-That contract is only sound for dense models with global causal attention,
-and the engine enforces it: sliding-window ring caches keep the last
-`window` positions of the *padded* sequence (rolling a short prompt's keys
-out entirely), recurrent (griffin/xlstm) state scans pad tokens into its
-hidden state, and MoE expert capacity is consumed by pad tokens at the
-expense of real ones. Serving those families needs padding-aware prefill —
-future work, rejected loudly rather than served wrongly.
+Every model family rides this contract via length-aware prefill/decode
+(``lengths`` threaded through ``models/lm.py``): global causal attention
+masks right-padding by construction; sliding-window ring caches are built
+from each row's *true* last `window` tokens; griffin/xlstm recurrences
+treat pad steps as identity so state crosses the pad suffix exactly; MoE
+routing drops pad tokens so they never consume expert capacity. Two honest
+caveats remain for MoE: real tokens from co-batched requests still compete
+for expert capacity (run a no-drop ``capacity_factor >= n_experts / top_k``
+when per-request bit-identity matters), and analog-mode expert matmuls draw
+one batch-level noise stream (capacity buffers mix requests, so per-request
+streams are physically meaningless there — see ``AnalogHook.batched``).
 
 Precision tiers can never share a batch: K is static in the fused kernel
 (baked into the trace), which is exactly why the tier scheduler exists.
@@ -83,13 +87,6 @@ class ServingEngine:
     ):
         if analog_cfg is not None and energies is None:
             raise ValueError("analog serving requires an energy tree")
-        if model_cfg.family != "dense" or model_cfg.sliding_window is not None:
-            raise ValueError(
-                "ServingEngine supports dense global-attention models only: "
-                "bucket right-padding corrupts windowed ring caches, "
-                "recurrent state, and MoE expert capacity (got family="
-                f"{model_cfg.family!r}, sliding_window={model_cfg.sliding_window})"
-            )
         self.params = params
         self.model_cfg = model_cfg
         self.analog_cfg = analog_cfg
@@ -127,15 +124,20 @@ class ServingEngine:
         Deadlines compare submit arrivals against poll times, so mixing the
         real clock (``now=None``) with caller-supplied virtual times would
         silently dispatch everything immediately (or never) — rejected
-        instead.
+        instead. A fully drained engine (no pending requests) holds no
+        timestamps to compare against, so it may re-pin to the other clock:
+        a finished virtual-time replay can be reused live, and vice versa.
         """
         mode = "real" if now is None else "virtual"
-        if self._clock is None:
+        if self._clock is None or (
+            self._clock != mode and self.scheduler.n_pending == 0
+        ):
             self._clock = mode
         elif self._clock != mode:
             raise ValueError(
                 f"{phase}() used the {mode} clock but this engine is on the "
-                f"{self._clock} clock; pass `now` consistently (or never)"
+                f"{self._clock} clock with requests pending; pass `now` "
+                f"consistently (or never), or drain before switching"
             )
         return time.monotonic() if now is None else now
 
@@ -149,6 +151,12 @@ class ServingEngine:
         now: Optional[float] = None,
     ) -> int:
         """Enqueue one request; returns its uid (results key in poll())."""
+        tokens = np.asarray(tokens, np.int32).reshape(-1)
+        if tokens.size == 0:
+            raise ValueError(
+                "empty prompt: a request must carry at least one token "
+                "(there is no position to continue generation from)"
+            )
         if max_new_tokens < 1:
             raise ValueError(f"max_new_tokens must be >= 1, got {max_new_tokens}")
         if n_repeats < 1:
@@ -161,7 +169,7 @@ class ServingEngine:
             n_repeats = 1  # digital serving: K is a no-op, don't split batches on it
         req = Request(
             uid=uid,
-            tokens=np.asarray(tokens, np.int32).reshape(-1),
+            tokens=tokens,
             n_repeats=int(n_repeats),
             max_new_tokens=min(int(max_new_tokens), self.max_gen),
             key=raw_key(key),
@@ -238,11 +246,12 @@ class ServingEngine:
         cfg = self.model_cfg
         cache_len = sb + self.max_gen
 
-        def fn(params, cache, tok, pos, keys):
+        def fn(params, cache, tok, pos, lengths, keys):
             self._traces += 1
             analog = self._analog_spec(keys, n_repeats, pos=pos)
             logits, new_cache = lm.decode_step(
-                params, cache, {"tokens": tok}, pos, cfg, analog=analog
+                params, cache, {"tokens": tok}, pos, cfg, analog=analog,
+                lengths=lengths,
             )
             nxt = jnp.argmax(logits[:, 0, 0], axis=-1).astype(jnp.int32)
             return nxt, new_cache
@@ -254,6 +263,7 @@ class ServingEngine:
             self._param_specs,
             cache_specs,
             jax.ShapeDtypeStruct((bb, 1), i32),
+            jax.ShapeDtypeStruct((bb,), i32),
             jax.ShapeDtypeStruct((bb,), i32),
             self._keys_spec(bb),
             donate_argnums=(1,),
@@ -295,7 +305,9 @@ class ServingEngine:
             )
         for t in range(n_steps):
             pos = lengths + t
-            tok, cache = decode_exe(self.params, cache, tok[:, None], pos, keys)
+            tok, cache = decode_exe(
+                self.params, cache, tok[:, None], pos, lengths, keys
+            )
             toks.append(tok)
 
         seq = np.stack([np.asarray(t) for t in toks], axis=1)  # (bb, n_steps+1)

@@ -6,6 +6,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
 
 from repro.core import AnalogConfig, analog_dot
 from repro.models import init_energy_tree, init_params, lm
@@ -17,6 +19,7 @@ from repro.serving import (
     next_bucket,
     pad_to_bucket,
 )
+from repro.serving.bucketing import DEFAULT_BATCH_BUCKETS, DEFAULT_SEQ_BUCKETS
 from repro.serving.scheduler import Request
 
 KEY = jax.random.PRNGKey(0)
@@ -63,11 +66,39 @@ def test_pad_to_bucket_shapes_and_lengths():
     prompts = [np.arange(5), np.arange(9)]
     tokens, lengths = pad_to_bucket(prompts, (4, 16), pad_id=0)
     assert tokens.shape == (4, 16) and lengths.shape == (4,)
-    assert lengths.tolist() == [5, 9, 1, 1]
+    assert lengths.tolist() == [5, 9, 0, 0]  # length 0 marks batch-pad rows
     assert tokens[0, :5].tolist() == list(range(5))
     assert (tokens[0, 5:] == 0).all() and (tokens[2:] == 0).all()
     with pytest.raises(ValueError):
         pad_to_bucket([np.arange(20)], (1, 16))
+    with pytest.raises(ValueError, match="empty"):
+        pad_to_bucket([np.arange(0)], (1, 16))
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(1, 8), seed=st.integers(0, 2**16))
+def test_bucketing_round_trip_property(n, seed):
+    """pad_to_bucket/next_bucket round-trip on the default ladders: every
+    real prompt's tokens and length are recovered exactly, buckets are the
+    minimal ladder entries that fit, and pad rows (length 0, all pad_id) can
+    never be mistaken for a real row (real lengths are >= 1)."""
+    rng = np.random.default_rng(seed)
+    lens = rng.integers(1, max(DEFAULT_SEQ_BUCKETS) + 1, n)
+    prompts = [rng.integers(1, 1000, L).astype(np.int32) for L in lens]
+    bb, sb = bucket_shape(n, int(lens.max()))
+    for value, bucket, ladder in (
+        (n, bb, DEFAULT_BATCH_BUCKETS), (int(lens.max()), sb, DEFAULT_SEQ_BUCKETS)
+    ):
+        assert bucket in ladder and bucket >= value
+        assert not any(value <= b < bucket for b in ladder)  # minimal fit
+    tokens, lengths = pad_to_bucket(prompts, (bb, sb), pad_id=0)
+    assert tokens.shape == (bb, sb) and lengths.shape == (bb,)
+    for i, p in enumerate(prompts):
+        assert lengths[i] == p.size  # lengths recovered exactly
+        np.testing.assert_array_equal(tokens[i, : p.size], p)
+        assert (tokens[i, p.size :] == 0).all()
+    assert (lengths[:n] >= 1).all()
+    assert (lengths[n:] == 0).all() and (tokens[n:] == 0).all()
 
 
 # --------------------------------------------------------------------------
@@ -260,17 +291,177 @@ def test_per_row_positions_match_scalar_pos(arch):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(bb))
 
 
-def test_engine_rejects_padding_unsafe_families(env):
-    """Right-padding corrupts windowed ring caches / recurrent state / MoE
-    capacity — the engine must refuse those configs, not serve them wrongly."""
+# --------------------------------------------------------------------------
+# length-aware prefill: every family serves, padding is inert
+# --------------------------------------------------------------------------
+
+_BASE = dict(
+    n_layers=2, d_model=32, n_heads=2, n_kv_heads=1, head_dim=16,
+    vocab_size=128, attn_q_chunk=16, attn_kv_chunk=16, loss_chunk=32,
+    dtype="float32",
+)
+#: one config per stateful family; windows/ratios sized so a (4, 32) bucket
+#: exercises ring wraparound, recurrent pad suffixes, and expert dispatch.
+#: moe capacity_factor = n_experts / top_k: no-drop serving, the regime in
+#: which per-request bit-identity is well-defined for GShard routing.
+FAMILY_CONFIGS = {
+    "dense": ModelConfig(name="serve-dense", family="dense", d_ff=64, **_BASE),
+    "windowed": ModelConfig(
+        name="serve-win", family="dense", d_ff=64, sliding_window=8, **_BASE
+    ),
+    "griffin": ModelConfig(
+        name="serve-griffin", family="griffin", n_layers=3, d_model=32,
+        n_heads=2, n_kv_heads=1, head_dim=16, d_ff=64, vocab_size=128,
+        rnn_width=32, conv_width=4, local_window=8, attn_q_chunk=16,
+        attn_kv_chunk=16, loss_chunk=32, dtype="float32",
+    ),
+    "xlstm": ModelConfig(
+        name="serve-xlstm", family="xlstm", d_ff=0, slstm_ratio=2,
+        n_kv_heads=2, **{k: v for k, v in _BASE.items() if k != "n_kv_heads"}
+    ),
+    "moe": ModelConfig(
+        name="serve-moe", family="moe", d_ff=64, n_experts=4, top_k=2,
+        moe_every=1, capacity_factor=2.0, moe_group_size=64, **_BASE
+    ),
+}
+
+
+def _solo_tokens(params, cfg, prompt, gen):
+    """Greedy tokens from a from-scratch UNPADDED run: exact-length prefill
+    at batch 1, no bucket, no engine — the ground truth padding must never
+    perturb."""
+    L = len(prompt)
+    tokens = jnp.asarray(prompt, jnp.int32)[None, :]
+    cache, h_last = lm.prefill(params, {"tokens": tokens}, cfg, cache_len=L + gen)
+    tok = jnp.argmax(lm.logits_last(params, h_last, cfg)[:, 0, 0], axis=-1)
+    toks = [int(tok[0])]
+    for t in range(gen - 1):
+        logits, cache = lm.decode_step(
+            params, cache, {"tokens": tok[:, None].astype(jnp.int32)},
+            jnp.asarray([L + t], jnp.int32), cfg,
+        )
+        tok = jnp.argmax(logits[:, 0, 0], axis=-1)
+        toks.append(int(tok[0]))
+    return np.asarray(toks, np.int32)
+
+
+@pytest.mark.parametrize("family", sorted(FAMILY_CONFIGS))
+def test_family_solo_vs_batched_equivalence(family):
+    """The acceptance contract of length-aware prefill: for EVERY family, a
+    request's generated tokens in a padded bucket batch (pad rows + shorter
+    batch-mates) equal its solo unpadded run."""
+    cfg = FAMILY_CONFIGS[family]
+    params = init_params(KEY, cfg)
+    eng = ServingEngine(
+        params, cfg, max_gen=8, max_batch=4, max_wait=1.0,
+        batch_buckets=(1, 2, 4), seq_buckets=(SB,),
+    )
+    prompts, _ = _prompts_and_keys()
+    gen = 4
+    uids = [eng.submit(p, max_new_tokens=gen, now=0.0) for p in prompts]
+    padded_before = eng.stats["padded_rows"]
+    batched = eng.flush()
+    assert eng.stats["padded_rows"] - padded_before == 1  # bb=4 held 3 reqs
+    for uid, p in zip(uids, prompts):
+        np.testing.assert_array_equal(batched[uid], _solo_tokens(params, cfg, p, gen))
+
+
+@pytest.mark.parametrize("family", ["windowed", "griffin", "xlstm"])
+def test_family_analog_batchmates_dont_change_outputs(family):
+    """Analog serving of the stateful families: per-request noise streams +
+    length-aware prefill make tokens bit-identical whether a request shares
+    its bucket with batch-mates or runs alone at the same seq bucket. (MoE is
+    excluded: expert capacity buffers mix requests, so its expert sites draw
+    a batch-level stream — see AnalogHook.batched.)"""
+    cfg = FAMILY_CONFIGS[family]
+    params = init_params(KEY, cfg)
+    energies = init_energy_tree(cfg, ENERGY_AJ)
+    eng = ServingEngine(
+        params, cfg, analog_cfg=AnalogConfig.shot(), energies=energies,
+        max_gen=8, max_batch=4, max_wait=1.0,
+        batch_buckets=(1, 2, 4), seq_buckets=(SB,),
+    )
+    prompts, keys = _prompts_and_keys()
+    uids = [
+        eng.submit(p, n_repeats=2, max_new_tokens=4, key=k, now=0.0)
+        for p, k in zip(prompts, keys)
+    ]
+    batched = eng.flush()
+    for uid, p, k in zip(uids, prompts, keys):
+        solo_uid = eng.submit(p, n_repeats=2, max_new_tokens=4, key=k, now=0.0)
+        solo = eng.flush()[solo_uid]
+        np.testing.assert_array_equal(batched[uid], solo)
+
+
+def test_window_larger_than_cache_stays_linear():
+    """The real recurrentgemma serving regime: local_window (2048) exceeds
+    cache_len (sb + max_gen). The ring is then sized to cache_len and never
+    wraps — length-aware prefill must keep slot == position there, matching
+    init_cache's shapes and the solo unpadded run."""
     import dataclasses
 
-    windowed = dataclasses.replace(MODEL, sliding_window=8)
-    with pytest.raises(ValueError, match="dense global-attention"):
-        ServingEngine(env["params"], windowed)
-    griffin = dataclasses.replace(MODEL, family="griffin")
-    with pytest.raises(ValueError, match="dense global-attention"):
-        ServingEngine(env["params"], griffin)
+    cfg = dataclasses.replace(FAMILY_CONFIGS["griffin"], local_window=64)
+    params = init_params(KEY, cfg)
+    T, gen = 16, 4
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(0, cfg.vocab_size, L) for L in (5, 13)]
+    toks = np.zeros((2, T), np.int32)
+    for i, p in enumerate(prompts):
+        toks[i, : len(p)] = p
+    lengths = jnp.asarray([len(p) for p in prompts], jnp.int32)
+    cache, h_last = lm.prefill(
+        params, {"tokens": jnp.asarray(toks)}, cfg, cache_len=T + gen,
+        lengths=lengths,
+    )
+    want = jax.tree.map(
+        lambda a: a.shape, jax.eval_shape(lambda: lm.init_cache(cfg, 2, T + gen))
+    )
+    assert jax.tree.map(lambda a: a.shape, cache) == want
+    tok = jnp.argmax(lm.logits_last(params, h_last, cfg)[:, 0, 0], axis=-1)
+    out = [np.asarray(tok)]
+    for t in range(gen - 1):
+        logits, cache = lm.decode_step(
+            params, cache, {"tokens": tok[:, None].astype(jnp.int32)},
+            lengths + t, cfg, lengths=lengths,
+        )
+        tok = jnp.argmax(logits[:, 0, 0], axis=-1)
+        out.append(np.asarray(tok))
+    batched = np.stack(out, axis=1)
+    for i, p in enumerate(prompts):
+        np.testing.assert_array_equal(batched[i], _solo_tokens(params, cfg, p, gen))
+
+
+def test_seq_bucket_boundary_prompt():
+    """A prompt exactly filling the seq bucket, decoding the full max_gen,
+    must stay inside the decode cache (cache_len = sb + max_gen) and match
+    its solo unpadded run."""
+    cfg = FAMILY_CONFIGS["dense"]
+    params = init_params(KEY, cfg)
+    eng = ServingEngine(
+        params, cfg, max_gen=8, max_batch=2, max_wait=0.0,
+        batch_buckets=(1, 2), seq_buckets=(SB,),
+    )
+    rng = np.random.default_rng(11)
+    prompt = rng.integers(0, cfg.vocab_size, SB)  # prompt_len == seq bucket
+    assert len(prompt) == SB
+    uid = eng.submit(prompt, max_new_tokens=eng.max_gen, now=0.0)
+    got = eng.flush()[uid]
+    assert got.shape == (eng.max_gen,)
+    np.testing.assert_array_equal(
+        got, _solo_tokens(params, cfg, prompt, eng.max_gen)
+    )
+
+
+def test_submit_rejects_empty_prompt(env):
+    eng = ServingEngine(
+        env["params"], MODEL, max_gen=4, max_batch=2, max_wait=0.0,
+        batch_buckets=(1, 2), seq_buckets=(SB,),
+    )
+    with pytest.raises(ValueError, match="empty prompt"):
+        eng.submit(np.zeros((0,), np.int32), now=0.0)
+    with pytest.raises(ValueError, match="empty prompt"):
+        eng.submit([], now=0.0)
+    assert eng.scheduler.n_pending == 0  # nothing half-enqueued
 
 
 def test_digital_engine_and_tier_energy_accounting(env):
@@ -301,5 +492,23 @@ def test_engine_rejects_mixed_clock_domains(env):
         eng.submit(np.arange(4), n_repeats=0, now=0.0)
     eng.submit(np.arange(4) % MODEL.vocab_size, now=0.0)  # virtual clock
     with pytest.raises(ValueError, match="clock"):
-        eng.poll()  # real clock: would mis-evaluate every deadline
+        eng.poll()  # real clock with requests pending: deadlines undefined
     assert eng.flush()  # flush ignores deadlines and drains fine
+
+
+def test_engine_repins_clock_when_drained(env):
+    """A fully drained engine holds no arrival timestamps, so it may switch
+    clock domains: finish a virtual-time replay, then serve live (and back)."""
+    eng = ServingEngine(
+        env["params"], MODEL, max_gen=4, max_batch=2, max_wait=0.0,
+        batch_buckets=(1, 2), seq_buckets=(SB,),
+    )
+    prompt = np.arange(6) % MODEL.vocab_size
+    u0 = eng.submit(prompt, now=0.0)  # pins the virtual clock
+    assert u0 in eng.flush()  # drained: n_pending == 0
+    u1 = eng.submit(prompt)  # re-pins to the real clock
+    assert u1 in eng.poll()
+    u2 = eng.submit(prompt, now=5.0)  # drained again: back to virtual
+    with pytest.raises(ValueError, match="clock"):
+        eng.poll()  # pending request: the mixed-clock guard still holds
+    assert u2 in eng.flush()
