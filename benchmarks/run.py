@@ -56,6 +56,13 @@ def main() -> None:
         lambda o: f"bert uniform {o['uniform_aj_per_mac']['min_e_per_mac']:.3f} -> "
                   f"dynamic {o['dynamic_aj_per_mac']['min_e_per_mac']:.3f} aJ/MAC "
                   f"({o['improvement_pct']:.0f}%)")
+    run("table5_profile_vs_uniform", pt.table5_profile,
+        lambda o: f"profile K={list(o['profile']['repeats'].values())} "
+                  f"{o['profile']['e_per_mac_aj']:.3f} aJ/MAC, "
+                  f"saves {o['improvement_pct_vs_cheapest_uniform']:.0f}% vs "
+                  f"cheapest feasible uniform"
+                  if o["improvement_pct_vs_cheapest_uniform"] is not None
+                  else "no feasible uniform K")
     run("fig4_energy_curve", pt.fig4,
         lambda o: "monotone_acc=" + str(all(
             o["curve"][i]["dynamic_acc"] <= o["curve"][i + 1]["dynamic_acc"] + 0.05

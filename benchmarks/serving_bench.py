@@ -28,7 +28,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import cache_json
-from repro.core import AnalogConfig
+from repro.core import AnalogConfig, PrecisionProfile, coalesce_runs, repeat_profile_search
 from repro.models import init_energy_tree, init_params, lm
 from repro.models.config import ModelConfig
 from repro.serving import ServingEngine
@@ -55,12 +55,14 @@ ENERGY_AJ = 20.0
 
 def make_trace(n_requests: int, gen: int, max_len: int, seed: int = 0,
                tiers=TIERS, weights=TIER_WEIGHTS):
-    """Deterministic mixed-tier traffic: [(prompt tokens, K, gen)]."""
+    """Deterministic mixed-tier traffic: [(prompt tokens, tier, gen)] where a
+    tier is a uniform K int or a registered profile id string."""
     rng = np.random.default_rng(seed)
     trace = []
     for _ in range(n_requests):
         length = int(rng.integers(8, max_len + 1))
-        k = int(rng.choice(tiers, p=weights))
+        k = rng.choice(np.asarray(tiers, dtype=object), p=weights)
+        k = k if isinstance(k, str) else int(k)
         prompt = rng.integers(0, MODEL["vocab_size"], length)
         trace.append((prompt, k, gen))
     return trace
@@ -87,11 +89,13 @@ def _median_by_throughput(candidates):
     return ranked[len(ranked) // 2]
 
 
-def run_engine(params, cfg, energies, trace, *, max_gen, steady_replays=3):
+def run_engine(params, cfg, energies, trace, *, max_gen, steady_replays=3,
+               profiles=()):
     eng = ServingEngine(
         params, cfg, analog_cfg=AnalogConfig.shot(), energies=energies,
         max_gen=max_gen, max_batch=8, max_wait=1.0,
         batch_buckets=(1, 2, 4, 8), seq_buckets=(32, 64, 128),
+        profiles=profiles,
     )
     candidates = []
     for replay in range(1 + steady_replays):  # replay 0 is warmup (compiles)
@@ -106,7 +110,9 @@ def run_engine(params, cfg, energies, trace, *, max_gen, steady_replays=3):
         t0 = time.perf_counter()
         submit_t, finish_t = {}, {}
         for i, (prompt, k, gen) in enumerate(trace):
-            uid = eng.submit(prompt, n_repeats=k, max_new_tokens=gen, now=i * 1e-3)
+            # a tier is an int K (uniform) or a registered profile id
+            tier_kw = {"profile": k} if isinstance(k, str) else {"n_repeats": k}
+            uid = eng.submit(prompt, max_new_tokens=gen, now=i * 1e-3, **tier_kw)
             submit_t[uid] = time.perf_counter()
             for done_uid in eng.poll(now=i * 1e-3):
                 finish_t[done_uid] = time.perf_counter()
@@ -220,6 +226,140 @@ def run_naive(params, cfg, energies, trace, *, max_gen, steady_replays=3):
 
 
 # ---------------------------------------------------------------------------
+# profile tier: learn -> freeze -> serve a per-layer K schedule (paper §V-VI)
+# ---------------------------------------------------------------------------
+
+PROFILE_K_LEVELS = (1, 2, 4)
+
+
+def _contrast_energies(cfg, per_layer_aj):
+    """``init_energy_tree`` with a distinct energy per layer — the serving
+    stand-in for a learned Eq.-14 allocation. Layer sensitivities then differ
+    by orders of magnitude, so the learned K schedule is non-uniform: the
+    low-energy layer needs repeats, the high-energy layer serves at K=1."""
+    tree = init_energy_tree(cfg, 1.0)
+    scale = jnp.asarray(per_layer_aj, jnp.float32)
+    groups = {
+        s: v * scale.reshape((scale.shape[0],) + (1,) * (v.ndim - 1))
+        for s, v in tree["groups"].items()
+    }
+    return {"groups": groups, "lm_head": tree["lm_head"] * scale[-1]}
+
+
+def profile_smoke_bench():
+    """Learn a per-layer K profile against the 2% agreement floor, freeze it,
+    serve it as a tier next to the uniform-K tier, and record the uniform-K
+    vs learned-profile energy/accuracy tradeoff (the paper's Fig.-5 story,
+    live in the serving path). The returned record carries everything main()
+    asserts: 100% steady-state hit rate for the mixed uniform+profile
+    traffic, zero retraces, lower sum_l K_l*E_l*MACs_l than uniform-K at
+    matched accuracy, and solo-vs-padded-batch bit-identity under the
+    profile."""
+    cfg = ModelConfig(**dict(SMOKE_MODEL, name="serve-bench-profile"))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    energies = _contrast_energies(cfg, (2.0, 2000.0))
+    key = jax.random.PRNGKey(42)
+    eval_toks = jax.random.randint(key, (4, 32), 0, cfg.vocab_size)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+
+    def greedy_tokens(analog):
+        h, _ = lm.forward_hidden(
+            params, {"tokens": eval_toks}, cfg, mode="train", analog=analog
+        )
+        return np.asarray(jnp.argmax(jnp.matmul(h, head), axis=-1))
+
+    ref = greedy_tokens(None)  # the digital model's greedy next tokens
+    shot = AnalogConfig.shot()
+
+    def agreement(profile):
+        """Accuracy proxy for a frozen LM: greedy next-token agreement with
+        the digital model over every prefix position (deterministic keys)."""
+        analog = lm.AnalogSpec(cfg=shot, energies=energies, key=key, profile=profile)
+        return float((greedy_tokens(analog) == ref).mean())
+
+    # --- learn: greedy per-layer descent against the 2% floor --------------
+    k_max = max(PROFILE_K_LEVELS)
+    float_acc = agreement(PrecisionProfile.uniform(k_max, cfg.n_layers))
+    base = lm.profile_token_energy(cfg, energies, PrecisionProfile.uniform(1, cfg.n_layers))
+    weights = tuple(
+        lm.profile_token_energy(
+            cfg, energies,
+            PrecisionProfile(tuple(2 if i == l else 1 for i in range(cfg.n_layers)), name="w"),
+        ) - base
+        for l in range(cfg.n_layers)
+    )  # w_l = E_l * MACs_l exactly (the delta of one extra repeat at layer l)
+    search = repeat_profile_search(
+        lambda reps: agreement(PrecisionProfile(tuple(reps), name="cand")),
+        n_layers=cfg.n_layers, float_acc=float_acc,
+        k_levels=PROFILE_K_LEVELS, weights=weights,
+    )
+    profile = PrecisionProfile(search.repeats, name="learned")  # freeze
+
+    # --- serve: mixed uniform-K + profile traffic, warmup then steady ------
+    eng = ServingEngine(
+        params, cfg, analog_cfg=shot, energies=energies, max_gen=6,
+        max_batch=8, max_wait=1.0, batch_buckets=(1, 2, 4, 8),
+        seq_buckets=(32, 64), profiles=[profile],
+    )
+    trace = make_trace(16, 6, 48, seed=1, tiers=(k_max, "learned"),
+                       weights=(0.5, 0.5))
+    req_keys = [jax.random.fold_in(jax.random.PRNGKey(7), i) for i in range(len(trace))]
+    results = {}
+    steady = {}
+    for replay in range(2):  # replay 0 is warmup (compiles)
+        if replay == 1:
+            eng.exe_cache.reset_stats()
+            traces_before = eng.trace_count
+        uid_of = {}
+        for i, (prompt, k, gen) in enumerate(trace):
+            tier_kw = {"profile": k} if isinstance(k, str) else {"n_repeats": k}
+            uid_of[i] = eng.submit(
+                prompt, max_new_tokens=gen, key=req_keys[i], now=i * 1e-3, **tier_kw
+            )
+        done = eng.flush()
+        results = {i: done[uid] for i, uid in uid_of.items()}
+        if replay == 1:
+            steady = {
+                **eng.exe_cache.stats(),
+                "retraces": eng.trace_count - traces_before,
+            }
+
+    # --- bit-identity: a profile request solo vs its padded batched run ----
+    i0 = next(i for i, (_, k, _) in enumerate(trace) if isinstance(k, str))
+    prompt, _, gen = trace[i0]
+    solo_uid = eng.submit(prompt, profile="learned", max_new_tokens=gen,
+                          key=req_keys[i0], now=0.0)
+    solo = eng.flush()[solo_uid]
+    solo_matches = bool(np.array_equal(results[i0], solo))
+
+    rows, _ = lm.profile_rows(cfg, profile)
+    e_prof = eng.tier_energy_per_token("learned")
+    e_uni = eng.tier_energy_per_token(k_max)
+    return {
+        "k_levels": list(PROFILE_K_LEVELS),
+        "accuracy_metric": "greedy token agreement vs digital, all prefix positions",
+        "float_acc": float_acc,
+        "search_evals": search.n_evals,
+        "learned": {
+            "repeats": list(profile.repeats),
+            "non_uniform": not profile.is_uniform,
+            "accuracy": search.accuracy,
+            "energy_per_token_aj": e_prof,
+            "segments": len(coalesce_runs(rows)),
+        },
+        "uniform": {
+            "k": k_max,
+            "accuracy": float_acc,
+            "energy_per_token_aj": e_uni,
+        },
+        "energy_saving_pct": 100.0 * (1.0 - e_prof / e_uni),
+        "accuracy_within_floor": search.accuracy >= float_acc - 0.02,
+        "solo_matches_batched": solo_matches,
+        "steady": steady,
+    }
+
+
+# ---------------------------------------------------------------------------
 
 
 def _bench(model_kw, n_requests, gen, max_len, tiers=TIERS, weights=TIER_WEIGHTS):
@@ -255,6 +395,9 @@ def serving_bench_smoke():
     # harness: CI proof that length-aware prefill serves it retrace-free
     out["griffin"] = _bench(GRIFFIN_SMOKE_MODEL, n_requests=8, gen=4,
                             max_len=40, tiers=(1, 2), weights=(0.5, 0.5))
+    # learned per-layer K profile served as a tier next to uniform K: the
+    # paper's per-layer tradeoff (Fig. 5) live in the serving path
+    out["profile"] = profile_smoke_bench()
     return out
 
 
@@ -291,6 +434,26 @@ def main() -> None:
             f"{label} engine re-traced in steady state"
         )
         assert rec["engine"]["steady_retraces"] == 0
+    if "profile" in out:
+        p = out["profile"]
+        lr, un = p["learned"], p["uniform"]
+        print("--- profile tier ---")
+        print(f"learned K schedule {lr['repeats']} ({lr['segments']} scan "
+              f"segment(s)) vs uniform K={un['k']}")
+        print(f"energy/token {lr['energy_per_token_aj']:.0f} aJ vs "
+              f"{un['energy_per_token_aj']:.0f} aJ "
+              f"(-{p['energy_saving_pct']:.0f}%) at agreement "
+              f"{lr['accuracy']:.3f} vs {un['accuracy']:.3f} "
+              f"(floor {p['float_acc'] - 0.02:.3f})")
+        print(f"steady: hit_rate={p['steady']['hit_rate']:.0%} "
+              f"retraces={p['steady']['retraces']} "
+              f"solo==batched: {p['solo_matches_batched']}")
+        assert p["learned"]["non_uniform"], "profile search degenerated to uniform"
+        assert p["accuracy_within_floor"], "profile broke the 2% accuracy floor"
+        assert p["energy_saving_pct"] > 0, "profile tier saved no energy"
+        assert p["steady"]["hit_rate"] == 1.0 and p["steady"]["misses"] == 0
+        assert p["steady"]["retraces"] == 0, "profile serving re-traced"
+        assert p["solo_matches_batched"], "profile batch changed a request's tokens"
 
 
 if __name__ == "__main__":

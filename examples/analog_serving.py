@@ -72,6 +72,14 @@ def _trained_params():
 def run_traffic(args, params):
     """Replay a mixed-precision load through the serving engine."""
     tiers, weights = (1, 2, 4), (0.5, 0.3, 0.2)
+    profiles = []
+    if args.profile:
+        from repro.serving import PrecisionProfile
+
+        schedule = tuple(int(k) for k in args.profile.split(","))
+        profiles = [PrecisionProfile(schedule, name="cli")]
+        # route a slice of traffic to the per-layer profile tier
+        tiers, weights = (1, 2, 4, "cli"), (0.4, 0.25, 0.15, 0.2)
     energies = init_energy_tree(CFG, args.energy)
     seq_buckets = [32]
     while seq_buckets[-1] < args.prompt_len:
@@ -80,24 +88,25 @@ def run_traffic(args, params):
         params, CFG, analog_cfg=AnalogConfig.shot(backend=args.backend),
         energies=energies, max_gen=args.gen, max_batch=8, max_wait=0.5,
         batch_buckets=(1, 2, 4, 8), seq_buckets=tuple(seq_buckets),
+        profiles=profiles,
     )
     rng = np.random.default_rng(0)
     reqs = []
     for i in range(args.requests):
         length = int(rng.integers(8, args.prompt_len + 1))
-        k = int(rng.choice(tiers, p=weights))
-        reqs.append((rng.integers(0, CFG.vocab_size, length), k))
+        k = rng.choice(np.asarray(tiers, dtype=object), p=weights)
+        reqs.append((rng.integers(0, CFG.vocab_size, length),
+                     k if isinstance(k, str) else int(k)))
 
     t0 = time.perf_counter()
     uid_tier = {}
     for i, (prompt, k) in enumerate(reqs):
-        uid = engine.submit(prompt, n_repeats=k, max_new_tokens=args.gen, now=i * 1e-3)
+        tier_kw = {"profile": k} if isinstance(k, str) else {"n_repeats": k}
+        uid = engine.submit(prompt, max_new_tokens=args.gen, now=i * 1e-3, **tier_kw)
         uid_tier[uid] = k
     results = engine.flush()
     wall = time.perf_counter() - t0
 
-    macs = energy_macs(CFG, 1)
-    e_tok = float(total_energy(energies, macs))
     total_toks = sum(len(v) for v in results.values())
     print(f"replayed {args.requests} requests ({total_toks} tokens) "
           f"in {wall:.2f}s -> {total_toks / wall:.1f} tok/s "
@@ -105,9 +114,14 @@ def run_traffic(args, params):
     for k in tiers:
         uids = [u for u, t in uid_tier.items() if t == k]
         toks = sum(len(results[u]) for u in uids)
-        print(f"  tier K={k}: {len(uids):>3} requests, {toks:>4} tokens, "
-              f"{k * e_tok / 1e6:.3f} pJ/token "
-              f"({k * e_tok / PHOTON_ENERGY_AJ:.2e} photons)")
+        # true per-tier spend: sum_l K_l * E_l * MACs_l (lm_head is digital)
+        e_tok = engine.tier_energy_per_token(k)
+        label = f"K={k}" if not isinstance(k, str) else (
+            f"profile {k}={list(engine.profiles[k].repeats)}"
+        )
+        print(f"  tier {label}: {len(uids):>3} requests, {toks:>4} tokens, "
+              f"{e_tok / 1e6:.3f} pJ/token "
+              f"({e_tok / PHOTON_ENERGY_AJ:.2e} photons)")
     cs = engine.cache_stats()
     print(f"executables: {cs['entries']} compiled ({cs['compile_s']:.1f}s), "
           f"{cs['hits']} hits / {cs['misses']} misses; batches="
@@ -132,6 +146,9 @@ def main():
                          "bucket-batched serving engine")
     ap.add_argument("--requests", type=int, default=24,
                     help="number of requests in --traffic mode")
+    ap.add_argument("--profile", default=None,
+                    help="comma-separated per-layer K schedule (e.g. 4,2,1,1)"
+                         " served as its own precision tier in --traffic mode")
     args = ap.parse_args()
 
     if args.traffic:

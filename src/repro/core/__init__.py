@@ -6,7 +6,9 @@
   energy     - energy accounting + Eq.-14 log-penalty
   redundant  - K-repeat redundant coding (Fig. 3): fused hot path + oracles
   calibrate  - Eq.-14 energy learning (frozen weights)
-  search     - min-energy binary search (<2% degradation)
+  search     - min-energy binary search (<2% degradation) + the greedy
+               per-layer repeat-profile search
+  profile    - frozen per-layer K-repeat schedules (learn -> freeze -> serve)
 """
 from repro.core.analog import (
     PER_CHANNEL,
@@ -20,11 +22,19 @@ from repro.core.analog import (
     raw_key,
     site_key,
 )
-from repro.core.calibrate import CalibConfig, eval_accuracy, learn_energies, softmax_xent
+from repro.core.calibrate import (
+    CalibConfig,
+    eval_accuracy,
+    eval_profile_accuracy,
+    learn_energies,
+    softmax_xent,
+)
 from repro.core.energy import (
+    apply_repeats,
     avg_energy_per_mac,
     dense_site_macs,
     log_energy_penalty,
+    repeat_total_energy,
     to_energy,
     total_energy,
     total_macs,
@@ -32,7 +42,13 @@ from repro.core.energy import (
 )
 from repro.core.noise import PHOTON_ENERGY_AJ, SHOT, THERMAL, WEIGHT, NoiseSpec
 from repro.core.precision import noise_bits, noise_var_from_bits, thermal_noise_bits
-from repro.core.search import SearchResult, min_energy_search
+from repro.core.profile import DEFAULT_K_LEVELS, PrecisionProfile, coalesce_runs
+from repro.core.search import (
+    ProfileSearchResult,
+    SearchResult,
+    min_energy_search,
+    repeat_profile_search,
+)
 
 __all__ = [
     "AnalogConfig",
@@ -44,9 +60,14 @@ __all__ = [
     "SHOT",
     "THERMAL",
     "WEIGHT",
+    "DEFAULT_K_LEVELS",
+    "PrecisionProfile",
+    "ProfileSearchResult",
     "SearchResult",
     "SiteQuant",
     "analog_conv2d",
+    "apply_repeats",
+    "coalesce_runs",
     "analog_dot",
     "fold_key",
     "key_batch",
@@ -54,9 +75,12 @@ __all__ = [
     "avg_energy_per_mac",
     "dense_site_macs",
     "eval_accuracy",
+    "eval_profile_accuracy",
     "learn_energies",
     "log_energy_penalty",
     "min_energy_search",
+    "repeat_profile_search",
+    "repeat_total_energy",
     "noise_bits",
     "noise_var_from_bits",
     "site_key",

@@ -137,18 +137,28 @@ def raw_key(key: jax.Array) -> jax.Array:
     return key
 
 
-def collapse_keys(key: jax.Array) -> jax.Array:
+def collapse_keys(key: jax.Array, valid: Optional[jax.Array] = None) -> jax.Array:
     """XOR-fold a stacked (B, ...) key array into ONE batch-level raw key.
 
     Expert-batched MoE matmuls mix tokens from every request in shared
     capacity buffers, so per-request noise streams are physically meaningless
     there; those sites instead draw a single stream from this batch-level
     key. Deterministic and order-invariant in the batch, but (necessarily)
-    dependent on the set of keys sharing the batch. Single keys pass through
-    unchanged."""
+    dependent on the set of *real* keys sharing the batch. Single keys pass
+    through unchanged.
+
+    ``valid`` (B,) bool: rows marked False — batch-padding rows in a bucket
+    batch — fold the XOR identity (0) instead of their key, so the collapsed
+    key depends only on the real requests. Without this, identical real
+    traffic served at different batch-pad counts would XOR in a different
+    number of pad keys and draw different expert noise.
+    """
     if key_batch(key) is None:
         return key
     raw = raw_key(key)
+    if valid is not None:
+        mask = jnp.reshape(valid, (raw.shape[0],) + (1,) * (raw.ndim - 1))
+        raw = jnp.where(mask, raw, jnp.zeros_like(raw))
     return jax.lax.reduce(raw, raw.dtype.type(0), jax.lax.bitwise_xor, (0,))
 
 

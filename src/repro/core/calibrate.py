@@ -22,6 +22,7 @@ import jax.numpy as jnp
 from repro.core.energy import (
     EnergyTree,
     MacTree,
+    apply_repeats,
     avg_energy_per_mac,
     log_energy_penalty,
     to_energy,
@@ -132,6 +133,31 @@ def eval_accuracy(
         correct += int(n_correct(energies, x, y, jax.random.fold_in(key, bi)))
         total += int(y.size) * n_noise_samples
     return correct / max(total, 1)
+
+
+def eval_profile_accuracy(
+    apply_fn: ApplyFn,
+    energies: EnergyTree,
+    repeats,
+    batches: Iterable[Tuple[Array, Array]],
+    *,
+    key: jax.Array,
+    n_noise_samples: int = 1,
+) -> float:
+    """Accuracy of the noisy model under a per-layer repeat schedule.
+
+    ``repeats`` is a pytree matching ``energies`` (site -> K). Serving layer
+    ``l`` at ``K_l`` repeats averages K_l draws at energy ``E_l`` — in
+    distribution (and bit-exactly on the jnp backend, which folds K into a
+    single draw at ``K * E``) identical to evaluating at the scaled energies.
+    That makes profile evaluation a pure ``eval_accuracy`` reuse: one jitted
+    executable per schedule, cached like any other allocation, and the exact
+    semantics ``repeat_profile_search`` needs for its accuracy floor.
+    """
+    scaled = apply_repeats(energies, repeats)
+    return eval_accuracy(
+        apply_fn, scaled, batches, key=key, n_noise_samples=n_noise_samples
+    )
 
 
 #: apply_fn -> {n_noise_samples: jitted counter}. Weak keys: the jitted

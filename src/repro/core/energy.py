@@ -57,6 +57,29 @@ def avg_energy_per_mac(energies: EnergyTree, macs: MacTree) -> Array:
     return total_energy(energies, macs) / total_macs(macs)
 
 
+def apply_repeats(energies: EnergyTree, repeats) -> EnergyTree:
+    """Scale each site's energy by its repeat count K.
+
+    Serving a site at K repeats spends ``K * E`` per MAC (the K draws average
+    to noise / sqrt(K)); the scaled tree is both what honest accounting sees
+    and — on the jnp backend, which folds K into the energy of a single draw
+    — bit-exactly what evaluation sees. ``repeats`` is any pytree matching
+    ``energies`` whose leaves broadcast against the energy leaves (scalars,
+    per-layer vectors, or the stacked trees from ``lm.profile_repeat_tree``).
+    """
+    return jax.tree.map(
+        lambda e, k: jnp.asarray(e, jnp.float32) * jnp.asarray(k, jnp.float32),
+        energies,
+        repeats,
+    )
+
+
+def repeat_total_energy(energies: EnergyTree, macs: MacTree, repeats) -> Array:
+    """True served energy ``sum_l K_l * E_l * MACs_l`` (per example) of a
+    per-layer repeat schedule over a per-site energy allocation."""
+    return total_energy(apply_repeats(energies, repeats), macs)
+
+
 def log_energy_penalty(
     energies: EnergyTree, macs: MacTree, target_e_per_mac: float, lam: float
 ) -> Array:

@@ -9,6 +9,8 @@ with noise removed but activations quantized to those (fractional) bit counts.
 """
 from __future__ import annotations
 
+from typing import Optional
+
 import jax
 import jax.numpy as jnp
 
@@ -67,9 +69,29 @@ def snr_noise_bits(snr: Array) -> Array:
     return jnp.log2(jnp.sqrt(jnp.asarray(snr, jnp.float32)) + 1.0)
 
 
-def average_bits(per_layer_bits: dict, per_layer_macs: dict) -> Array:
-    """MAC-weighted... no: the paper reports the plain average over layers
-    (Table I 'Average Bits'). Unweighted mean across layers."""
-    vals = [jnp.asarray(v, jnp.float32).mean() for v in per_layer_bits.values()]
-    del per_layer_macs
-    return jnp.mean(jnp.stack(vals))
+def average_bits(
+    per_layer_bits: dict, per_layer_macs: Optional[dict] = None, *, weighted: bool = False
+) -> Array:
+    """Average noise-bits across layers.
+
+    Default (``weighted=False``): the plain unweighted mean over layers —
+    the form the paper reports as Table I 'Average Bits'.
+
+    ``weighted=True``: the MAC-weighted mean ``sum_l B_l * n_l / sum_l n_l``
+    with ``n_l = sum(per_layer_macs[l])`` — the honest aggregate when layers
+    differ by orders of magnitude in MAC count (profile energy reporting:
+    a tiny head at high precision shouldn't drag the average like a giant
+    FFN would). Requires ``per_layer_macs`` covering every layer in
+    ``per_layer_bits``.
+    """
+    vals = jnp.stack(
+        [jnp.asarray(per_layer_bits[k], jnp.float32).mean() for k in per_layer_bits]
+    )
+    if not weighted:
+        return jnp.mean(vals)
+    if per_layer_macs is None:
+        raise ValueError("weighted=True requires per_layer_macs")
+    w = jnp.stack(
+        [jnp.sum(jnp.asarray(per_layer_macs[k], jnp.float32)) for k in per_layer_bits]
+    )
+    return jnp.sum(vals * w) / jnp.sum(w)

@@ -1,0 +1,134 @@
+"""Per-layer precision profiles: frozen, servable K-repeat schedules.
+
+The paper's headline method learns the precision of each layer of a frozen
+pre-trained model (§V-VI, up to 89% energy reduction for ResNet50). At
+serving time the per-layer knob is the repeat count ``K_l``: layer ``l``
+runs its analog matmuls K_l times at its per-site energies and averages
+(noise / sqrt(K_l) at K_l x energy, fused in-kernel on the Pallas backend).
+
+A :class:`PrecisionProfile` freezes one such schedule so it can be passed
+around as a value: learned once (``repro.core.search.repeat_profile_search``),
+saved to JSON, registered with the serving engine as a tier, and hashed into
+AOT executable cache keys. A uniform schedule is the degenerate single-K
+profile — serving code treats it exactly like the classic ``n_repeats=K``
+tier.
+
+K is *static* in the fused kernel (baked into the trace), so a profile is a
+tuple of Python ints, never a traced array: the model's layer scan is
+segmented into contiguous same-K runs at trace time (``models/lm.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import List, Optional, Sequence, Tuple
+
+#: default ladder of repeat counts a profile search may assign per layer.
+DEFAULT_K_LEVELS = (1, 2, 4, 8)
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionProfile:
+    """A frozen per-layer repeat schedule ``K_l`` for a specific model.
+
+    ``repeats[l]`` is the repeat count of model layer ``l`` (``cfg.n_layers``
+    entries; for multi-layer scan groups each sublayer keeps its own entry —
+    ``models/lm.py`` maps layers onto scan groups). All entries are positive
+    Python ints: K is static in the fused kernel, so schedules are trace-time
+    constants, never traced arrays.
+
+    ``coalesce=False`` disables merging contiguous same-K layers into shared
+    scan segments — every scan group then runs as its own segment. That is
+    the *unrolled-loop test oracle* for the segmented scan; serving always
+    keeps the default.
+    """
+
+    repeats: Tuple[int, ...]
+    name: str = "profile"
+    coalesce: bool = True
+
+    def __post_init__(self):
+        reps = tuple(int(k) for k in self.repeats)
+        if not reps:
+            raise ValueError("a profile needs at least one layer")
+        if any(k < 1 for k in reps):
+            raise ValueError(f"repeat counts must be >= 1, got {reps}")
+        object.__setattr__(self, "repeats", reps)
+        if not self.name:
+            raise ValueError("a profile needs a non-empty name")
+
+    # -- shape ---------------------------------------------------------------
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.repeats)
+
+    @property
+    def is_uniform(self) -> bool:
+        return len(set(self.repeats)) == 1
+
+    @property
+    def max_k(self) -> int:
+        return max(self.repeats)
+
+    @classmethod
+    def uniform(cls, k: int, n_layers: int, name: Optional[str] = None) -> "PrecisionProfile":
+        """The degenerate single-K profile (the classic ``n_repeats`` tier)."""
+        return cls(
+            repeats=(int(k),) * n_layers,
+            name=name if name is not None else f"uniform-{int(k)}",
+        )
+
+    # -- identity ------------------------------------------------------------
+
+    def cache_key(self):
+        """Hashable identity for AOT executable cache keys.
+
+        Uniform profiles key as the bare int K so they share executables with
+        classic ``n_repeats=K`` tiers (the degenerate case really is the same
+        trace); non-uniform schedules key on the full repeat tuple. The
+        unrolled-oracle form is trace-distinct and tagged so it never aliases
+        the coalesced executable.
+        """
+        if self.is_uniform and self.coalesce:
+            return int(self.repeats[0])
+        key: tuple = tuple(self.repeats)
+        if not self.coalesce:
+            key = ("unrolled",) + key
+        return key
+
+    # -- persistence (the freeze step of learn -> freeze -> serve) -----------
+
+    def to_json(self) -> dict:
+        return {"name": self.name, "repeats": list(self.repeats)}
+
+    @classmethod
+    def from_json(cls, obj: dict) -> "PrecisionProfile":
+        return cls(repeats=tuple(obj["repeats"]), name=obj.get("name", "profile"))
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump(self.to_json(), f, indent=2)
+
+    @classmethod
+    def load(cls, path: str) -> "PrecisionProfile":
+        with open(path) as f:
+            return cls.from_json(json.load(f))
+
+
+def coalesce_runs(
+    rows: Sequence, coalesce: bool = True
+) -> List[Tuple[int, int, object]]:
+    """Split ``rows`` into contiguous equal-value runs: [(start, stop, row)].
+
+    The segmentation primitive of the profile-aware layer scan: scan groups
+    whose K-row matches their neighbour share one trace segment. With
+    ``coalesce=False`` every row is its own run (the unrolled oracle).
+    """
+    runs: List[Tuple[int, int, object]] = []
+    start = 0
+    for i in range(1, len(rows) + 1):
+        if i == len(rows) or rows[i] != rows[start] or not coalesce:
+            runs.append((start, i, rows[start]))
+            start = i
+    return runs

@@ -75,8 +75,13 @@ def min_energy_search(
         return SearchResult(math.inf, acc_hi, math.inf, trace, None)
     acc_lo = probe(lo)
     if acc_lo >= floor:
-        _, acc, achieved, art = best
-        return SearchResult(lo, acc, achieved, trace, art)
+        # Both bracket probes are feasible. Report the best feasible probe
+        # *whole*: a calibration-backed make_fn can undershoot its target, so
+        # the hi probe may have achieved less energy than the lo probe — in
+        # which case (target, acc, achieved, artifact) must all come from hi,
+        # never a mix of the two probes' fields.
+        target, acc, achieved, art = best
+        return SearchResult(target, acc, achieved, trace, art)
 
     llo, lhi = math.log(lo), math.log(hi)
     for _ in range(max_iters):
@@ -92,3 +97,104 @@ def min_energy_search(
     assert best is not None
     target, acc, achieved, art = best
     return SearchResult(target, acc, achieved, trace, art)
+
+
+# ===========================================================================
+# per-layer repeat-count profiles (paper §V-VI: learn each layer's precision)
+# ===========================================================================
+
+
+@dataclasses.dataclass
+class ProfileSearchResult:
+    """Outcome of :func:`repeat_profile_search`."""
+
+    repeats: Tuple[int, ...]  # the learned per-layer K schedule
+    accuracy: float  # accuracy achieved by that schedule
+    cost: float  # sum_l K_l * w_l (w = per-layer energy weight)
+    uniform_cost: float  # cost of the uniform max-K schedule (the baseline)
+    feasible: bool  # False: the starting schedule itself missed the floor
+    trace: list  # [(repeats, acc)] per evaluated schedule
+    n_evals: int = 0
+
+
+def repeat_profile_search(
+    acc_fn: Callable[[Tuple[int, ...]], float],
+    *,
+    n_layers: int,
+    float_acc: float,
+    max_degradation: float = 0.02,
+    k_levels: Tuple[int, ...] = (1, 2, 4, 8),
+    weights: Optional[Tuple[float, ...]] = None,
+    init: Optional[Tuple[int, ...]] = None,
+) -> ProfileSearchResult:
+    """Greedy per-layer descent of the repeat schedule ``K_l`` subject to the
+    paper's accuracy floor ``float_acc - max_degradation``.
+
+    ``acc_fn(repeats) -> accuracy`` evaluates a candidate schedule (serving
+    at K repeats equals one draw at K x energy on the jnp path, so
+    ``repro.core.calibrate.eval_profile_accuracy`` is the usual adapter).
+    ``weights[l]`` is layer ``l``'s energy cost per unit K (``E_l * MACs_l``)
+    — it orders the descent (largest savings first) and prices the result;
+    defaults to all-ones.
+
+    Starting from the uniform max level (or ``init`` — e.g. the schedule
+    learned at a neighbouring accuracy floor, the profile analogue of
+    ``min_energy_search``'s warm starts), the search repeatedly lowers the
+    single layer whose step down the level ladder saves the most energy
+    while keeping the accuracy floor, until no single-layer decrement is
+    feasible. Evaluations are memoized; the search is deterministic for a
+    deterministic ``acc_fn``.
+    """
+    levels = tuple(sorted(set(int(k) for k in k_levels)))
+    if not levels or levels[0] < 1:
+        raise ValueError(f"bad k_levels {k_levels!r}")
+    w = tuple(float(x) for x in (weights or (1.0,) * n_layers))
+    if len(w) != n_layers:
+        raise ValueError(f"{len(w)} weights for {n_layers} layers")
+    start = tuple(int(k) for k in (init or (levels[-1],) * n_layers))
+    if len(start) != n_layers or any(k not in levels for k in start):
+        raise ValueError(f"init {start!r} is not on the {levels} ladder")
+    floor = float_acc - max_degradation
+
+    trace: list = []
+    memo: dict = {}
+
+    def evaluate(reps: Tuple[int, ...]) -> float:
+        if reps not in memo:
+            memo[reps] = float(acc_fn(reps))
+            trace.append((reps, memo[reps]))
+        return memo[reps]
+
+    def cost(reps: Tuple[int, ...]) -> float:
+        return float(sum(k * wl for k, wl in zip(reps, w)))
+
+    # the savings baseline is always uniform max-K, even when a warm-start
+    # init begins the descent below it
+    uniform_cost = cost((levels[-1],) * n_layers)
+    cur = start
+    acc = evaluate(cur)
+    if acc < floor:
+        return ProfileSearchResult(
+            cur, acc, cost(cur), uniform_cost, False, trace, len(memo)
+        )
+
+    improved = True
+    while improved:
+        improved = False
+        moves = []  # (savings, layer, lowered schedule)
+        for l in range(n_layers):
+            idx = levels.index(cur[l])
+            if idx == 0:
+                continue
+            cand = cur[:l] + (levels[idx - 1],) + cur[l + 1 :]
+            moves.append((w[l] * (cur[l] - levels[idx - 1]), l, cand))
+        # biggest energy saving first; layer index breaks ties deterministically
+        for _, _, cand in sorted(moves, key=lambda m: (-m[0], m[1])):
+            cand_acc = evaluate(cand)
+            if cand_acc >= floor:
+                cur, acc, improved = cand, cand_acc, True
+                break
+
+    return ProfileSearchResult(
+        cur, acc, cost(cur), uniform_cost, True, trace, len(memo)
+    )

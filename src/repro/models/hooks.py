@@ -56,12 +56,22 @@ class AnalogHook(MatmulHook):
     averaging and requant in one pass. ``n_repeats`` is the serving-time
     dynamic-precision knob: K repeats at the per-site energies, averaged
     in-register by the kernel (noise / sqrt(K) at zero extra HBM traffic).
+    K is static in the trace, so per-layer K schedules (PrecisionProfile)
+    reach this hook as one segment-constant int per layer — the layer scan in
+    ``models/lm.py`` is segmented into same-K runs rather than threading a
+    traced repeat array through here.
+
+    ``valid`` (B,) bool marks the *real* rows of a stacked-key bucket batch
+    (False = batch-padding row, length 0). It only affects expert-batched
+    sites: pad rows fold the XOR identity into the batch-level stream, so
+    the same real traffic draws the same expert noise at any pad count.
     """
 
     cfg: AnalogConfig
     energies: Dict[str, Array]
     key: jax.Array
     n_repeats: int = 1
+    valid: Optional[Array] = None
 
     def __call__(self, site: str, x: Array, w: Array) -> Array:
         e = self.energies[site]
@@ -70,7 +80,8 @@ class AnalogHook(MatmulHook):
         return y.astype(x.dtype)
 
     def batched(self, site: str, x: Array, w: Array) -> Array:
-        key = collapse_keys(self.key)  # expert buffers mix requests: one stream
+        # expert buffers mix requests: one batch-level stream (pad rows inert)
+        key = collapse_keys(self.key, self.valid)
         e = self.energies[site]
         n_e = w.shape[0]
         e = jnp.broadcast_to(jnp.atleast_1d(e), (n_e,) + jnp.shape(e)[1:])
@@ -106,10 +117,15 @@ def hook_for_layer(
     layer_idx,
     *,
     n_repeats: int = 1,
+    valid: Optional[Array] = None,
 ) -> MatmulHook:
+    """Hook for one layer: ``n_repeats`` is that layer's K (a static int —
+    per-layer schedules arrive pre-sliced from the segmented scan), ``valid``
+    the bucket batch's real-row mask (see AnalogHook)."""
     if analog_cfg is None or layer_energies is None:
         return MatmulHook()
     lk = fold_key(key, layer_idx)
     return AnalogHook(
-        cfg=analog_cfg, energies=layer_energies, key=lk, n_repeats=n_repeats
+        cfg=analog_cfg, energies=layer_energies, key=lk, n_repeats=n_repeats,
+        valid=valid,
     )

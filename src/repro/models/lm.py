@@ -27,6 +27,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.analog import AnalogConfig, fold_key
+from repro.core.energy import apply_repeats, total_energy
+from repro.core.profile import PrecisionProfile, coalesce_runs
 from repro.models import griffin as griffin_lib
 from repro.models import moe as moe_lib
 from repro.models import xlstm as xlstm_lib
@@ -60,12 +62,20 @@ class AnalogSpec:
     per-request keys (one per batch row): every site then draws an
     independent noise stream per row, the serving engine's guarantee that a
     request's tokens don't depend on its batch-mates.
+
+    ``profile`` is the per-layer form of the same knob (paper §V-VI): a
+    frozen ``PrecisionProfile`` assigning each layer its own K_l. It
+    overrides ``n_repeats`` (which must stay 1 when set). K is static in the
+    fused kernel, so the layer scan is *segmented* into contiguous same-K
+    runs — layers sharing K share one trace, distinct-K segments get their
+    own — identically for prefill and decode.
     """
 
     cfg: AnalogConfig
     energies: PyTree  # from init_energy_tree
     key: jax.Array
     n_repeats: int = 1
+    profile: Optional[PrecisionProfile] = None
 
 
 # ===========================================================================
@@ -394,6 +404,92 @@ def energy_macs(cfg: ModelConfig, seq_len: int) -> PyTree:
 
 
 # ===========================================================================
+# precision profiles (paper §V-VI: per-layer K schedules on the LM stack)
+# ===========================================================================
+
+
+def group_site_subs(cfg: ModelConfig) -> Dict[str, object]:
+    """Analog site -> sublayer index within one scan group.
+
+    Mirrors ``group_sites``. The value is the 0-based sublayer a site belongs
+    to (profiles assign K per *layer*, i.e. per sublayer of a scan group), or
+    the sentinel ``"stack"`` for the xlstm mLSTM sites whose energy leaves
+    carry their own leading (m,) stack dim — there the per-sublayer Ks map
+    onto that dim directly.
+    """
+    subs: Dict[str, object] = {}
+    _, per = group_structure(cfg)
+    for site in group_sites(cfg):
+        if cfg.family == "xlstm":
+            subs[site] = "stack" if site.startswith("mlstm") else per - 1
+        elif site == "router" or site.startswith("moe_"):
+            subs[site] = per - 1  # the MoE sublayer closes its scan group
+        else:
+            # attn{i}_*, mlp{i}_*, rec{i}_*: the embedded index is the sublayer
+            digits = "".join(c for c in site.split("_")[0] if c.isdigit())
+            subs[site] = int(digits)
+    return subs
+
+
+def profile_rows(cfg: ModelConfig, profile: PrecisionProfile):
+    """Validate a profile against the model; split it onto the scan layout.
+
+    Returns ``(rows, tail_ks)``: ``rows[i]`` is the K-tuple of scan group
+    ``i``'s sublayers (length ``per``), ``tail_ks`` the per-layer Ks of the
+    griffin tail layers that run outside the group scan (empty otherwise).
+    Profiles are indexed by *model layer*: ``repeats[l]`` belongs to layer
+    ``l`` in stack order, so ``len(repeats)`` must equal ``cfg.n_layers``.
+    """
+    if profile.n_layers != cfg.n_layers:
+        raise ValueError(
+            f"profile {profile.name!r} has {profile.n_layers} layers but "
+            f"model {cfg.name!r} has {cfg.n_layers}"
+        )
+    g, per = group_structure(cfg)
+    reps = profile.repeats
+    rows = [tuple(reps[i * per : (i + 1) * per]) for i in range(g)]
+    tail_ks = list(reps[g * per :])
+    return rows, tail_ks
+
+
+def profile_repeat_tree(cfg: ModelConfig, profile: PrecisionProfile) -> PyTree:
+    """Per-site repeat factors matching ``init_energy_tree``'s structure.
+
+    Each leaf broadcasts against the corresponding energy leaf and carries
+    that site's K_l along the stacked layer dim; the lm_head (served
+    digitally by ``logits_last``) stays at 1. Feed to
+    ``repro.core.energy.apply_repeats`` / ``repeat_total_energy`` for the
+    true served energy ``sum_l K_l * E_l * MACs_l``.
+    """
+    rows, tail_ks = profile_rows(cfg, profile)
+    g, per = group_structure(cfg)
+    rows_arr = jnp.asarray(rows, jnp.float32).reshape(g, per)
+    subs = group_site_subs(cfg)
+    groups = {}
+    for site, suf in group_sites(cfg).items():
+        if subs[site] == "stack":
+            k = rows_arr[:, : per - 1]  # (g, m) aligns with the (m,) suffix
+        else:
+            k = rows_arr[:, subs[site]].reshape((g,) + (1,) * len(suf))
+        groups[site] = k
+    tree = {"groups": groups, "lm_head": jnp.asarray(1.0, jnp.float32)}
+    if tail_ks:
+        tail_sites = init_energy_tree(cfg, 1.0)["tail"]
+        tree["tail"] = {
+            s: jnp.asarray(tail_ks, jnp.float32) for s in tail_sites
+        }
+    return tree
+
+
+def profile_token_energy(cfg: ModelConfig, energies: PyTree, profile: PrecisionProfile) -> float:
+    """True serving energy per generated token: ``sum_l K_l * E_l * MACs_l``
+    over the model's analog sites (decode = one token, seq_len 1)."""
+    macs = energy_macs(cfg, 1)
+    scaled = apply_repeats(energies, profile_repeat_tree(cfg, profile))
+    return float(total_energy(scaled, macs))
+
+
+# ===========================================================================
 # forward
 # ===========================================================================
 
@@ -542,14 +638,17 @@ def _attn_sublayer(
 
 
 def _transformer_group(
-    x, gp, cfg, hook, *, rope, mode, cache, pos, cache_len=None,
+    x, gp, cfg, hook_fn, *, rope, mode, cache, pos, cache_len=None,
     pad_mask=None, lengths=None,
 ):
     """One scan group of the dense/moe families. cache: dict of per-sublayer
-    entries with leading dim `per` (or None)."""
+    entries with leading dim `per` (or None). ``hook_fn(i)`` builds sublayer
+    ``i``'s matmul hook — per-layer precision profiles give each sublayer its
+    own (static) repeat count, so hooks are constructed per sublayer."""
     _, per = group_structure(cfg)
     new_cache = {"k": [], "v": []}
     for i in range(per):
+        hook = hook_fn(i)
         h = rms_norm(x, gp[f"ln1_{i}"], cfg.norm_eps)
         sub_cache = None
         if cache is not None:
@@ -584,9 +683,10 @@ def _transformer_group(
 
 
 def _griffin_group(
-    x, gp, cfg, hook, *, rope, mode, cache, pos, pattern, tail=False,
+    x, gp, cfg, hook_fn, *, rope, mode, cache, pos, pattern, tail=False,
     cache_len=None, pad_mask=None, lengths=None,
 ):
+    """``hook_fn(i)`` -> sublayer ``i``'s matmul hook (per-layer K)."""
     new_cache = {}
     for i, kind in enumerate(pattern):
         sfx = "" if tail else f"_{i}"
@@ -594,8 +694,10 @@ def _griffin_group(
         ln2 = gp["ln2" + sfx] if tail else gp[f"ln2_{i}"]
         rec_p = gp["rec"] if tail else gp.get(f"rec{i}")
         mlp_p = gp["mlp"] if tail else gp[f"mlp{i}"]
+        hook = hook_fn(i)
 
-        def sublayer(x, i=i, kind=kind, ln1=ln1, ln2=ln2, rec_p=rec_p, mlp_p=mlp_p):
+        def sublayer(x, i=i, kind=kind, ln1=ln1, ln2=ln2, rec_p=rec_p,
+                     mlp_p=mlp_p, hook=hook):
             out_cache = {}
             h = rms_norm(x, ln1, cfg.norm_eps)
             if kind == "rec":
@@ -734,51 +836,83 @@ def _run_stack(
     a_cfg = analog.cfg if analog is not None else None
     a_key = analog.key if analog is not None else None
     a_rep = getattr(analog, "n_repeats", 1) if analog is not None else 1
+    profile = getattr(analog, "profile", None) if analog is not None else None
+    if profile is not None and a_rep != 1:
+        raise ValueError(
+            f"AnalogSpec carries both n_repeats={a_rep} and profile "
+            f"{profile.name!r}; a profile is the per-layer form of the same "
+            "knob and overrides n_repeats, which must stay 1"
+        )
     energies = analog.energies["groups"] if analog is not None else None
 
     pad_mask = None
+    valid_rows = None
     if lengths is not None:
         lengths = jnp.asarray(lengths)
+        # real-row mask for batch-level noise folds (MoE expert sites):
+        # length-0 batch-padding rows fold the XOR identity, so real traffic
+        # draws the same expert noise at any pad count
+        valid_rows = lengths > 0
         if mode == "decode":
             pad_mask = (lengths == 0)[:, None]  # (B, 1): batch-padding rows
         else:
             pad_mask = jnp.arange(h.shape[1])[None, :] >= lengths[:, None]
 
-    def group_fwd(h, gp, g_cache, g_energies, idx):
-        gp = _maybe_dequant(gp)
-        if cfg.family == "xlstm":
-            def hook_fn(sub):
-                le = None
-                if g_energies is not None:
-                    le = {
-                        k: (v[sub] if (sub is not None and v.ndim > 0 and k.startswith("mlstm")) else v)
-                        for k, v in g_energies.items()
-                    }
-                return hook_for_layer(a_cfg, le, a_key, idx, n_repeats=a_rep)
+    def make_group_fwd(k_row):
+        """Group forward at a static per-sublayer repeat row ``k_row``
+        (length ``per``) — uniform serving passes one constant row; profile
+        serving builds one of these per same-K scan segment."""
 
-            return _xlstm_group(
-                h, gp, cfg, hook_fn, mode=mode, cache=g_cache, group_idx=idx,
-                pad_mask=pad_mask,
+        def group_fwd(h, gp, g_cache, g_energies, idx):
+            gp = _maybe_dequant(gp)
+            if cfg.family == "xlstm":
+                def hook_fn(sub):
+                    le = None
+                    if g_energies is not None:
+                        le = {
+                            k: (v[sub] if (sub is not None and v.ndim > 0 and k.startswith("mlstm")) else v)
+                            for k, v in g_energies.items()
+                        }
+                    k_rep = k_row[sub] if sub is not None else k_row[per - 1]
+                    return hook_for_layer(
+                        a_cfg, le, a_key, idx, n_repeats=k_rep, valid=valid_rows
+                    )
+
+                return _xlstm_group(
+                    h, gp, cfg, hook_fn, mode=mode, cache=g_cache, group_idx=idx,
+                    pad_mask=pad_mask,
+                )
+
+            def hook_fn(i):
+                return hook_for_layer(
+                    a_cfg, g_energies, a_key, idx, n_repeats=k_row[i],
+                    valid=valid_rows,
+                )
+
+            if cfg.family == "griffin":
+                return _griffin_group(
+                    h, gp, cfg, hook_fn, rope=rope, mode=mode, cache=g_cache,
+                    pos=pos, pattern=cfg.griffin_pattern, cache_len=cache_len,
+                    pad_mask=pad_mask, lengths=lengths,
+                )
+            return _transformer_group(
+                h, gp, cfg, hook_fn, rope=rope, mode=mode, cache=g_cache, pos=pos,
+                cache_len=cache_len, pad_mask=pad_mask, lengths=lengths,
             )
-        hook = hook_for_layer(a_cfg, g_energies, a_key, idx, n_repeats=a_rep)
-        if cfg.family == "griffin":
-            return _griffin_group(
-                h, gp, cfg, hook, rope=rope, mode=mode, cache=g_cache,
-                pos=pos, pattern=cfg.griffin_pattern, cache_len=cache_len,
-                pad_mask=pad_mask, lengths=lengths,
-            )
-        return _transformer_group(
-            h, gp, cfg, hook, rope=rope, mode=mode, cache=g_cache, pos=pos,
-            cache_len=cache_len, pad_mask=pad_mask, lengths=lengths,
-        )
 
-    if cfg.remat and mode == "train":
-        group_fwd = jax.checkpoint(group_fwd, static_argnums=(), prevent_cse=False)
+        if cfg.remat and mode == "train":
+            group_fwd = jax.checkpoint(group_fwd, static_argnums=(), prevent_cse=False)
+        return group_fwd
 
-    def body(h, xs):
-        gp, g_cache, g_energies, idx = xs
-        h, new_cache = group_fwd(h, gp, g_cache, g_energies, idx)
-        return h, new_cache
+    def make_body(k_row):
+        group_fwd = make_group_fwd(k_row)
+
+        def body(h, xs):
+            gp, g_cache, g_energies, idx = xs
+            h, new_cache = group_fwd(h, gp, g_cache, g_energies, idx)
+            return h, new_cache
+
+        return body
 
     xs = (
         params["blocks"],
@@ -786,7 +920,28 @@ def _run_stack(
         energies,
         jnp.arange(g),
     )
-    h, new_group_cache = jax.lax.scan(body, h, xs)
+    if profile is None:
+        h, new_group_cache = jax.lax.scan(make_body((a_rep,) * per), h, xs)
+        tail_ks = None
+    else:
+        # segmented scan: contiguous scan groups sharing a K-row share one
+        # trace; distinct-K segments each get their own (K is static in the
+        # fused kernel). Group indices stay global (xs carries arange(g)), so
+        # every layer's noise stream is identical to the unsegmented scan.
+        rows, tail_ks = profile_rows(cfg, profile)
+        parts = []
+        for start, stop, k_row in coalesce_runs(rows, coalesce=profile.coalesce):
+            seg_xs = jax.tree.map(lambda a: a[start:stop], xs)
+            h, seg_cache = jax.lax.scan(make_body(k_row), h, seg_xs)
+            parts.append(seg_cache)
+        if not parts:  # g == 0 (every layer in the griffin tail): empty scan
+            h, new_group_cache = jax.lax.scan(make_body((1,) * per), h, xs)
+        elif len(parts) == 1 or parts[0] is None:
+            new_group_cache = parts[0]
+        else:
+            new_group_cache = jax.tree.map(
+                lambda *a: jnp.concatenate(a, axis=0), *parts
+            )
 
     new_cache = {"groups": new_group_cache} if new_group_cache is not None else None
 
@@ -804,11 +959,13 @@ def _run_stack(
                 if analog is not None
                 else None
             )
+            tail_k = tail_ks[j] if tail_ks is not None else a_rep
             hook = hook_for_layer(
-                a_cfg, t_energies, a_key, g * per + j, n_repeats=a_rep
+                a_cfg, t_energies, a_key, g * per + j, n_repeats=tail_k,
+                valid=valid_rows,
             )
             h, tc = _griffin_group(
-                h, tp, cfg, hook, rope=rope, mode=mode,
+                h, tp, cfg, lambda i, hook=hook: hook, rope=rope, mode=mode,
                 cache=t_cache, pos=pos, pattern=("rec",), tail=True,
                 cache_len=cache_len, pad_mask=pad_mask, lengths=lengths,
             )

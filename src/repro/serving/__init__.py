@@ -1,5 +1,7 @@
 """Bucket-batched analog serving: shape buckets, AOT executable cache,
-precision-tiered scheduling, and the engine tying them to models/lm.py."""
+precision-tiered scheduling (uniform-K tiers and per-layer PrecisionProfile
+tiers), and the engine tying them to models/lm.py."""
+from repro.core.profile import PrecisionProfile
 from repro.serving.bucketing import (
     DEFAULT_BATCH_BUCKETS,
     DEFAULT_SEQ_BUCKETS,
@@ -15,6 +17,7 @@ __all__ = [
     "DEFAULT_BATCH_BUCKETS",
     "DEFAULT_SEQ_BUCKETS",
     "ExecutableCache",
+    "PrecisionProfile",
     "Request",
     "ServingEngine",
     "TierScheduler",

@@ -29,7 +29,12 @@ one batch-level noise stream (capacity buffers mix requests, so per-request
 streams are physically meaningless there — see ``AnalogHook.batched``).
 
 Precision tiers can never share a batch: K is static in the fused kernel
-(baked into the trace), which is exactly why the tier scheduler exists.
+(baked into the trace), which is exactly why the tier scheduler exists. A
+tier is a repeat *schedule*: the uniform ``n_repeats=K``, or a registered
+per-layer ``PrecisionProfile`` (the paper's learned per-layer precision,
+§V-VI) — profile batches run the segmented layer scan, their executables
+are cache-keyed on the profile's repeat tuple, and their energy/token is
+the true ``sum_l K_l * E_l * MACs_l``.
 """
 from __future__ import annotations
 
@@ -41,6 +46,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.analog import AnalogConfig, raw_key
+from repro.core.profile import PrecisionProfile
 from repro.models import lm
 from repro.models.config import ModelConfig
 from repro.serving.bucketing import (
@@ -60,7 +66,9 @@ class ServingEngine:
 
     ``analog_cfg=None`` serves the digital model (same batching machinery,
     no noise). ``energies`` is an ``init_energy_tree``-shaped allocation —
-    per-site energy at K=1; a tier's total spend is ``K * energy``.
+    per-site energy at K=1; a tier's total spend is ``K * energy`` (uniform)
+    or ``sum_l K_l * E_l * MACs_l`` for a per-layer profile tier
+    (``profiles`` / ``register_profile`` / ``submit(profile=...)``).
 
     ``analog_cfg`` and ``energies`` are FROZEN for the engine's lifetime:
     they are baked into every compiled executable as trace-time constants
@@ -84,6 +92,7 @@ class ServingEngine:
         seq_buckets: Sequence[int] = DEFAULT_SEQ_BUCKETS,
         pad_id: int = 0,
         seed: int = 0,
+        profiles: Optional[Sequence[PrecisionProfile]] = None,
     ):
         if analog_cfg is not None and energies is None:
             raise ValueError("analog serving requires an energy tree")
@@ -91,6 +100,11 @@ class ServingEngine:
         self.model_cfg = model_cfg
         self.analog_cfg = analog_cfg
         self._energies = energies
+        #: registered per-layer repeat schedules: tier id -> frozen profile.
+        #: add-only (profiles are hashed into executable cache keys).
+        self._profiles: Dict[str, PrecisionProfile] = {}
+        for p in profiles or ():
+            self.register_profile(p)
         self.max_gen = max_gen
         self.batch_buckets = tuple(batch_buckets)
         self.seq_buckets = tuple(seq_buckets)
@@ -141,16 +155,44 @@ class ServingEngine:
             )
         return time.monotonic() if now is None else now
 
+    def register_profile(self, profile: PrecisionProfile) -> str:
+        """Register a per-layer repeat schedule as a servable tier.
+
+        Validates the schedule against the model's layer layout. The registry
+        is add-only: re-registering a name with a *different* schedule is
+        rejected (profiles are baked into executable cache keys, so renaming
+        a schedule in place would silently serve the old trace). Returns the
+        tier id (the profile's name) for ``submit(profile=...)``.
+        """
+        lm.profile_rows(self.model_cfg, profile)  # validates length vs model
+        prev = self._profiles.get(profile.name)
+        if prev is not None and prev.cache_key() != profile.cache_key():
+            raise ValueError(
+                f"profile {profile.name!r} is already registered with a "
+                f"different schedule {prev.repeats}; profiles are frozen — "
+                "register the new schedule under a new name"
+            )
+        self._profiles[profile.name] = profile
+        return profile.name
+
     def submit(
         self,
         tokens,
         *,
         n_repeats: int = 1,
+        profile=None,
         max_new_tokens: int = 16,
         key: Optional[Array] = None,
         now: Optional[float] = None,
     ) -> int:
-        """Enqueue one request; returns its uid (results key in poll())."""
+        """Enqueue one request; returns its uid (results key in poll()).
+
+        ``profile`` selects a per-layer precision tier: a registered tier id
+        or a ``PrecisionProfile`` (auto-registered). Mutually exclusive with
+        ``n_repeats``; a *uniform* profile degenerates to the equivalent
+        ``n_repeats=K`` tier (identical trace, shared executables, shared
+        batches). Digital engines ignore both — K is a no-op without noise.
+        """
         tokens = np.asarray(tokens, np.int32).reshape(-1)
         if tokens.size == 0:
             raise ValueError(
@@ -161,12 +203,35 @@ class ServingEngine:
             raise ValueError(f"max_new_tokens must be >= 1, got {max_new_tokens}")
         if n_repeats < 1:
             raise ValueError(f"n_repeats must be >= 1, got {n_repeats}")
+        profile_id = None
+        if profile is not None:
+            if n_repeats != 1:
+                raise ValueError(
+                    "pass either n_repeats or profile, not both: a profile "
+                    "is the per-layer form of the same knob"
+                )
+            if isinstance(profile, PrecisionProfile):
+                profile_id = self.register_profile(profile)
+            else:
+                profile_id = str(profile)
+                if profile_id not in self._profiles:
+                    raise ValueError(
+                        f"unknown profile {profile_id!r}; register_profile() "
+                        "it first (or pass the PrecisionProfile itself)"
+                    )
+            p = self._profiles[profile_id]
+            # degenerate case: a uniform coalesced profile IS the uniform-K
+            # tier (coalesce=False is the unrolled test oracle — its trace is
+            # deliberately distinct, so it must stay a profile tier)
+            if p.is_uniform and p.coalesce:
+                n_repeats, profile_id = int(p.repeats[0]), None
         uid = self._uid
         self._uid += 1
         if key is None:
             key = jax.random.fold_in(self._base_key, uid)
         if self.analog_cfg is None:
-            n_repeats = 1  # digital serving: K is a no-op, don't split batches on it
+            # digital serving: K is a no-op, don't split batches on it
+            n_repeats, profile_id = 1, None
         req = Request(
             uid=uid,
             tokens=tokens,
@@ -174,6 +239,7 @@ class ServingEngine:
             max_new_tokens=min(int(max_new_tokens), self.max_gen),
             key=raw_key(key),
             arrival=self._now(now, "submit"),
+            profile_id=profile_id,
         )
         self.scheduler.submit(req)
         self.stats["requests"] += 1
@@ -201,14 +267,23 @@ class ServingEngine:
             return ("digital",)
         return (self.analog_cfg.backend, self.analog_cfg.noise.kind)
 
-    def _analog_spec(self, keys: Array, n_repeats: int, pos: Optional[Array] = None):
+    def _analog_spec(
+        self,
+        keys: Array,
+        n_repeats: int,
+        profile: Optional[PrecisionProfile] = None,
+        pos: Optional[Array] = None,
+    ):
         """AnalogSpec for one batch: stacked per-request keys, folded with
-        the decode position so every generated token draws fresh noise."""
+        the decode position so every generated token draws fresh noise.
+        ``profile`` (a trace-time constant) switches the layer scan to the
+        segmented per-layer-K form."""
         if self.analog_cfg is None:
             return None
         k = keys if pos is None else jax.vmap(jax.random.fold_in)(keys, pos)
         return lm.AnalogSpec(
-            cfg=self.analog_cfg, energies=self._energies, key=k, n_repeats=n_repeats
+            cfg=self.analog_cfg, energies=self._energies, key=k,
+            n_repeats=n_repeats, profile=profile,
         )
 
     def _keys_spec(self, bb: int) -> jax.ShapeDtypeStruct:
@@ -218,13 +293,16 @@ class ServingEngine:
             (bb,) + self._base_key.shape, self._base_key.dtype
         )
 
-    def _build_prefill(self, bb: int, sb: int, n_repeats: int):
+    def _build_prefill(
+        self, bb: int, sb: int, n_repeats: int,
+        profile: Optional[PrecisionProfile] = None,
+    ):
         cfg = self.model_cfg
         cache_len = sb + self.max_gen
 
         def fn(params, tokens, lengths, keys):
             self._traces += 1  # runs at trace time only: the retrace audit
-            analog = self._analog_spec(keys, n_repeats)
+            analog = self._analog_spec(keys, n_repeats, profile)
             cache, h_last = lm.prefill(
                 params, {"tokens": tokens}, cfg,
                 analog=analog, cache_len=cache_len, lengths=lengths,
@@ -242,13 +320,16 @@ class ServingEngine:
             self._keys_spec(bb),
         )
 
-    def _build_decode(self, bb: int, sb: int, n_repeats: int):
+    def _build_decode(
+        self, bb: int, sb: int, n_repeats: int,
+        profile: Optional[PrecisionProfile] = None,
+    ):
         cfg = self.model_cfg
         cache_len = sb + self.max_gen
 
         def fn(params, cache, tok, pos, lengths, keys):
             self._traces += 1
-            analog = self._analog_spec(keys, n_repeats, pos=pos)
+            analog = self._analog_spec(keys, n_repeats, profile, pos=pos)
             logits, new_cache = lm.decode_step(
                 params, cache, {"tokens": tok}, pos, cfg, analog=analog,
                 lengths=lengths,
@@ -271,14 +352,19 @@ class ServingEngine:
 
     def _batch_keys(self, reqs: List[Request], bb: int) -> Array:
         rows = [r.key for r in reqs]
-        # batch-padding rows get a fixed key; their outputs are discarded and
-        # per-request streams keep them from touching real rows anyway
+        # batch-padding rows get a fixed key; their outputs are discarded,
+        # per-request streams keep them from touching real rows, and the
+        # batch-level MoE expert fold excludes length-0 rows entirely
+        # (collapse_keys valid mask), so the pad count never changes noise
         rows += [raw_key(jax.random.PRNGKey(0))] * (bb - len(reqs))
         return jnp.stack([jnp.asarray(k, self._base_key.dtype) for k in rows])
 
     def _run_batch(self, reqs: List[Request]) -> Dict[int, np.ndarray]:
+        tier = reqs[0].tier
+        assert all(r.tier == tier for r in reqs), "mixed-tier batch"
         n_repeats = reqs[0].n_repeats
-        assert all(r.n_repeats == n_repeats for r in reqs), "mixed-K batch"
+        profile = self._profiles[tier] if isinstance(tier, str) else None
+        tier_key = profile.cache_key() if profile is not None else n_repeats
         bb, sb = bucket_shape(
             len(reqs), max(r.prompt_len for r in reqs),
             batch_buckets=self.batch_buckets, seq_buckets=self.seq_buckets,
@@ -292,16 +378,16 @@ class ServingEngine:
         sig = self._cfg_sig()
 
         prefill_exe = self.exe_cache.get(
-            ("prefill", bb, sb, n_repeats) + sig,
-            lambda: self._build_prefill(bb, sb, n_repeats),
+            ("prefill", bb, sb, tier_key) + sig,
+            lambda: self._build_prefill(bb, sb, n_repeats, profile),
         )
         cache, tok = prefill_exe(self.params, tokens, lengths, keys)
         toks = [tok]
         n_steps = max(r.max_new_tokens for r in reqs) - 1
         if n_steps > 0:  # single-token batches never need the decode exe
             decode_exe = self.exe_cache.get(
-                ("decode", bb, sb, n_repeats) + sig,
-                lambda: self._build_decode(bb, sb, n_repeats),
+                ("decode", bb, sb, tier_key) + sig,
+                lambda: self._build_decode(bb, sb, n_repeats, profile),
             )
         for t in range(n_steps):
             pos = lengths + t
@@ -326,6 +412,31 @@ class ServingEngine:
     def energies(self):
         """The frozen energy allocation (baked into compiled executables)."""
         return self._energies
+
+    @property
+    def profiles(self) -> Dict[str, PrecisionProfile]:
+        """The registered per-layer precision tiers (read-only copy)."""
+        return dict(self._profiles)
+
+    def tier_energy_per_token(self, tier) -> float:
+        """True analog energy per generated token of a tier (aJ):
+        ``sum_l K_l * E_l * MACs_l`` over the frozen per-site energies.
+
+        ``tier``: a uniform K int, a registered profile id, or a
+        ``PrecisionProfile``. Uniform K is priced as the degenerate
+        uniform profile — same formula, every K_l = K.
+        """
+        if self._energies is None:
+            raise ValueError("digital engine: no energy tree to account")
+        if isinstance(tier, PrecisionProfile):
+            profile = tier
+        elif isinstance(tier, str):
+            if tier not in self._profiles:
+                raise ValueError(f"unknown profile {tier!r}")
+            profile = self._profiles[tier]
+        else:
+            profile = PrecisionProfile.uniform(int(tier), self.model_cfg.n_layers)
+        return lm.profile_token_energy(self.model_cfg, self._energies, profile)
 
     @property
     def trace_count(self) -> int:

@@ -2,8 +2,10 @@
 
 The fused kernel's repeat count K is *static* (baked into the trace), so a
 single batch cannot mix precision tiers — tier grouping is what makes
-dynamic precision servable at all. The scheduler keeps one FIFO queue per
-(n_repeats, seq_bucket) group and dispatches a group when it fills its
+dynamic precision servable at all. A tier is a repeat *schedule*: the
+classic uniform ``n_repeats=K``, or a registered per-layer
+``PrecisionProfile`` (identified by its id). The scheduler keeps one FIFO
+queue per (tier, seq_bucket) group and dispatches a group when it fills its
 batch bucket or its oldest request has waited ``max_wait`` seconds (the
 anti-starvation deadline for low-traffic tiers).
 
@@ -26,9 +28,11 @@ class Request:
     """One generation request at a precision tier.
 
     ``n_repeats`` is the paper's dynamic-precision knob: K analog repeats
-    per matmul (noise / sqrt(K) at K x energy). ``key`` seeds this request's
-    private noise streams — outputs are reproducible and independent of
-    batch-mates.
+    per matmul (noise / sqrt(K) at K x energy). ``profile_id`` names a
+    registered per-layer K schedule instead — a tier IS a profile, with the
+    classic uniform K as the degenerate case (``profile_id=None``). ``key``
+    seeds this request's private noise streams — outputs are reproducible
+    and independent of batch-mates.
     """
 
     uid: int
@@ -37,10 +41,17 @@ class Request:
     max_new_tokens: int = 16
     key: Optional[object] = None  # jax PRNG key; engine fills a default
     arrival: float = 0.0
+    profile_id: Optional[str] = None  # registered PrecisionProfile tier
 
     @property
     def prompt_len(self) -> int:
         return int(np.asarray(self.tokens).reshape(-1).shape[0])
+
+    @property
+    def tier(self):
+        """The batch-compatibility key: requests only share a batch when
+        their compiled repeat schedule is identical."""
+        return self.profile_id if self.profile_id is not None else self.n_repeats
 
 
 class TierScheduler:
@@ -56,12 +67,13 @@ class TierScheduler:
         self.max_batch = max_batch
         self.max_wait = max_wait
         self.seq_buckets = tuple(seq_buckets)
-        # group (n_repeats, seq_bucket) -> FIFO of requests. OrderedDict so
-        # dispatch order over groups is submission-ordered, not hash-ordered.
-        self._queues: "OrderedDict[Tuple[int, int], List[Request]]" = OrderedDict()
+        # group (tier, seq_bucket) -> FIFO of requests, where tier is the
+        # uniform K int or a profile id string. OrderedDict so dispatch order
+        # over groups is submission-ordered, not hash-ordered.
+        self._queues: "OrderedDict[Tuple[object, int], List[Request]]" = OrderedDict()
 
-    def group_of(self, req: Request) -> Tuple[int, int]:
-        return (req.n_repeats, next_bucket(req.prompt_len, self.seq_buckets))
+    def group_of(self, req: Request) -> Tuple[object, int]:
+        return (req.tier, next_bucket(req.prompt_len, self.seq_buckets))
 
     def submit(self, req: Request) -> Tuple[int, int]:
         g = self.group_of(req)

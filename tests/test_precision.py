@@ -6,7 +6,7 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core import noise_bits, noise_var_from_bits, thermal_noise_bits
-from repro.core.precision import empirical_noise_var
+from repro.core.precision import average_bits, empirical_noise_var
 
 
 @settings(max_examples=50, deadline=None)
@@ -60,6 +60,38 @@ def test_noisy_accuracy_matches_equivalent_bits():
         mse_quant = float(jnp.mean((quantized - y) ** 2))
         ratio = mse_noise / mse_quant
         assert 1 / 2.5 < ratio < 2.5, (target_bits, ratio)
+
+
+def test_average_bits_unweighted_is_plain_layer_mean():
+    """The Table-I default: a plain mean over layers (per-channel layers
+    mean-reduced first), regardless of how the MACs are distributed."""
+    bits = {"a": 2.0, "b": jnp.asarray([4.0, 8.0]), "c": 6.0}
+    macs = {"a": 1e9, "b": jnp.asarray([1.0, 1.0]), "c": 1.0}
+    got = float(average_bits(bits, macs))
+    assert got == pytest.approx((2.0 + 6.0 + 6.0) / 3.0)
+    # per_layer_macs is genuinely unused in the unweighted form
+    assert got == pytest.approx(float(average_bits(bits)))
+
+
+def test_average_bits_weighted_by_macs():
+    """weighted=True: sum_l B_l * n_l / sum_l n_l with n_l the layer's total
+    MACs — a giant low-bit layer dominates, a tiny high-bit head does not."""
+    bits = {"big": 2.0, "head": 10.0}
+    macs = {"big": 3.0, "head": 1.0}
+    got = float(average_bits(bits, macs, weighted=True))
+    assert got == pytest.approx((2.0 * 3.0 + 10.0 * 1.0) / 4.0)
+    # per-channel layers: mean bits, summed MACs
+    bits2 = {"a": jnp.asarray([1.0, 3.0]), "b": 4.0}
+    macs2 = {"a": jnp.asarray([5.0, 5.0]), "b": 10.0}
+    got2 = float(average_bits(bits2, macs2, weighted=True))
+    assert got2 == pytest.approx((2.0 * 10.0 + 4.0 * 10.0) / 20.0)
+    # uniform MACs: weighted collapses to the unweighted mean
+    uni = {k: 7.0 for k in bits}
+    assert float(average_bits(bits, uni, weighted=True)) == pytest.approx(
+        float(average_bits(bits))
+    )
+    with pytest.raises(ValueError, match="per_layer_macs"):
+        average_bits(bits, weighted=True)
 
 
 def test_empirical_noise_var():

@@ -1,0 +1,502 @@
+"""Per-layer precision profiles: the PrecisionProfile object, the greedy
+repeat-schedule search, the segmented same-K layer scan in models/lm.py
+(with its unrolled-loop and scaled-energy equivalence oracles), and profile
+tiers through the serving engine — solo vs padded-bucket-batched tokens must
+stay bit-identical under a non-uniform profile, exactly like uniform K."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    AnalogConfig,
+    PrecisionProfile,
+    apply_repeats,
+    coalesce_runs,
+    repeat_profile_search,
+)
+from repro.models import init_energy_tree, init_params, lm
+from repro.models.config import ModelConfig
+from repro.serving import ServingEngine
+
+KEY = jax.random.PRNGKey(0)
+ENERGY_AJ = 20.0
+SB = 32
+
+_BASE = dict(
+    n_layers=2, d_model=32, n_heads=2, n_kv_heads=1, head_dim=16,
+    vocab_size=128, attn_q_chunk=16, attn_kv_chunk=16, loss_chunk=32,
+    dtype="float32",
+)
+#: families x non-uniform schedules. griffin: one scan group of 3 sublayers
+#: plus per-sublayer Ks; xlstm: (mlstm, slstm) group; dense: per-group
+#: segments (2 segments for (1, 2)).
+FAMILY_CASES = {
+    "dense": (
+        ModelConfig(name="prof-dense", family="dense", d_ff=64, **_BASE),
+        (1, 2),
+    ),
+    "windowed": (
+        ModelConfig(name="prof-win", family="dense", d_ff=64, sliding_window=8, **_BASE),
+        (2, 1),
+    ),
+    "griffin": (
+        ModelConfig(
+            name="prof-griffin", family="griffin", n_layers=3, d_model=32,
+            n_heads=2, n_kv_heads=1, head_dim=16, d_ff=64, vocab_size=128,
+            rnn_width=32, conv_width=4, local_window=8, attn_q_chunk=16,
+            attn_kv_chunk=16, loss_chunk=32, dtype="float32",
+        ),
+        (2, 1, 1),
+    ),
+    "xlstm": (
+        ModelConfig(
+            name="prof-xlstm", family="xlstm", d_ff=0, slstm_ratio=2,
+            n_kv_heads=2, **{k: v for k, v in _BASE.items() if k != "n_kv_heads"}
+        ),
+        (2, 1),
+    ),
+}
+
+
+# --------------------------------------------------------------------------
+# the profile object: validation, degenerate uniform case, persistence
+# --------------------------------------------------------------------------
+
+
+def test_profile_validation_and_uniform():
+    p = PrecisionProfile((2, 1, 4), name="p")
+    assert p.n_layers == 3 and p.max_k == 4 and not p.is_uniform
+    u = PrecisionProfile.uniform(2, 3)
+    assert u.is_uniform and u.repeats == (2, 2, 2) and u.name == "uniform-2"
+    with pytest.raises(ValueError, match=">= 1"):
+        PrecisionProfile((1, 0), name="bad")
+    with pytest.raises(ValueError, match="at least one"):
+        PrecisionProfile((), name="empty")
+    with pytest.raises(ValueError, match="name"):
+        PrecisionProfile((1,), name="")
+
+
+def test_profile_cache_key_degenerate_and_distinct():
+    """Uniform profiles key as the bare K (they ARE the n_repeats tier and
+    must share its executables); non-uniform schedules key on the repeat
+    tuple; the unrolled oracle form never aliases the coalesced trace."""
+    assert PrecisionProfile.uniform(4, 3).cache_key() == 4
+    assert PrecisionProfile((2, 1), name="p").cache_key() == (2, 1)
+    assert PrecisionProfile((2, 1), name="p", coalesce=False).cache_key() == (
+        "unrolled", 2, 1,
+    )
+    assert PrecisionProfile((2, 1), name="a").cache_key() == (
+        PrecisionProfile((2, 1), name="b").cache_key()
+    )  # identity is the schedule, not the name
+
+
+def test_profile_save_load_roundtrip(tmp_path):
+    p = PrecisionProfile((4, 2, 1, 1), name="resnet-ish")
+    path = str(tmp_path / "profile.json")
+    p.save(path)
+    q = PrecisionProfile.load(path)
+    assert q == p
+
+
+def test_coalesce_runs():
+    rows = [(2,), (2,), (1,), (1,), (2,)]
+    assert coalesce_runs(rows) == [(0, 2, (2,)), (2, 4, (1,)), (4, 5, (2,))]
+    assert coalesce_runs(rows, coalesce=False) == [
+        (i, i + 1, r) for i, r in enumerate(rows)
+    ]
+    assert coalesce_runs([]) == []
+
+
+# --------------------------------------------------------------------------
+# greedy repeat search: lowers exactly the layers that can afford it
+# --------------------------------------------------------------------------
+
+
+def _needs_acc_fn(needs, drop=0.05):
+    """Accuracy model: each layer below its required K costs ``drop``."""
+    return lambda reps: 1.0 - drop * sum(k < n for k, n in zip(reps, needs))
+
+
+def test_repeat_profile_search_finds_layer_needs():
+    needs = (4, 1, 2)
+    res = repeat_profile_search(
+        _needs_acc_fn(needs), n_layers=3, float_acc=1.0, max_degradation=0.02,
+        k_levels=(1, 2, 4),
+    )
+    assert res.feasible
+    assert res.repeats == needs  # every layer at exactly its minimum K
+    assert res.accuracy == 1.0
+    assert res.cost < res.uniform_cost
+    assert res.n_evals == len(res.trace) == len({r for r, _ in res.trace})
+
+
+def test_repeat_profile_search_weights_order_not_result():
+    """Energy weights steer the descent order, not the fixed point."""
+    needs = (2, 1)
+    for w in ((1.0, 100.0), (100.0, 1.0)):
+        res = repeat_profile_search(
+            _needs_acc_fn(needs), n_layers=2, float_acc=1.0,
+            k_levels=(1, 2, 4), weights=w,
+        )
+        assert res.repeats == needs
+        assert res.cost == sum(k * wl for k, wl in zip(needs, w))
+
+
+def test_repeat_profile_search_infeasible_start():
+    res = repeat_profile_search(
+        lambda reps: 0.5, n_layers=2, float_acc=1.0, max_degradation=0.02,
+        k_levels=(1, 2),
+    )
+    assert not res.feasible
+    assert res.repeats == (2, 2)  # unchanged uniform max: nothing to serve
+
+
+def test_repeat_profile_search_warm_init():
+    """A warm start (e.g. the schedule learned at a neighbouring floor) is
+    honoured and only descended, never raised."""
+    needs = (2, 1, 1)
+    res = repeat_profile_search(
+        _needs_acc_fn(needs), n_layers=3, float_acc=1.0,
+        k_levels=(1, 2, 4), init=(2, 2, 1),
+    )
+    assert res.repeats == needs
+    # the search only descends: no evaluated schedule exceeds init anywhere
+    assert all(
+        all(k <= k0 for k, k0 in zip(r, (2, 2, 1))) for r, _ in res.trace
+    )
+    # the savings baseline stays uniform max-K even under a warm start
+    assert res.uniform_cost == 4 * 3
+    with pytest.raises(ValueError, match="ladder"):
+        repeat_profile_search(
+            _needs_acc_fn(needs), n_layers=3, float_acc=1.0,
+            k_levels=(1, 2, 4), init=(3, 1, 1),
+        )
+
+
+# --------------------------------------------------------------------------
+# segmented layer scan: three independent equivalence oracles
+# --------------------------------------------------------------------------
+
+MODEL3 = ModelConfig(
+    name="prof-dense3", family="dense", n_layers=3, d_model=32, n_heads=2,
+    n_kv_heads=1, d_ff=64, vocab_size=128, attn_q_chunk=16, attn_kv_chunk=16,
+    loss_chunk=32, dtype="float32",
+)
+
+
+def _forward(cfg, params, energies, toks, **spec_kw):
+    analog = lm.AnalogSpec(
+        cfg=AnalogConfig.shot(), energies=energies, key=KEY, **spec_kw
+    )
+    return lm.forward_hidden(
+        params, {"tokens": toks}, cfg, mode="prefill", analog=analog,
+        cache_len=toks.shape[1] + 4,
+    )
+
+
+def _assert_trees_equal(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_uniform_profile_matches_plain_n_repeats():
+    """The degenerate case really is degenerate: a uniform profile's forward
+    (one segment spanning the whole scan) is bit-identical to n_repeats=K."""
+    params = init_params(KEY, MODEL3)
+    energies = init_energy_tree(MODEL3, ENERGY_AJ)
+    toks = jax.random.randint(KEY, (2, 16), 0, MODEL3.vocab_size)
+    h_k, c_k = _forward(MODEL3, params, energies, toks, n_repeats=2)
+    h_p, c_p = _forward(
+        MODEL3, params, energies, toks, profile=PrecisionProfile.uniform(2, 3)
+    )
+    np.testing.assert_array_equal(np.asarray(h_k), np.asarray(h_p))
+    _assert_trees_equal(c_k, c_p)
+
+
+def test_segmented_scan_matches_unrolled_loop_oracle():
+    """The segmentation oracle: merging contiguous same-K groups into shared
+    scan segments must be invisible — coalesce=False runs every scan group
+    as its own segment (a python loop of single-group scans) and must match
+    the coalesced form bit-exactly."""
+    params = init_params(KEY, MODEL3)
+    energies = init_energy_tree(MODEL3, ENERGY_AJ)
+    toks = jax.random.randint(KEY, (2, 16), 0, MODEL3.vocab_size)
+    reps = (2, 2, 1)  # coalesced: segments [0:2], [2:3]
+    h_c, c_c = _forward(
+        MODEL3, params, energies, toks, profile=PrecisionProfile(reps, name="p")
+    )
+    h_u, c_u = _forward(
+        MODEL3, params, energies, toks,
+        profile=PrecisionProfile(reps, name="p", coalesce=False),
+    )
+    np.testing.assert_array_equal(np.asarray(h_c), np.asarray(h_u))
+    _assert_trees_equal(c_c, c_u)
+
+
+@pytest.mark.parametrize("family", sorted(FAMILY_CASES))
+def test_profile_matches_scaled_energy_oracle(family):
+    """Independent-semantics oracle, every family: serving layer l at K_l
+    repeats is (on the jnp path) bit-identical to serving at K=1 with that
+    layer's energies scaled by K_l — profile forward must equal the plain
+    forward over apply_repeats(energies, profile_repeat_tree). Covers the
+    per-sublayer hook threading, segment boundaries, global layer indices
+    (noise streams), and the griffin tail layers."""
+    cfg, reps = FAMILY_CASES[family]
+    params = init_params(KEY, cfg)
+    energies = init_energy_tree(cfg, ENERGY_AJ)
+    toks = jax.random.randint(KEY, (2, 16), 0, cfg.vocab_size)
+    profile = PrecisionProfile(reps, name="p")
+    h_p, c_p = _forward(cfg, params, energies, toks, profile=profile)
+    scaled = apply_repeats(energies, lm.profile_repeat_tree(cfg, profile))
+    h_s, c_s = _forward(cfg, params, scaled, toks)
+    np.testing.assert_array_equal(np.asarray(h_p), np.asarray(h_s))
+    _assert_trees_equal(c_p, c_s)
+    # decode: same equivalence from the (identical) caches
+    pos = jnp.asarray(16)
+    shot = AnalogConfig.shot()
+    l_p, _ = lm.decode_step(
+        params, c_p, {"tokens": toks[:, :1]}, pos, cfg,
+        analog=lm.AnalogSpec(cfg=shot, energies=energies, key=KEY, profile=profile),
+    )
+    l_s, _ = lm.decode_step(
+        params, c_s, {"tokens": toks[:, :1]}, pos, cfg,
+        analog=lm.AnalogSpec(cfg=shot, energies=scaled, key=KEY),
+    )
+    np.testing.assert_array_equal(np.asarray(l_p), np.asarray(l_s))
+
+
+def test_moe_profile_matches_scaled_energy_oracle():
+    """MoE coverage of the same oracle (prefill only — expert dispatch is the
+    slow compile): per-sublayer K reaches the router, expert-batched sites,
+    and the batch-level noise stream identically to scaled energies."""
+    cfg = ModelConfig(
+        name="prof-moe", family="moe", d_ff=64, n_experts=4, top_k=2,
+        moe_every=2, capacity_factor=2.0, moe_group_size=64, **_BASE
+    )
+    params = init_params(KEY, cfg)
+    energies = init_energy_tree(cfg, ENERGY_AJ)
+    toks = jax.random.randint(KEY, (2, 16), 0, cfg.vocab_size)
+    profile = PrecisionProfile((2, 1), name="p")  # (attn+mlp, attn+moe) group
+    h_p, c_p = _forward(cfg, params, energies, toks, profile=profile)
+    scaled = apply_repeats(energies, lm.profile_repeat_tree(cfg, profile))
+    h_s, c_s = _forward(cfg, params, scaled, toks)
+    np.testing.assert_array_equal(np.asarray(h_p), np.asarray(h_s))
+    _assert_trees_equal(c_p, c_s)
+
+
+def test_profile_shape_validation():
+    params = init_params(KEY, MODEL3)
+    energies = init_energy_tree(MODEL3, ENERGY_AJ)
+    toks = jax.random.randint(KEY, (1, 8), 0, MODEL3.vocab_size)
+    with pytest.raises(ValueError, match="layers"):
+        _forward(MODEL3, params, energies, toks,
+                 profile=PrecisionProfile((2, 1), name="short"))
+    with pytest.raises(ValueError, match="overrides n_repeats"):
+        _forward(MODEL3, params, energies, toks, n_repeats=2,
+                 profile=PrecisionProfile((2, 1, 1), name="p"))
+
+
+def test_profile_repeat_tree_and_token_energy():
+    """sum_l K_l * E_l * MACs_l, pinned by hand on the 2-layer dense model:
+    per-layer K scales every site of its layer, the (digitally served)
+    lm_head stays at K=1."""
+    cfg, _ = FAMILY_CASES["dense"]
+    energies = init_energy_tree(cfg, ENERGY_AJ)
+    macs = lm.energy_macs(cfg, 1)
+    profile = PrecisionProfile((4, 1), name="p")
+    tree = lm.profile_repeat_tree(cfg, profile)
+    assert float(tree["lm_head"]) == 1.0
+    for site, k in tree["groups"].items():
+        np.testing.assert_array_equal(np.asarray(k).reshape(-1), [4.0, 1.0])
+    expect = float(tree["lm_head"]) * float(energies["lm_head"]) * float(macs["lm_head"])
+    for site in energies["groups"]:
+        e = np.asarray(energies["groups"][site], np.float64)
+        m = np.asarray(macs["groups"][site], np.float64)
+        expect += float((np.asarray([4.0, 1.0]) * e * m).sum())
+    got = lm.profile_token_energy(cfg, energies, profile)
+    assert got == pytest.approx(expect, rel=1e-6)
+    # uniform pricing: K * (all analog sites) + 1 * lm_head
+    uni = lm.profile_token_energy(cfg, energies, PrecisionProfile.uniform(2, 2))
+    base = lm.profile_token_energy(cfg, energies, PrecisionProfile.uniform(1, 2))
+    head = float(energies["lm_head"]) * float(macs["lm_head"])
+    assert uni == pytest.approx(2 * (base - head) + head, rel=1e-6)
+
+
+# --------------------------------------------------------------------------
+# serving: a profile is a tier — learn, freeze, serve, bit-identical
+# --------------------------------------------------------------------------
+
+
+def _prompts_and_keys(n=3):
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, 128, L) for L in (7, 19, 28)[:n]]
+    keys = [jax.random.fold_in(jax.random.PRNGKey(5), i) for i in range(n)]
+    return prompts, keys
+
+
+@pytest.mark.parametrize("family", sorted(FAMILY_CASES))
+def test_family_profile_solo_vs_batched_equivalence(family):
+    """The acceptance contract, per family: a request served under a
+    NON-UNIFORM profile in a padded bucket batch (pad rows + shorter
+    batch-mates) is bit-identical to its solo run through the same engine.
+    (MoE is excluded exactly as for uniform K: expert capacity buffers mix
+    requests, so analog MoE is reproducible per batch composition.)"""
+    cfg, reps = FAMILY_CASES[family]
+    params = init_params(KEY, cfg)
+    energies = init_energy_tree(cfg, ENERGY_AJ)
+    profile = PrecisionProfile(reps, name="learned")
+    eng = ServingEngine(
+        params, cfg, analog_cfg=AnalogConfig.shot(), energies=energies,
+        max_gen=8, max_batch=4, max_wait=1.0, batch_buckets=(1, 2, 4),
+        seq_buckets=(SB,), profiles=[profile],
+    )
+    prompts, keys = _prompts_and_keys()
+    uids = [
+        eng.submit(p, profile="learned", max_new_tokens=4, key=k, now=0.0)
+        for p, k in zip(prompts, keys)
+    ]
+    padded_before = eng.stats["padded_rows"]
+    batched = eng.flush()
+    assert eng.stats["padded_rows"] - padded_before == 1  # bb=4 held 3 reqs
+    for uid, p, k in zip(uids, prompts, keys):
+        solo_uid = eng.submit(p, profile="learned", max_new_tokens=4, key=k, now=0.0)
+        solo = eng.flush()[solo_uid]
+        np.testing.assert_array_equal(batched[uid], solo)
+    # steady state: replaying the same trace is all cache hits, no retraces
+    eng.exe_cache.reset_stats()
+    traces_before = eng.trace_count
+    for p, k in zip(prompts, keys):
+        eng.submit(p, profile="learned", max_new_tokens=4, key=k, now=0.0)
+    eng.flush()
+    assert eng.exe_cache.stats()["misses"] == 0
+    assert eng.trace_count == traces_before
+
+
+def test_profile_tier_never_mixes_with_uniform_tiers():
+    """A profile tier is its own scheduling group: its requests never share
+    a batch with uniform-K traffic (K schedules are baked into traces)."""
+    cfg, reps = FAMILY_CASES["dense"]
+    params = init_params(KEY, cfg)
+    energies = init_energy_tree(cfg, ENERGY_AJ)
+    eng = ServingEngine(
+        params, cfg, analog_cfg=AnalogConfig.shot(), energies=energies,
+        max_gen=8, max_batch=4, max_wait=1.0, batch_buckets=(1, 2, 4),
+        seq_buckets=(SB,), profiles=[PrecisionProfile(reps, name="learned")],
+    )
+    prompts, keys = _prompts_and_keys()
+    batches_before = eng.stats["batches"]
+    uids_p = [eng.submit(p, profile="learned", max_new_tokens=4, key=k, now=0.0)
+              for p, k in zip(prompts, keys)]
+    uids_u = [eng.submit(p, n_repeats=2, max_new_tokens=4, key=k, now=0.0)
+              for p, k in zip(prompts, keys)]
+    out = eng.flush()
+    assert set(out) == set(uids_p) | set(uids_u)
+    assert eng.stats["batches"] - batches_before == 2  # one batch per tier
+
+
+def test_uniform_profile_degenerates_to_k_tier():
+    """uniform-K as a profile IS the n_repeats=K tier: same scheduling
+    group (shared batch), same executables, bit-identical tokens."""
+    cfg, _ = FAMILY_CASES["dense"]
+    params = init_params(KEY, cfg)
+    energies = init_energy_tree(cfg, ENERGY_AJ)
+    eng = ServingEngine(
+        params, cfg, analog_cfg=AnalogConfig.shot(), energies=energies,
+        max_gen=8, max_batch=4, max_wait=1.0, batch_buckets=(1, 2, 4),
+        seq_buckets=(SB,),
+    )
+    prompts, keys = _prompts_and_keys(2)
+    batches_before = eng.stats["batches"]
+    u0 = eng.submit(prompts[0], profile=PrecisionProfile.uniform(2, 2),
+                    max_new_tokens=4, key=keys[0], now=0.0)
+    u1 = eng.submit(prompts[1], n_repeats=2, max_new_tokens=4, key=keys[1], now=0.0)
+    out = eng.flush()
+    assert eng.stats["batches"] - batches_before == 1  # one shared batch
+    # same request under either spelling: bit-identical
+    s0 = eng.submit(prompts[0], n_repeats=2, max_new_tokens=4, key=keys[0], now=0.0)
+    np.testing.assert_array_equal(out[u0], eng.flush()[s0])
+    # a uniform UNROLLED-oracle profile must NOT degenerate: its trace is
+    # deliberately distinct, so it stays its own tier (and never shares a
+    # batch with the K tier) — while its tokens still match bit-exactly
+    oracle = PrecisionProfile.uniform(2, 2)
+    oracle = dataclasses.replace(oracle, name="oracle", coalesce=False)
+    batches_before = eng.stats["batches"]
+    o0 = eng.submit(prompts[0], profile=oracle, max_new_tokens=4, key=keys[0], now=0.0)
+    k0 = eng.submit(prompts[1], n_repeats=2, max_new_tokens=4, key=keys[1], now=0.0)
+    out2 = eng.flush()
+    assert eng.stats["batches"] - batches_before == 2  # oracle tier separate
+    np.testing.assert_array_equal(out[u0], out2[o0])
+
+
+def test_engine_profile_registry_validation():
+    cfg, reps = FAMILY_CASES["dense"]
+    params = init_params(KEY, cfg)
+    energies = init_energy_tree(cfg, ENERGY_AJ)
+    eng = ServingEngine(
+        params, cfg, analog_cfg=AnalogConfig.shot(), energies=energies,
+        max_gen=4, max_batch=2, max_wait=0.0, batch_buckets=(1, 2),
+        seq_buckets=(SB,),
+    )
+    with pytest.raises(ValueError, match="layers"):
+        eng.register_profile(PrecisionProfile((1, 2, 4), name="wrong-depth"))
+    eng.register_profile(PrecisionProfile(reps, name="p"))
+    eng.register_profile(PrecisionProfile(reps, name="p"))  # idempotent
+    with pytest.raises(ValueError, match="frozen"):
+        eng.register_profile(PrecisionProfile((4, 4, 1)[:2], name="p"))
+    with pytest.raises(ValueError, match="unknown profile"):
+        eng.submit(np.arange(4), profile="never-registered", now=0.0)
+    with pytest.raises(ValueError, match="not both"):
+        eng.submit(np.arange(4), profile="p", n_repeats=2, now=0.0)
+    with pytest.raises(ValueError, match="unknown profile"):
+        eng.tier_energy_per_token("never-registered")
+    assert eng.scheduler.n_pending == 0  # nothing half-enqueued
+
+
+def test_digital_engine_ignores_profiles():
+    """K is a no-op without noise: digital engines coalesce profile and
+    uniform submissions into one batch, exactly like mixed K."""
+    cfg, reps = FAMILY_CASES["dense"]
+    params = init_params(KEY, cfg)
+    eng = ServingEngine(
+        params, cfg, max_gen=4, max_batch=2, max_wait=0.0,
+        batch_buckets=(1, 2), seq_buckets=(SB,),
+        profiles=[PrecisionProfile(reps, name="p")],
+    )
+    u0 = eng.submit(np.arange(10) % cfg.vocab_size, profile="p", now=0.0)
+    u1 = eng.submit(np.arange(4) % cfg.vocab_size, n_repeats=4, now=0.0)
+    out = eng.flush()
+    assert set(out) == {u0, u1}
+    assert eng.stats["batches"] == 1
+    with pytest.raises(ValueError, match="digital"):
+        eng.tier_energy_per_token("p")
+
+
+def test_engine_tier_energy_accounting():
+    """The engine prices tiers by the true schedule: a profile that lowers
+    any layer undercuts its uniform ceiling, and uniform pricing matches
+    profile_token_energy on the degenerate profile."""
+    cfg, reps = FAMILY_CASES["dense"]
+    params = init_params(KEY, cfg)
+    energies = init_energy_tree(cfg, ENERGY_AJ)
+    profile = PrecisionProfile(reps, name="learned")
+    eng = ServingEngine(
+        params, cfg, analog_cfg=AnalogConfig.shot(), energies=energies,
+        max_gen=4, max_batch=2, max_wait=0.0, batch_buckets=(1, 2),
+        seq_buckets=(SB,), profiles=[profile],
+    )
+    e_prof = eng.tier_energy_per_token("learned")
+    e_hi = eng.tier_energy_per_token(max(reps))
+    e_lo = eng.tier_energy_per_token(min(reps))
+    assert e_lo < e_prof < e_hi
+    assert e_prof == pytest.approx(
+        lm.profile_token_energy(cfg, energies, profile), rel=1e-6
+    )
+    assert e_hi == pytest.approx(
+        lm.profile_token_energy(
+            cfg, energies, PrecisionProfile.uniform(max(reps), cfg.n_layers)
+        ),
+        rel=1e-6,
+    )

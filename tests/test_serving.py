@@ -10,6 +10,7 @@ from hypothesis import given, settings
 from hypothesis import strategies as st
 
 from repro.core import AnalogConfig, analog_dot
+from repro.core.analog import collapse_keys, raw_key
 from repro.models import init_energy_tree, init_params, lm
 from repro.models.config import ModelConfig
 from repro.serving import (
@@ -164,6 +165,76 @@ def test_stacked_keys_match_unbatched_analog_dot():
     # rows are invariant to their batch-mates
     y_perm = analog_dot(x[::-1], w, cfg=cfg, energy=e, key=keys[::-1], n_repeats=2)
     np.testing.assert_array_equal(np.asarray(y_perm[::-1]), np.asarray(y))
+
+
+def test_collapse_keys_excludes_pad_rows():
+    """Regression: the batch-level MoE noise key must depend only on the
+    REAL requests in a bucket batch. Pad rows (length 0) fold the XOR
+    identity, so the same real traffic collapses to the same key at any
+    batch-pad count — and regardless of what keys the pad rows carry."""
+    real = [raw_key(jax.random.fold_in(KEY, i)) for i in range(3)]
+    pad = raw_key(jax.random.PRNGKey(0))
+    f_real = collapse_keys(jnp.stack(real))
+    for n_pads, pad_key in ((1, pad), (3, pad), (2, raw_key(jax.random.PRNGKey(99)))):
+        stacked = jnp.stack(real + [pad_key] * n_pads)
+        valid = jnp.asarray([True] * 3 + [False] * n_pads)
+        np.testing.assert_array_equal(
+            np.asarray(collapse_keys(stacked, valid)), np.asarray(f_real)
+        )
+    # without pad rows the mask is a no-op; single keys pass through
+    np.testing.assert_array_equal(
+        np.asarray(collapse_keys(jnp.stack(real), jnp.ones(3, bool))),
+        np.asarray(f_real),
+    )
+    np.testing.assert_array_equal(
+        np.asarray(collapse_keys(real[0])), np.asarray(real[0])
+    )
+
+
+def test_moe_expert_noise_ignores_pad_rows():
+    """End-to-end regression for the pad-key fold bug: serving the same two
+    real requests in a bucket with batch-pad rows, the pad rows' PRNG keys
+    (previously XOR-folded into the batch-level expert stream) must not
+    change the real rows' tokens — prefill and decode."""
+    cfg = FAMILY_CONFIGS["moe"]
+    params = init_params(KEY, cfg)
+    energies = init_energy_tree(cfg, ENERGY_AJ)
+    shot = AnalogConfig.shot()
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(0, cfg.vocab_size, L) for L in (5, 9)]
+    toks = np.zeros((4, 16), np.int32)
+    for i, p in enumerate(prompts):
+        toks[i, : len(p)] = p
+    lengths = jnp.asarray([5, 9, 0, 0], jnp.int32)
+
+    def run(pad_seed):
+        keys = jnp.stack(
+            [raw_key(jax.random.fold_in(KEY, i)) for i in range(2)]
+            + [raw_key(jax.random.PRNGKey(pad_seed))] * 2
+        )
+        analog = lm.AnalogSpec(cfg=shot, energies=energies, key=keys)
+        cache, h_last = lm.prefill(
+            params, {"tokens": jnp.asarray(toks)}, cfg, analog=analog,
+            cache_len=20, lengths=lengths,
+        )
+        tok = jnp.argmax(lm.logits_last(params, h_last, cfg)[:, 0, 0], axis=-1)
+        outs = [np.asarray(tok)]
+        for t in range(3):
+            pos = lengths + t
+            step = lm.AnalogSpec(
+                cfg=shot, energies=energies,
+                key=jax.vmap(jax.random.fold_in)(keys, pos),
+            )
+            logits, cache = lm.decode_step(
+                params, cache, {"tokens": tok[:, None].astype(jnp.int32)},
+                pos, cfg, analog=step, lengths=lengths,
+            )
+            tok = jnp.argmax(logits[:, 0, 0], axis=-1)
+            outs.append(np.asarray(tok))
+        return np.stack(outs, axis=1)
+
+    a, b = run(0), run(12345)
+    np.testing.assert_array_equal(a[:2], b[:2])
 
 
 # --------------------------------------------------------------------------
