@@ -8,15 +8,19 @@ Two modes:
 
   --traffic — replays a synthetic *mixed-precision* load through the
               bucket-batched serving engine (repro.serving): requests with
-              random prompt lengths and dynamic-precision tiers (K = 1/2/4
-              analog repeats) are tier-grouped, padded into power-of-two
-              buckets, and served through AOT-compiled executables. Prints
-              per-tier token/energy accounting and the executable-cache
-              hit/miss counters (steady state re-traces nothing).
+              random prompt lengths, heterogeneous decode budgets, and
+              dynamic-precision tiers (K = 1/2/4 analog repeats) are
+              tier-grouped, padded into power-of-two buckets, and served
+              through AOT-compiled executables. Prints per-tier
+              token/energy accounting and the executable-cache hit/miss
+              counters (steady state re-traces nothing). Add --continuous
+              to decode through persistent per-tier slot pools (in-flight
+              admission, early retirement) instead of run-to-completion
+              batches.
 
 Run:  PYTHONPATH=src python examples/analog_serving.py [--energy 10.0]
       PYTHONPATH=src python examples/analog_serving.py --traffic \
-          [--requests 24] [--gen 8]
+          [--requests 24] [--gen 8] [--continuous]
 """
 import argparse
 import time
@@ -88,21 +92,24 @@ def run_traffic(args, params):
         params, CFG, analog_cfg=AnalogConfig.shot(backend=args.backend),
         energies=energies, max_gen=args.gen, max_batch=8, max_wait=0.5,
         batch_buckets=(1, 2, 4, 8), seq_buckets=tuple(seq_buckets),
-        profiles=profiles,
+        profiles=profiles, continuous=args.continuous,
     )
     rng = np.random.default_rng(0)
     reqs = []
     for i in range(args.requests):
         length = int(rng.integers(8, args.prompt_len + 1))
         k = rng.choice(np.asarray(tiers, dtype=object), p=weights)
+        # heterogeneous decode budgets: where continuous batching pays off
+        # (run-to-completion decodes every row to the batch max)
+        gen = int(rng.choice([max(1, args.gen // 8), max(1, args.gen // 2), args.gen]))
         reqs.append((rng.integers(0, CFG.vocab_size, length),
-                     k if isinstance(k, str) else int(k)))
+                     k if isinstance(k, str) else int(k), gen))
 
     t0 = time.perf_counter()
     uid_tier = {}
-    for i, (prompt, k) in enumerate(reqs):
+    for i, (prompt, k, gen) in enumerate(reqs):
         tier_kw = {"profile": k} if isinstance(k, str) else {"n_repeats": k}
-        uid = engine.submit(prompt, max_new_tokens=args.gen, now=i * 1e-3, **tier_kw)
+        uid = engine.submit(prompt, max_new_tokens=gen, now=i * 1e-3, **tier_kw)
         uid_tier[uid] = k
     results = engine.flush()
     wall = time.perf_counter() - t0
@@ -126,6 +133,14 @@ def run_traffic(args, params):
     print(f"executables: {cs['entries']} compiled ({cs['compile_s']:.1f}s), "
           f"{cs['hits']} hits / {cs['misses']} misses; batches="
           f"{engine.stats['batches']} padded_rows={engine.stats['padded_rows']}")
+    if args.continuous:
+        s = engine.stats
+        active = s["active_slot_steps"] / max(1, s["decode_slot_steps"])
+        print(f"continuous: {len(engine.pools)} tier pool(s) x "
+              f"{engine.pool_slots} slots, {s['admitted']} admitted / "
+              f"{s['retired']} retired in-flight, {s['decode_steps']} pool "
+              f"steps ({s['decode_slot_steps']} row-slots, "
+              f"{active:.0%} occupancy)")
     sample = results[min(results)]
     print("sample tokens:", sample[:12].tolist())
 
@@ -144,6 +159,10 @@ def main():
     ap.add_argument("--traffic", action="store_true",
                     help="replay a mixed-precision load through the "
                          "bucket-batched serving engine")
+    ap.add_argument("--continuous", action="store_true",
+                    help="decode through persistent per-tier slot pools "
+                         "(in-flight admission + early retirement) instead "
+                         "of run-to-completion batches (--traffic mode)")
     ap.add_argument("--requests", type=int, default=24,
                     help="number of requests in --traffic mode")
     ap.add_argument("--profile", default=None,

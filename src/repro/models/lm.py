@@ -1108,6 +1108,35 @@ def cache_axes(cfg: ModelConfig) -> PyTree:
     return axes
 
 
+def scatter_cache_rows(cfg: ModelConfig, dst: PyTree, src: PyTree, slot_ids) -> PyTree:
+    """Scatter ``src`` cache rows into ``dst`` pool slots (continuous-batching
+    admission): every leaf of a freshly prefilled cache (batch ``b``) is
+    written into the persistent decode pool's cache (batch ``slots``) at
+    ``slot_ids`` (b,) along its batch dim. Both trees must share ``cache_len``
+    (the engine prefills at the pool's cache length, so layer/seq layouts
+    already match); the batch axis of each leaf is located via
+    ``cache_axes``. Out-of-range slot ids (>= slots) are dropped — the
+    engine points prefill batch-padding rows at ``slots`` so they never
+    land anywhere. Runs under jit: admission is a device-side scatter, the
+    cache never round-trips through the host.
+    """
+    axes_leaves = jax.tree.leaves(
+        cache_axes(cfg), is_leaf=lambda x: isinstance(x, tuple)
+    )
+    dst_leaves, treedef = jax.tree.flatten(dst)
+    src_leaves = jax.tree.leaves(src)
+    assert len(dst_leaves) == len(src_leaves) == len(axes_leaves)
+    slot_ids = jnp.asarray(slot_ids)
+    out = []
+    for d, s, ax in zip(dst_leaves, src_leaves, axes_leaves):
+        b_ax = ax.index("batch")
+        dm = jnp.moveaxis(d, b_ax, 0)
+        sm = jnp.moveaxis(s, b_ax, 0)
+        dm = dm.at[slot_ids].set(sm.astype(dm.dtype), mode="drop")
+        out.append(jnp.moveaxis(dm, 0, b_ax))
+    return treedef.unflatten(out)
+
+
 def batch_axes(batch: dict) -> dict:
     """Logical axes for a batch dict (tokens/embeds/labels/patch_embeds)."""
     out = {}

@@ -1,6 +1,7 @@
 """Bucket-batched analog serving: shape buckets, AOT executable cache,
 precision-tiered scheduling (uniform-K tiers and per-layer PrecisionProfile
-tiers), and the engine tying them to models/lm.py."""
+tiers), persistent per-tier decode slot pools (continuous batching), and
+the engine tying them to models/lm.py."""
 from repro.core.profile import PrecisionProfile
 from repro.serving.bucketing import (
     DEFAULT_BATCH_BUCKETS,
@@ -8,21 +9,27 @@ from repro.serving.bucketing import (
     bucket_shape,
     next_bucket,
     pad_to_bucket,
+    pool_shape,
 )
 from repro.serving.cache import ExecutableCache, aot_compile
 from repro.serving.engine import ServingEngine
+from repro.serving.pool import DecodePool, SlotAllocator, SlotRecord
 from repro.serving.scheduler import Request, TierScheduler
 
 __all__ = [
     "DEFAULT_BATCH_BUCKETS",
     "DEFAULT_SEQ_BUCKETS",
+    "DecodePool",
     "ExecutableCache",
     "PrecisionProfile",
     "Request",
     "ServingEngine",
+    "SlotAllocator",
+    "SlotRecord",
     "TierScheduler",
     "aot_compile",
     "bucket_shape",
     "next_bucket",
     "pad_to_bucket",
+    "pool_shape",
 ]

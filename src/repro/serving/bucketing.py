@@ -30,6 +30,29 @@ def next_bucket(value: int, buckets: Sequence[int]) -> int:
     raise ValueError(f"{value} exceeds largest bucket {max(buckets)}")
 
 
+def pool_shape(
+    slots: int,
+    seq_buckets: Sequence[int],
+    max_gen: int,
+) -> Tuple[int, int]:
+    """(slots, cache_len) of a persistent continuous-batching decode pool.
+
+    The pool's KV/recurrent cache is one static shape for the tier's whole
+    lifetime (admissions scatter rows in; no retrace), so its sequence
+    capacity must hold the *largest* admissible prompt — the top of the seq
+    bucket ladder — plus the full decode budget. A request prefilled at any
+    smaller seq bucket lands in the same pool: the prefill runs with
+    ``cache_len = pool cache_len``, which is exactly the layout adapter (KV
+    caches are right-padded to the pool length; ring/recurrent state carries
+    no sequence dim beyond the window and is unchanged).
+    """
+    if slots < 1:
+        raise ValueError(f"pool needs at least 1 slot, got {slots}")
+    if max_gen < 1:
+        raise ValueError(f"max_gen must be >= 1, got {max_gen}")
+    return int(slots), int(max(seq_buckets)) + int(max_gen)
+
+
 def bucket_shape(
     n_rows: int,
     max_len: int,

@@ -1,36 +1,62 @@
 """AOT executable cache: compile once per (bucket, tier, backend), then hit.
 
 Keys are built by the engine from everything that changes the lowered
-program: phase (prefill/decode), bucket shape, cache length, n_repeats tier,
-backend, and noise kind. Values are ``jax.jit(...).lower(...).compile()``
-executables — calling one can *never* re-trace, so a 100% steady-state hit
-rate is equivalent to zero steady-state retraces.
+program: phase (prefill/decode/insert), bucket or pool shape, cache length,
+n_repeats tier, backend, and noise kind. Values are
+``jax.jit(...).lower(...).compile()`` executables — calling one can *never*
+re-trace, so a 100% steady-state hit rate is equivalent to zero steady-state
+retraces.
 
 Hit/miss/compile-time counters are first-class: the serving bench asserts
-on them and they belong in any production dashboard.
+on them and they belong in any production dashboard. ``max_entries`` bounds
+the cache with LRU eviction — continuous batching multiplies the key space
+(pool shapes x prefill buckets x tiers x families), so a long-lived engine
+serving many tiers can cap resident executables; the default is unbounded,
+preserving the classic behavior (an evicted key simply recompiles on its
+next use, surfacing as a miss + eviction in ``stats()``).
 """
 from __future__ import annotations
 
 import time
-from typing import Any, Callable, Dict, Hashable, List
+from collections import OrderedDict, deque
+from typing import Any, Callable, Deque, Hashable, Optional
 
 
 class ExecutableCache:
-    """Maps hashable keys -> compiled executables, counting hits/misses."""
+    """Maps hashable keys -> compiled executables, counting hits/misses.
 
-    def __init__(self):
-        self._exes: Dict[Hashable, Any] = {}
+    ``max_entries=None`` (default) never evicts. With a bound, the cache is
+    LRU: a hit refreshes the key, an insert beyond the bound evicts the
+    least-recently-used executable (counted in ``evictions``).
+    """
+
+    def __init__(self, max_entries: Optional[int] = None):
+        if max_entries is not None and max_entries < 1:
+            raise ValueError(f"max_entries must be >= 1, got {max_entries}")
+        self.max_entries = max_entries
+        self._exes: "OrderedDict[Hashable, Any]" = OrderedDict()
         self.hits = 0
         self.misses = 0
+        self.evictions = 0
         self.compile_s = 0.0
-        #: per-miss records [(key, seconds)] — the bench's retrace audit trail
-        self.miss_log: List[tuple] = []
+        #: per-miss records [(key, seconds)] — the bench's retrace audit
+        #: trail. A bounded cache churns executables (eviction -> recompile
+        #: -> fresh miss), so the log is capped there too: an unbounded log
+        #: would leak host memory linearly in misses while the executable
+        #: dict itself stays at max_entries.
+        self.miss_log: Deque[tuple] = deque(maxlen=self._miss_log_cap())
+
+    def _miss_log_cap(self) -> Optional[int]:
+        if self.max_entries is None:
+            return None  # unbounded cache: every miss is a one-time compile
+        return max(64, 4 * self.max_entries)
 
     def get(self, key: Hashable, build: Callable[[], Any]) -> Any:
         """Return the executable for ``key``, compiling via ``build`` on miss."""
         exe = self._exes.get(key)
         if exe is not None:
             self.hits += 1
+            self._exes.move_to_end(key)  # LRU refresh (no-op when unbounded)
             return exe
         self.misses += 1
         t0 = time.perf_counter()
@@ -39,6 +65,10 @@ class ExecutableCache:
         self.compile_s += dt
         self.miss_log.append((key, dt))
         self._exes[key] = exe
+        if self.max_entries is not None:
+            while len(self._exes) > self.max_entries:
+                self._exes.popitem(last=False)
+                self.evictions += 1
         return exe
 
     def __len__(self) -> int:
@@ -51,8 +81,9 @@ class ExecutableCache:
         """Zero the counters, keeping compiled executables (warmup -> steady)."""
         self.hits = 0
         self.misses = 0
+        self.evictions = 0
         self.compile_s = 0.0
-        self.miss_log = []
+        self.miss_log = deque(maxlen=self._miss_log_cap())
 
     def stats(self) -> dict:
         total = self.hits + self.misses
@@ -61,6 +92,8 @@ class ExecutableCache:
             "misses": self.misses,
             "hit_rate": self.hits / total if total else 0.0,
             "entries": len(self._exes),
+            "evictions": self.evictions,
+            "max_entries": self.max_entries,
             "compile_s": self.compile_s,
         }
 

@@ -9,32 +9,55 @@ dynamic-precision K) — and serves them through the fused analog path:
          -> AOT executable per (bucket, K, backend)      (cache.py)
          -> prefill once, then bucketed decode steps     (models/lm.py)
 
+Two decode disciplines share that pipeline:
+
+  batch-synchronous (default) — a dispatched batch decodes to completion:
+      ``max(max_new_tokens)`` steps for every row. Simple, but a 4-token
+      request co-batched with a 64-token one pays 16x its own decode work,
+      finished rows keep burning analog energy, and nothing new is admitted
+      until the batch drains.
+
+  continuous (``continuous=True``) — each tier owns a persistent
+      **decode slot pool** (pool.py): a fixed ``(slots, cache_len)`` cache
+      that decodes every step under an active-slot mask, *retires* a row
+      the step it hits its token budget or emits a stop id, and *admits*
+      freshly prefilled requests into the freed slots mid-flight — the
+      prefill runs at the pool's cache length and its cache rows are
+      scattered in under jit (``lm.scatter_cache_rows``), no retrace, no
+      host round-trip of the cache. Decode slots stay saturated with real
+      work, which is the throughput headline of every production serving
+      stack.
+
 Correctness contract: every request is served with its *own* PRNG key
 stacked into the batch (per-request noise streams, see AnalogHook), its own
 true prompt length (per-row decode positions), and greedy sampling — so its
 tokens are bit-identical to running it alone at the same seq bucket,
-regardless of batch-mates or batch padding. The engine's batching is a pure
-throughput optimization, not a numerics change.
+regardless of batch-mates, batch padding, decode discipline, slot index, or
+admission step. The engine's batching is a pure throughput optimization,
+not a numerics change. (Inactive pool slots are exactly length-0
+batch-padding rows; a noise stream depends only on the request key, layer,
+site, and token position — never on where the row sits.)
 
 Every model family rides this contract via length-aware prefill/decode
-(``lengths`` threaded through ``models/lm.py``): global causal attention
-masks right-padding by construction; sliding-window ring caches are built
-from each row's *true* last `window` tokens; griffin/xlstm recurrences
-treat pad steps as identity so state crosses the pad suffix exactly; MoE
-routing drops pad tokens so they never consume expert capacity. Two honest
-caveats remain for MoE: real tokens from co-batched requests still compete
-for expert capacity (run a no-drop ``capacity_factor >= n_experts / top_k``
-when per-request bit-identity matters), and analog-mode expert matmuls draw
-one batch-level noise stream (capacity buffers mix requests, so per-request
-streams are physically meaningless there — see ``AnalogHook.batched``).
+(``lengths`` threaded through ``models/lm.py``) — with one exception:
+**MoE stays batch-synchronous.** Its expert capacity buffers mix requests
+inside one matmul, so analog expert sites draw a *batch-level* noise stream
+(``AnalogHook.batched``); under in-flight admission that stream would
+change mid-request every time a neighbor retired or arrived. Rather than
+silently weakening MoE's (already batch-level) reproducibility story,
+``continuous=True`` is rejected for the moe family — serve it with the
+batch-synchronous engine, whose noise is reproducible per batch
+composition. (Re-folding ``collapse_keys(valid=active)`` per step is the
+documented alternative if mid-request noise drift is ever acceptable.)
 
-Precision tiers can never share a batch: K is static in the fused kernel
-(baked into the trace), which is exactly why the tier scheduler exists. A
-tier is a repeat *schedule*: the uniform ``n_repeats=K``, or a registered
-per-layer ``PrecisionProfile`` (the paper's learned per-layer precision,
-§V-VI) — profile batches run the segmented layer scan, their executables
-are cache-keyed on the profile's repeat tuple, and their energy/token is
-the true ``sum_l K_l * E_l * MACs_l``.
+Precision tiers can never share a batch (or a pool): K is static in the
+fused kernel (baked into the trace), which is exactly why the tier
+scheduler exists. A tier is a repeat *schedule*: the uniform
+``n_repeats=K``, or a registered per-layer ``PrecisionProfile`` (the
+paper's learned per-layer precision, §V-VI) — profile batches run the
+segmented layer scan, their executables are cache-keyed on the profile's
+repeat tuple, and their energy/token is the true ``sum_l K_l * E_l *
+MACs_l``.
 """
 from __future__ import annotations
 
@@ -53,9 +76,12 @@ from repro.serving.bucketing import (
     DEFAULT_BATCH_BUCKETS,
     DEFAULT_SEQ_BUCKETS,
     bucket_shape,
+    next_bucket,
     pad_to_bucket,
+    pool_shape,
 )
 from repro.serving.cache import ExecutableCache, aot_compile
+from repro.serving.pool import DecodePool
 from repro.serving.scheduler import Request, TierScheduler
 
 Array = jax.Array
@@ -76,6 +102,21 @@ class ServingEngine:
     stale energies from warm buckets. ``energies`` is a read-only property;
     a recalibrated allocation means a new engine. ``params`` are runtime
     arguments and may be swapped freely.
+
+    ``continuous=True`` switches decode to persistent per-tier slot pools
+    (see the module docstring): ``pool_slots`` sizes each pool (default:
+    the largest batch bucket), and the pool cache length defaults to
+    ``max(seq_buckets) + max_gen`` so any admissible request fits any slot.
+    Every pool step attends over the full pool cache, so SIZE THE SEQ
+    LADDER (or pass ``pool_cache_len``) TO YOUR TRAFFIC: with the default
+    1024-top ladder, short-prompt traffic would decode against a ~1056-slot
+    cache each step and hand the throughput win back. A smaller
+    ``pool_cache_len`` is enforced at submit — a request whose seq bucket
+    plus decode budget can't fit a slot is rejected with the resize advice
+    (pool-shape *ladders* are future work, see ROADMAP). ``max_entries``
+    optionally LRU-bounds the executable cache — pool shapes multiply the
+    key space, so long-lived multi-tier engines may want a cap (default
+    unbounded).
     """
 
     def __init__(
@@ -93,9 +134,21 @@ class ServingEngine:
         pad_id: int = 0,
         seed: int = 0,
         profiles: Optional[Sequence[PrecisionProfile]] = None,
+        continuous: bool = False,
+        pool_slots: Optional[int] = None,
+        pool_cache_len: Optional[int] = None,
+        max_entries: Optional[int] = None,
     ):
         if analog_cfg is not None and energies is None:
             raise ValueError("analog serving requires an energy tree")
+        if continuous and model_cfg.family == "moe":
+            raise ValueError(
+                "continuous batching is unavailable for the moe family: "
+                "analog expert sites draw a batch-level noise stream "
+                "(capacity buffers mix requests), so in-flight admission/"
+                "retirement would change a request's noise mid-stream; "
+                "serve MoE batch-synchronously (continuous=False)"
+            )
         self.params = params
         self.model_cfg = model_cfg
         self.analog_cfg = analog_cfg
@@ -114,7 +167,25 @@ class ServingEngine:
             max_wait=max_wait,
             seq_buckets=seq_buckets,
         )
-        self.exe_cache = ExecutableCache()
+        self.exe_cache = ExecutableCache(max_entries=max_entries)
+        self.continuous = bool(continuous)
+        self.pool_slots, self.pool_cache_len = pool_shape(
+            pool_slots if pool_slots is not None else max(batch_buckets),
+            seq_buckets,
+            max_gen,
+        )
+        if pool_cache_len is not None:
+            # explicit pool sizing for traffic shorter than the seq ladder's
+            # top: requests that can't fit a slot are rejected at submit
+            if pool_cache_len <= min(seq_buckets):
+                raise ValueError(
+                    f"pool_cache_len={pool_cache_len} can't hold even a "
+                    f"minimum-bucket prompt ({min(seq_buckets)}) plus one "
+                    "generated token"
+                )
+            self.pool_cache_len = int(pool_cache_len)
+        #: tier -> persistent DecodePool, created lazily at first admission
+        self._pools: Dict[object, DecodePool] = {}
         self._base_key = raw_key(jax.random.PRNGKey(seed))
         self._param_specs = jax.tree.map(
             lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), params
@@ -128,6 +199,14 @@ class ServingEngine:
             "tokens_generated": 0,
             "padded_rows": 0,
             "decode_steps": 0,
+            # decode work actually dispatched, in row-slots (steps x batch
+            # rows, or steps x pool slots): the structural quantity
+            # continuous batching shrinks on heterogeneous traffic
+            "decode_slot_steps": 0,
+            # of those, row-slots that carried a live request (pool only)
+            "active_slot_steps": 0,
+            "admitted": 0,  # requests admitted into a pool slot
+            "retired": 0,  # pool retirements (budget hit or stop id)
         }
 
     # -- request intake ------------------------------------------------------
@@ -182,6 +261,7 @@ class ServingEngine:
         n_repeats: int = 1,
         profile=None,
         max_new_tokens: int = 16,
+        stop_tokens: Sequence[int] = (),
         key: Optional[Array] = None,
         now: Optional[float] = None,
     ) -> int:
@@ -192,6 +272,10 @@ class ServingEngine:
         ``n_repeats``; a *uniform* profile degenerates to the equivalent
         ``n_repeats=K`` tier (identical trace, shared executables, shared
         batches). Digital engines ignore both — K is a no-op without noise.
+
+        ``stop_tokens``: EOS-style ids. Greedy decode finishes the request
+        the step it emits one (the stop id is included as the last output
+        token); without any, the request runs its full ``max_new_tokens``.
         """
         tokens = np.asarray(tokens, np.int32).reshape(-1)
         if tokens.size == 0:
@@ -203,6 +287,18 @@ class ServingEngine:
             raise ValueError(f"max_new_tokens must be >= 1, got {max_new_tokens}")
         if n_repeats < 1:
             raise ValueError(f"n_repeats must be >= 1, got {n_repeats}")
+        if self.continuous:
+            # a pool slot must hold the prompt's seq bucket + decode budget
+            sb = next_bucket(tokens.size, self.seq_buckets)
+            budget = min(int(max_new_tokens), self.max_gen)
+            if sb + budget > self.pool_cache_len:
+                raise ValueError(
+                    f"request needs {sb} (seq bucket) + {budget} (decode "
+                    f"budget) cache slots but the decode pools hold "
+                    f"{self.pool_cache_len}; raise pool_cache_len or size "
+                    "seq_buckets/max_gen to the traffic"
+                )
+        stop_tokens = tuple(int(t) for t in stop_tokens)
         profile_id = None
         if profile is not None:
             if n_repeats != 1:
@@ -240,14 +336,21 @@ class ServingEngine:
             key=raw_key(key),
             arrival=self._now(now, "submit"),
             profile_id=profile_id,
+            stop_tokens=stop_tokens,
         )
         self.scheduler.submit(req)
         self.stats["requests"] += 1
         return uid
 
     def poll(self, now: Optional[float] = None) -> Dict[int, np.ndarray]:
-        """Run every batch that is ready at ``now``; returns finished uids."""
+        """Serve every request that is ready at ``now``; returns finished
+        uids. Batch-synchronous: runs each ready batch to completion.
+        Continuous: admits ready requests into pool slots and pumps masked
+        decode steps — re-admitting as retirements free slots — until the
+        pools drain and nothing else is deadline-ready."""
         now = self._now(now, "poll")
+        if self.continuous:
+            return self._pump(now, force=False)
         results: Dict[int, np.ndarray] = {}
         for reqs in self.scheduler.pop_ready(now):
             results.update(self._run_batch(reqs))
@@ -255,6 +358,8 @@ class ServingEngine:
 
     def flush(self) -> Dict[int, np.ndarray]:
         """Drain the queue regardless of deadlines (end of replay/shutdown)."""
+        if self.continuous:
+            return self._pump(None, force=True)
         results: Dict[int, np.ndarray] = {}
         for reqs in self.scheduler.flush():
             results.update(self._run_batch(reqs))
@@ -266,6 +371,13 @@ class ServingEngine:
         if self.analog_cfg is None:
             return ("digital",)
         return (self.analog_cfg.backend, self.analog_cfg.noise.kind)
+
+    def _tier_parts(self, tier):
+        """(n_repeats, profile, tier_key) of a scheduler tier."""
+        if isinstance(tier, str):
+            profile = self._profiles[tier]
+            return 1, profile, profile.cache_key()
+        return tier, None, tier
 
     def _analog_spec(
         self,
@@ -294,11 +406,10 @@ class ServingEngine:
         )
 
     def _build_prefill(
-        self, bb: int, sb: int, n_repeats: int,
+        self, bb: int, sb: int, cache_len: int, n_repeats: int,
         profile: Optional[PrecisionProfile] = None,
     ):
         cfg = self.model_cfg
-        cache_len = sb + self.max_gen
 
         def fn(params, tokens, lengths, keys):
             self._traces += 1  # runs at trace time only: the retrace audit
@@ -321,11 +432,10 @@ class ServingEngine:
         )
 
     def _build_decode(
-        self, bb: int, sb: int, n_repeats: int,
+        self, bb: int, cache_len: int, n_repeats: int,
         profile: Optional[PrecisionProfile] = None,
     ):
         cfg = self.model_cfg
-        cache_len = sb + self.max_gen
 
         def fn(params, cache, tok, pos, lengths, keys):
             self._traces += 1
@@ -350,6 +460,26 @@ class ServingEngine:
             donate_argnums=(1,),
         )
 
+    def _build_insert(self, slots: int, cache_len: int, bb: int):
+        """Admission scatter: prefilled cache rows (batch ``bb``) into the
+        pool cache (batch ``slots``) at per-row slot ids, under jit. Rows
+        pointed at slot id ``slots`` (prefill batch padding) are dropped."""
+        cfg = self.model_cfg
+
+        def fn(pool_cache, src_cache, slot_ids):
+            self._traces += 1
+            return lm.scatter_cache_rows(cfg, pool_cache, src_cache, slot_ids)
+
+        pool_specs = jax.eval_shape(lambda: lm.init_cache(cfg, slots, cache_len))
+        src_specs = jax.eval_shape(lambda: lm.init_cache(cfg, bb, cache_len))
+        return aot_compile(
+            fn,
+            pool_specs,
+            src_specs,
+            jax.ShapeDtypeStruct((bb,), jnp.int32),
+            donate_argnums=(0,),
+        )
+
     def _batch_keys(self, reqs: List[Request], bb: int) -> Array:
         rows = [r.key for r in reqs]
         # batch-padding rows get a fixed key; their outputs are discarded,
@@ -359,51 +489,248 @@ class ServingEngine:
         rows += [raw_key(jax.random.PRNGKey(0))] * (bb - len(reqs))
         return jnp.stack([jnp.asarray(k, self._base_key.dtype) for k in rows])
 
-    def _run_batch(self, reqs: List[Request]) -> Dict[int, np.ndarray]:
+    def _prefill_batch(self, reqs: List[Request], cache_len: Optional[int] = None):
+        """Shared prefill dispatch: pad into a bucket, run the AOT prefill
+        at ``cache_len`` (default: the batch-synchronous ``sb + max_gen``;
+        continuous admission passes the pool's cache length), returning
+        ((bucket, cache_len), cache, first tokens). The tokens stay a
+        device array — only callers that need host values (admission
+        bookkeeping, stop-id checks) should materialize them, so the
+        batch-synchronous path keeps enqueueing work without a sync."""
         tier = reqs[0].tier
         assert all(r.tier == tier for r in reqs), "mixed-tier batch"
-        n_repeats = reqs[0].n_repeats
-        profile = self._profiles[tier] if isinstance(tier, str) else None
-        tier_key = profile.cache_key() if profile is not None else n_repeats
+        n_repeats, profile, tier_key = self._tier_parts(tier)
         bb, sb = bucket_shape(
             len(reqs), max(r.prompt_len for r in reqs),
             batch_buckets=self.batch_buckets, seq_buckets=self.seq_buckets,
         )
+        if cache_len is None:
+            cache_len = sb + self.max_gen
         tokens_np, lengths_np = pad_to_bucket(
             [r.tokens for r in reqs], (bb, sb), pad_id=self.pad_id
         )
-        tokens = jnp.asarray(tokens_np)
-        lengths = jnp.asarray(lengths_np)
         keys = self._batch_keys(reqs, bb)
         sig = self._cfg_sig()
-
         prefill_exe = self.exe_cache.get(
-            ("prefill", bb, sb, tier_key) + sig,
-            lambda: self._build_prefill(bb, sb, n_repeats, profile),
+            ("prefill", bb, sb, cache_len, tier_key) + sig,
+            lambda: self._build_prefill(bb, sb, cache_len, n_repeats, profile),
         )
-        cache, tok = prefill_exe(self.params, tokens, lengths, keys)
+        cache, tok = prefill_exe(
+            self.params, jnp.asarray(tokens_np), jnp.asarray(lengths_np), keys
+        )
+        self.stats["batches"] += 1
+        self.stats["padded_rows"] += bb - len(reqs)
+        return (bb, sb, cache_len), keys, cache, tok
+
+    # -- batch-synchronous execution ----------------------------------------
+
+    def _run_batch(self, reqs: List[Request]) -> Dict[int, np.ndarray]:
+        tier = reqs[0].tier
+        n_repeats, profile, tier_key = self._tier_parts(tier)
+        (bb, _sb, cache_len), keys, cache, tok = self._prefill_batch(reqs)
+        lengths = jnp.asarray([r.prompt_len for r in reqs] + [0] * (bb - len(reqs)),
+                              jnp.int32)
         toks = [tok]
+        stop_sets = [r.stop_set for r in reqs]
+        has_stops = any(stop_sets)
         n_steps = max(r.max_new_tokens for r in reqs) - 1
+        if has_stops:  # host read only when EOS is in play
+            tok0 = np.asarray(tok)
+            emitted = [1] * len(reqs)
+            done = [
+                emitted[i] >= r.max_new_tokens or int(tok0[i]) in stop_sets[i]
+                for i, r in enumerate(reqs)
+            ]
+        steps_run = 0
         if n_steps > 0:  # single-token batches never need the decode exe
+            sig = self._cfg_sig()
             decode_exe = self.exe_cache.get(
-                ("decode", bb, sb, tier_key) + sig,
-                lambda: self._build_decode(bb, sb, n_repeats, profile),
+                ("decode", bb, cache_len, tier_key) + sig,
+                lambda: self._build_decode(bb, cache_len, n_repeats, profile),
             )
         for t in range(n_steps):
+            if has_stops and all(done):
+                break  # EOS early exit: every real row hit budget or stop id
             pos = lengths + t
             tok, cache = decode_exe(
                 self.params, cache, tok[:, None], pos, lengths, keys
             )
             toks.append(tok)
+            steps_run += 1
+            if has_stops:  # per-step host read only when EOS is in play
+                tok_np = np.asarray(tok)
+                for i, r in enumerate(reqs):
+                    if not done[i]:
+                        emitted[i] += 1
+                        done[i] = (
+                            emitted[i] >= r.max_new_tokens
+                            or int(tok_np[i]) in stop_sets[i]
+                        )
 
-        seq = np.stack([np.asarray(t) for t in toks], axis=1)  # (bb, n_steps+1)
+        seq = np.stack([np.asarray(t) for t in toks], axis=1)  # (bb, steps+1)
         out: Dict[int, np.ndarray] = {}
         for i, r in enumerate(reqs):
-            out[r.uid] = seq[i, : r.max_new_tokens].copy()
-            self.stats["tokens_generated"] += r.max_new_tokens
-        self.stats["batches"] += 1
-        self.stats["padded_rows"] += bb - len(reqs)
-        self.stats["decode_steps"] += n_steps
+            row = seq[i, : min(r.max_new_tokens, seq.shape[1])]
+            if stop_sets[i]:
+                hits = np.flatnonzero(np.isin(row, list(stop_sets[i])))
+                if hits.size:  # the stop id is the last emitted token
+                    row = row[: hits[0] + 1]
+            out[r.uid] = row.copy()
+            self.stats["tokens_generated"] += int(row.size)
+        self.stats["decode_steps"] += steps_run
+        self.stats["decode_slot_steps"] += steps_run * bb
+        return out
+
+    # -- continuous execution: persistent per-tier decode slot pools ---------
+
+    def _pool(self, tier) -> DecodePool:
+        pool = self._pools.get(tier)
+        if pool is None:
+            n_repeats, profile, _ = self._tier_parts(tier)
+            pool = DecodePool(
+                tier=tier,
+                slots=self.pool_slots,
+                cache_len=self.pool_cache_len,
+                key_shape=self._base_key.shape,
+                key_dtype=self._base_key.dtype,
+                cache=lm.init_cache(
+                    self.model_cfg, self.pool_slots, self.pool_cache_len
+                ),
+                n_repeats=n_repeats,
+                profile=profile,
+            )
+            self._pools[tier] = pool
+        return pool
+
+    @property
+    def n_in_flight(self) -> int:
+        """Requests submitted but not yet finished: queued + pooled."""
+        return self.scheduler.n_pending + sum(
+            p.n_active for p in self._pools.values()
+        )
+
+    def pump_step(
+        self, now: Optional[float] = None, *, force: bool = False
+    ) -> Dict[int, np.ndarray]:
+        """One continuous-scheduling iteration (the unit real serving loops
+        and latency measurements want): admit deadline-ready requests into
+        free slots (all pending requests when ``force``), then run ONE
+        masked decode step across every pool with active slots. Returns the
+        requests finished this iteration."""
+        if not self.continuous:
+            raise ValueError("pump_step() requires continuous=True")
+        now = self._now(now, "poll")
+        results, _ = self._pump_once(now, force)
+        return results
+
+    def _pump(self, now: Optional[float], force: bool) -> Dict[int, np.ndarray]:
+        results: Dict[int, np.ndarray] = {}
+        while True:
+            step_results, progressed = self._pump_once(now, force)
+            results.update(step_results)
+            if not progressed:
+                return results
+
+    def _pump_once(self, now, force):
+        """(finished requests, progressed) for one admit-then-decode round.
+
+        Admission runs before decode (prefill-first: freed slots refill as
+        eagerly as the scheduler's readiness rule allows — ``max_wait`` is
+        the prefill/decode interleave knob), then every pool with active
+        slots takes exactly one masked decode step. ``progressed`` is False
+        only when nothing was admitted and no slot decoded: the caller's
+        drain loop is done.
+        """
+        results: Dict[int, np.ndarray] = {}
+        progressed = False
+        free = {}
+        for tier in self.scheduler.pending_tiers():
+            pool = self._pools.get(tier)
+            free[tier] = pool.n_free if pool is not None else self.pool_slots
+        for reqs in self.scheduler.pop_admissible(now, free, force=force):
+            results.update(self._admit(reqs))
+            progressed = True
+        for pool in self._pools.values():
+            if pool.n_active:
+                results.update(self._pool_step(pool))
+                progressed = True
+        return results, progressed
+
+    def _admit(self, reqs: List[Request]) -> Dict[int, np.ndarray]:
+        """Prefill a ready group at the pool's cache length and scatter it
+        into free slots. Requests that finish at their first token (1-token
+        budget, or the first token is a stop id) complete here and never
+        occupy a decode slot."""
+        pool = self._pool(reqs[0].tier)
+        assert len(reqs) <= pool.n_free, "scheduler admitted beyond free slots"
+        (bb, _sb, _cl), _keys, src_cache, tok0 = self._prefill_batch(
+            reqs, pool.cache_len
+        )
+        tok0 = np.asarray(tok0)  # admission bookkeeping needs host values
+        slots = pool.take(len(reqs))
+        # prefill batch-padding rows aim past the pool: dropped by the scatter
+        slot_ids = np.full((bb,), pool.slots, np.int32)
+        slot_ids[: len(reqs)] = slots
+        insert_exe = self.exe_cache.get(
+            ("insert", pool.slots, pool.cache_len, bb),
+            lambda: self._build_insert(pool.slots, pool.cache_len, bb),
+        )
+        pool.cache = insert_exe(pool.cache, src_cache, jnp.asarray(slot_ids))
+        self.stats["admitted"] += len(reqs)
+        out: Dict[int, np.ndarray] = {}
+        for i, (r, s) in enumerate(zip(reqs, slots)):
+            t0 = int(tok0[i])
+            if r.max_new_tokens == 1 or t0 in r.stop_set:
+                pool.release(s)
+                out[r.uid] = np.asarray([t0], np.int32)
+                self.stats["tokens_generated"] += 1
+                self.stats["retired"] += 1
+            else:
+                pool.activate(s, r, t0, r.key)
+        return out
+
+    def _pool_step(self, pool: DecodePool) -> Dict[int, np.ndarray]:
+        """One masked decode step over a whole pool: inactive slots are
+        length-0 rows (inert), active rows decode at their own position
+        under their own key, and rows that hit their budget or emit a stop
+        id retire immediately — the freed slots are admission targets on the
+        very next pump iteration."""
+        # the pool carries its tier's frozen repeat schedule (profiles are
+        # add-only, so the copy can't drift from the registry)
+        tier_key = (
+            pool.profile.cache_key() if pool.profile is not None
+            else pool.n_repeats
+        )
+        sig = self._cfg_sig()
+        decode_exe = self.exe_cache.get(
+            ("decode", pool.slots, pool.cache_len, tier_key) + sig,
+            lambda: self._build_decode(
+                pool.slots, pool.cache_len, pool.n_repeats, pool.profile
+            ),
+        )
+        tok, pool.cache = decode_exe(
+            self.params,
+            pool.cache,
+            jnp.asarray(pool.tok[:, None]),
+            jnp.asarray(pool.pos),
+            jnp.asarray(pool.lengths),
+            jnp.asarray(pool.keys),
+        )
+        tok_np = np.asarray(tok)
+        self.stats["decode_steps"] += 1
+        self.stats["decode_slot_steps"] += pool.slots
+        self.stats["active_slot_steps"] += pool.n_active
+        out: Dict[int, np.ndarray] = {}
+        for s in pool.active_slots():
+            rec = pool.record(s)
+            rec.emitted.append(int(tok_np[s]))
+            pool.tok[s] = tok_np[s]
+            pool.pos[s] += 1
+            if rec.done:
+                pool.retire(s)
+                out[rec.request.uid] = np.asarray(rec.emitted, np.int32)
+                self.stats["tokens_generated"] += len(rec.emitted)
+                self.stats["retired"] += 1
         return out
 
     # -- introspection -------------------------------------------------------
@@ -417,6 +744,11 @@ class ServingEngine:
     def profiles(self) -> Dict[str, PrecisionProfile]:
         """The registered per-layer precision tiers (read-only copy)."""
         return dict(self._profiles)
+
+    @property
+    def pools(self) -> Dict[object, DecodePool]:
+        """The live per-tier decode pools (continuous mode; read-only copy)."""
+        return dict(self._pools)
 
     def tier_energy_per_token(self, tier) -> float:
         """True analog energy per generated token of a tier (aJ):

@@ -1,0 +1,188 @@
+"""Persistent decode slot pools: the state behind continuous batching.
+
+A ``DecodePool`` is one tier's always-resident decode batch: a fixed number
+of ``slots``, each either free or carrying one in-flight request, over a
+single static-shape device cache (``init_cache(cfg, slots, cache_len)``).
+The engine decodes the whole pool every step — inactive slots ride along as
+length-0 rows (exactly the bucket batch-padding contract: no recurrent
+update that matters, no MoE capacity, outputs discarded) — retires a slot
+the step its request hits its token budget or emits a stop id, and admits
+freshly prefilled requests into free slots mid-flight by scattering their
+cache rows in under jit (``models.lm.scatter_cache_rows``).
+
+Host-side per-slot state (current token, position, true length, stacked
+PRNG key words) is tiny — O(slots) scalars shipped with each step's inputs;
+only the cache itself stays device-resident and is never round-tripped.
+
+``SlotAllocator`` is the pool's free-list, split out so its invariants are
+independently testable: a slot is never handed out twice while held, never
+released twice, and retire->admit reuse can never alias another request's
+rows (a slot re-enters the free list only after its record is cleared, and
+activation overwrites token/position/length/key before the slot decodes).
+"""
+from __future__ import annotations
+
+import bisect
+import dataclasses
+from typing import Any, List, Optional
+
+import numpy as np
+
+
+class SlotAllocator:
+    """Lowest-index-first free-list allocator with invariant checks.
+
+    Deterministic: the same take/release sequence always yields the same
+    slot assignments (continuous batching must replay bit-identically, and
+    the bit-identity contract itself must not depend on which slot a request
+    lands in — determinism makes both testable).
+    """
+
+    def __init__(self, n_slots: int):
+        if n_slots < 1:
+            raise ValueError(f"allocator needs at least 1 slot, got {n_slots}")
+        self.n_slots = n_slots
+        self._free: List[int] = list(range(n_slots))
+        self._held: set = set()
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_held(self) -> int:
+        return len(self._held)
+
+    def held(self) -> frozenset:
+        return frozenset(self._held)
+
+    def take(self, k: int) -> List[int]:
+        """Claim the ``k`` lowest free slots; raises if fewer are free."""
+        if k < 0:
+            raise ValueError(f"cannot take {k} slots")
+        if k > len(self._free):
+            raise ValueError(f"take({k}) with only {len(self._free)} free slots")
+        out, self._free = self._free[:k], self._free[k:]
+        self._held.update(out)
+        return out
+
+    def release(self, slot: int) -> None:
+        """Return a held slot to the free list; raises on double-release or
+        a slot that was never taken (the aliasing bugs this class exists to
+        make impossible)."""
+        if slot not in self._held:
+            raise ValueError(f"slot {slot} is not held (double release?)")
+        self._held.remove(slot)
+        bisect.insort(self._free, slot)
+
+
+@dataclasses.dataclass
+class SlotRecord:
+    """One in-flight request pinned to a decode slot."""
+
+    request: Any  # repro.serving.scheduler.Request
+    emitted: List[int]  # greedy tokens so far (first one from prefill)
+    stop_set: frozenset  # EOS ids: emitting one retires the slot
+
+    @property
+    def done(self) -> bool:
+        return len(self.emitted) >= self.request.max_new_tokens or (
+            bool(self.emitted) and self.emitted[-1] in self.stop_set
+        )
+
+
+class DecodePool:
+    """One precision tier's persistent decode batch.
+
+    Device state: ``cache`` (static ``(slots, cache_len)`` layout, swapped
+    wholesale each donated decode/insert call). Host state: per-slot token /
+    position / true-length / PRNG-key rows, passed as the decode step's
+    small operands. A free slot has length 0 — the decode step treats it as
+    a batch-padding row, so pool occupancy never changes any active row's
+    numerics (per-row noise keys and per-row positions do the rest).
+    """
+
+    def __init__(
+        self,
+        *,
+        tier,
+        slots: int,
+        cache_len: int,
+        key_shape,
+        key_dtype,
+        cache,
+        n_repeats: int = 1,
+        profile=None,
+    ):
+        self.tier = tier
+        self.slots = int(slots)
+        self.cache_len = int(cache_len)
+        self.n_repeats = int(n_repeats)
+        self.profile = profile
+        self.cache = cache
+        self.allocator = SlotAllocator(self.slots)
+        self.tok = np.zeros((self.slots,), np.int32)
+        self.pos = np.zeros((self.slots,), np.int32)
+        self.lengths = np.zeros((self.slots,), np.int32)  # 0 == inactive row
+        self.keys = np.zeros((self.slots,) + tuple(key_shape), key_dtype)
+        self._rec: List[Optional[SlotRecord]] = [None] * self.slots
+
+    # -- occupancy -----------------------------------------------------------
+
+    @property
+    def n_free(self) -> int:
+        return self.allocator.n_free
+
+    @property
+    def n_active(self) -> int:
+        return sum(r is not None for r in self._rec)
+
+    def active_slots(self) -> List[int]:
+        """Snapshot of occupied slots (stable under retire-while-iterating)."""
+        return [s for s, r in enumerate(self._rec) if r is not None]
+
+    def record(self, slot: int) -> SlotRecord:
+        rec = self._rec[slot]
+        assert rec is not None, f"slot {slot} is not active"
+        return rec
+
+    # -- lifecycle -----------------------------------------------------------
+
+    def take(self, k: int) -> List[int]:
+        """Claim ``k`` free slots for an admission wave (cache rows are
+        scattered before activation, so taken-but-inactive slots exist
+        briefly; they don't decode until :meth:`activate`)."""
+        return self.allocator.take(k)
+
+    def activate(self, slot: int, request, first_token: int, key_row) -> None:
+        """Arm a taken slot with a prefilled request: its first generated
+        token, decode position (= prompt length), true length, and stacked
+        PRNG key row — everything the masked decode step reads per row."""
+        assert self._rec[slot] is None, f"slot {slot} already active"
+        self._rec[slot] = SlotRecord(
+            request=request,
+            emitted=[int(first_token)],
+            stop_set=request.stop_set,
+        )
+        self.tok[slot] = int(first_token)
+        self.pos[slot] = request.prompt_len
+        self.lengths[slot] = request.prompt_len
+        self.keys[slot] = np.asarray(key_row, self.keys.dtype)
+
+    def release(self, slot: int) -> None:
+        """Return a taken-but-never-activated slot (the request finished at
+        prefill: 1-token budget, or its first token was a stop id)."""
+        assert self._rec[slot] is None, f"slot {slot} is active; retire() it"
+        self.allocator.release(slot)
+
+    def retire(self, slot: int) -> SlotRecord:
+        """Free an active slot the step its request finishes. The row is
+        zeroed to the inert length-0 state; its cache rows are left in place
+        and fully overwritten by the next admission's scatter."""
+        rec = self.record(slot)
+        self._rec[slot] = None
+        self.tok[slot] = 0
+        self.pos[slot] = 0
+        self.lengths[slot] = 0
+        self.allocator.release(slot)
+        return rec

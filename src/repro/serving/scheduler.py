@@ -32,7 +32,10 @@ class Request:
     registered per-layer K schedule instead — a tier IS a profile, with the
     classic uniform K as the degenerate case (``profile_id=None``). ``key``
     seeds this request's private noise streams — outputs are reproducible
-    and independent of batch-mates.
+    and independent of batch-mates. ``stop_tokens`` are EOS-style ids:
+    greedy decode retires the request the step it emits one (the stop id is
+    the last token of the output), instead of running out its full
+    ``max_new_tokens`` budget.
     """
 
     uid: int
@@ -42,10 +45,15 @@ class Request:
     key: Optional[object] = None  # jax PRNG key; engine fills a default
     arrival: float = 0.0
     profile_id: Optional[str] = None  # registered PrecisionProfile tier
+    stop_tokens: Tuple[int, ...] = ()  # EOS ids: emit one -> retire the row
 
     @property
     def prompt_len(self) -> int:
         return int(np.asarray(self.tokens).reshape(-1).shape[0])
+
+    @property
+    def stop_set(self) -> frozenset:
+        return frozenset(int(t) for t in self.stop_tokens)
 
     @property
     def tier(self):
@@ -96,6 +104,57 @@ class TierScheduler:
             if q and now - q[0].arrival >= self.max_wait:
                 batches.append(q[:])
                 q.clear()
+            if not q:
+                del self._queues[g]
+        return batches
+
+    def pending_tiers(self):
+        """Tiers with queued requests (continuous pools are created lazily,
+        so the engine sizes free-slot accounting off this set)."""
+        return {tier for tier, _sb in self._queues}
+
+    def pop_admissible(
+        self,
+        now: Optional[float],
+        free_slots: Dict[object, int],
+        *,
+        force: bool = False,
+    ) -> List[List[Request]]:
+        """Slot-aware admission for continuous (in-flight) batching.
+
+        ``free_slots`` maps tier -> currently free decode slots in that
+        tier's persistent pool; it is decremented in place as requests are
+        admitted (groups of one tier at different seq buckets share the
+        tier's pool, so the accounting spans groups). A group dispatches
+        under the same readiness rule as ``pop_ready`` — a full batch, or an
+        oldest request aged past ``max_wait`` (``force`` ignores both, for
+        flush/drain) — but never more rows than the tier has free slots:
+        the remainder stays queued, FIFO order preserved, and is admitted
+        mid-flight as retirements free slots. Deadline semantics over a
+        partial pool follow directly: an aged group admits as many rows as
+        fit *now* rather than waiting for a full batch's worth of slots.
+
+        The interleave policy this implements is prefill-first: the engine
+        calls this before every decode round, so free slots are refilled as
+        eagerly as readiness allows. ``max_wait`` is the policy knob —
+        larger values batch prefills (fewer, fuller prefill dispatches at
+        higher time-to-first-token), ``max_wait=0`` admits instantly.
+        """
+        batches: List[List[Request]] = []
+        for g in list(self._queues):
+            tier, _sb = g
+            q = self._queues[g]
+            free = free_slots.get(tier, 0)
+            while q and free > 0 and (
+                force
+                or len(q) >= self.max_batch
+                or now - q[0].arrival >= self.max_wait
+            ):
+                n = min(len(q), self.max_batch, free)
+                batches.append(q[:n])
+                del q[:n]
+                free -= n
+            free_slots[tier] = free
             if not q:
                 del self._queues[g]
         return batches
