@@ -47,6 +47,19 @@ PAPER_DIR = os.path.join(ART_DIR, "paper")
 os.makedirs(PAPER_DIR, exist_ok=True)
 
 
+def atomic_write_json(path: str, record) -> str:
+    """Write JSON via a same-directory temp file + ``os.replace``: readers
+    (CI artifact upload, a dashboard tailing the repo root) never observe a
+    truncated file, and a crash mid-write leaves the previous record intact."""
+    path = os.path.normpath(path)
+    tmp = f"{path}.tmp.{os.getpid()}"
+    with open(tmp, "w") as f:
+        json.dump(record, f, indent=2)
+        f.write("\n")
+    os.replace(tmp, path)
+    return path
+
+
 def cache_json(name: str):
     """Decorator: run once, cache the result JSON under artifacts/paper."""
 
@@ -56,8 +69,7 @@ def cache_json(name: str):
             if os.path.exists(path) and not force:
                 return json.load(open(path))
             out = fn()
-            with open(path, "w") as f:
-                json.dump(out, f, indent=2)
+            atomic_write_json(path, out)
             return out
 
         wrapped.__name__ = fn.__name__

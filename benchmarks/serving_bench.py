@@ -31,7 +31,6 @@ perf-trajectory artifact (uploaded by CI) future PRs baseline against.
 from __future__ import annotations
 
 import argparse
-import json
 import os
 import time
 
@@ -39,11 +38,19 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import cache_json
+from benchmarks.common import atomic_write_json, cache_json
 from repro.core import AnalogConfig, PrecisionProfile, coalesce_runs, repeat_profile_search
 from repro.models import init_energy_tree, init_params, lm
 from repro.models.config import ModelConfig
-from repro.serving import ServingEngine
+from repro.serving import (
+    DriftRamp,
+    FaultPlan,
+    NoiseDriftWatchdog,
+    RequestFailure,
+    ServingEngine,
+    TimedOut,
+    WatchdogConfig,
+)
 
 #: repo-root perf-trajectory artifact (machine-readable baseline for future PRs)
 TRAJECTORY_PATH = os.path.join(
@@ -587,6 +594,175 @@ def profile_smoke_bench():
 
 
 # ---------------------------------------------------------------------------
+# fault-tolerance smoke: injected faults, drift watchdog, graceful degradation
+# ---------------------------------------------------------------------------
+
+
+@cache_json("serving_bench_faults")
+def fault_smoke_bench():
+    """Serve continuous analog traffic through an injected fault storm and a
+    noise-drift episode, recording the fault-tolerance contract main()
+    asserts: every request resolves exactly once (tokens or a structured
+    failure), requests untouched by any fault stay bit-identical to the
+    fault-free run, retried requests complete, deadlines produce TimedOut
+    (never hangs), slots never leak, the watchdog detects an injected drift
+    ramp within its probe budget, and the whole drift episode — drifted
+    dispatch, probes, recovery — causes ZERO retraces (the drift factor is
+    a runtime operand, not a compile-time constant)."""
+    cfg = ModelConfig(**dict(SMOKE_MODEL, name="serve-bench-faults"))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    energies = init_energy_tree(cfg, ENERGY_AJ)
+    shot = AnalogConfig.shot()
+
+    def make_engine(plan=None):
+        return ServingEngine(
+            params, cfg, analog_cfg=shot, energies=energies, max_gen=6,
+            max_batch=4, max_wait=0.0, batch_buckets=(1, 2, 4),
+            seq_buckets=(32,), continuous=True, pool_slots=4,
+            fault_plan=plan,
+        )
+
+    rng = np.random.default_rng(0)
+    n = 9
+    prompts = [rng.integers(0, cfg.vocab_size, int(rng.integers(4, 28)))
+               for _ in range(n)]
+    gens = [int(rng.integers(2, 7)) for _ in range(n - 1)] + [6]
+    tiers = [int(rng.choice([1, 2])) for _ in range(n)]
+    req_keys = [jax.random.fold_in(jax.random.PRNGKey(9), i) for i in range(n)]
+    # the last request carries a deadline the fault run cannot meet (its
+    # decode budget is the full max_gen and the plan stalls early steps)
+    fault_deadlines = [None] * (n - 1) + [0.002]
+
+    def run(eng, deadlines=None):
+        uids = [
+            eng.submit(p, n_repeats=k, max_new_tokens=g, key=kk, now=0.0,
+                       deadline=None if deadlines is None else deadlines[i])
+            for i, (p, k, g, kk) in enumerate(zip(prompts, tiers, gens, req_keys))
+        ]
+        results, t, steps = {}, 0.0, 0
+        while eng.n_in_flight:
+            t += 1e-3
+            for uid, res in eng.pump_step(now=t, force=True).items():
+                assert uid not in results, "uid resolved twice"
+                results[uid] = res
+            steps += 1
+            assert steps < 2000, "faulted drain hung"
+        return uids, results
+
+    # --- A: fault storm vs fault-free baseline -----------------------------
+    base_uids, baseline = run(make_engine())
+    plan = FaultPlan(
+        seed=3, stall_steps=(2, 3), stall_sleep_s=0.0,
+        exe_faults=(("decode", 4),),
+        # several scheduled (clock, slot) overrides: only ones landing on a
+        # live row fire, and at least one must (asserted via poisoned_rows)
+        poison={(5, 0): -5, (6, 0): -5, (7, 1): -5},
+    )
+    eng = make_engine(plan)
+    uids, results = run(eng, deadlines=fault_deadlines)
+    # stalls delay but never touch outputs; exe faults / poison / timeouts do
+    affected = set()
+    for entry in eng.fault_log:
+        if entry.get("kind") in ("exe_fault", "poison", "timeout"):
+            affected.update(entry.get("uids", ()))
+    idx_of = {uid: i for i, uid in enumerate(uids)}
+    unaffected_identical = all(
+        isinstance(results[uid], np.ndarray)
+        and np.array_equal(results[uid], baseline[base_uids[idx_of[uid]]])
+        for uid in uids if uid not in affected
+    )
+    retried_uids = {
+        u for e in eng.fault_log for u in e.get("retried", ())
+    }
+    timeout_uids = {u for u, r in results.items() if isinstance(r, TimedOut)}
+    pools_clean = all(
+        p.n_active == 0 and p.allocator.n_free == p.slots
+        for p in eng.pools.values()
+    ) and eng.scheduler.n_pending == 0
+    inject = {
+        "n_requests": n,
+        "resolved_once": set(results) == set(uids),
+        "n_affected": len(affected),
+        "unaffected_bit_identical": unaffected_identical,
+        "retried_completed": all(
+            isinstance(results[u], np.ndarray) for u in retried_uids
+            if u not in timeout_uids
+        ) and bool(retried_uids),
+        "timeouts": len(timeout_uids),
+        "structured_failures": sum(
+            isinstance(r, RequestFailure) for r in results.values()
+        ),
+        "slot_hygiene": bool(pools_clean),
+        "stats": {k: eng.stats[k] for k in (
+            "stalled_steps", "exe_faults", "poisoned_rows", "retried",
+            "timed_out", "failed", "promotions",
+        )},
+    }
+
+    # --- B: drift ramp -> watchdog -> promote -> recalibrate, zero retraces
+    eng = make_engine()
+    run(eng)  # warmup: compiles every steady-state executable
+    probe_toks = np.asarray(
+        jax.random.randint(jax.random.PRNGKey(3), (2, 16), 0, cfg.vocab_size)
+    )
+    wd = NoiseDriftWatchdog(
+        eng, probe_toks, config=WatchdogConfig(interval=2, n_samples=4),
+    )
+    nominal = wd.probe(step=0)  # must be None: healthy device, in-band
+    nominal_estimate = wd.estimates[-1][1]
+    eng.exe_cache.reset_stats()
+    traces_before = eng.trace_count
+    onset = eng._fault_clock + 4
+    eng.fault_plan = FaultPlan(
+        drift=DriftRamp(start=onset, rate=0.5, max_scale=2.0)
+    )
+    event, detect_clock, t = None, None, 0.0
+    for step in range(1, 120):
+        if not eng.n_in_flight:
+            for i in range(n - 1):
+                eng.submit(prompts[i], n_repeats=tiers[i],
+                           max_new_tokens=gens[i], key=req_keys[i], now=t)
+        t += 1e-3
+        eng.pump_step(now=t, force=True)
+        event = wd.maybe_probe(step)
+        if event is not None:
+            detect_clock = eng._fault_clock
+            break
+    steady = {**eng.exe_cache.stats(),
+              "retraces": eng.trace_count - traces_before}
+    detected = event is not None
+    if detected:
+        eng.promote_tiers(event)
+    promoted = bool(eng.promoted)
+    eng.flush()  # drain the in-flight drifted traffic
+    # repaired hardware: drop the injected drift, re-trim, clear the event
+    eng.fault_plan = None
+    eng.recalibrate()
+    wd.clear()
+    recovery = wd.probe(step=999)
+    recovered_estimate = wd.estimates[-1][1]
+    lo, hi = wd.config.band
+    drift = {
+        "baseline_rms": wd.baseline_rms,
+        "band": [lo, hi],
+        "nominal_in_band": nominal is None,
+        "nominal_estimate": nominal_estimate,
+        "onset_clock": int(onset),
+        "detected": detected,
+        "detect_clock": int(detect_clock) if detected else None,
+        "detect_estimate": event.estimate if detected else None,
+        "detect_within_clocks": (
+            int(detect_clock - onset) if detected else None
+        ),
+        "promoted": promoted,
+        "recovered_in_band": recovery is None and lo < recovered_estimate < hi,
+        "recovered_estimate": recovered_estimate,
+        "steady": steady,
+    }
+    return {"backend": jax.default_backend(), "inject": inject, "drift": drift}
+
+
+# ---------------------------------------------------------------------------
 
 
 def _bench(model_kw, n_requests, gen, max_len, tiers=TIERS, weights=TIER_WEIGHTS):
@@ -639,15 +815,19 @@ def _write_trajectory(out, smoke: bool) -> str:
     c = out["continuous"]
     n = out["naive"]
 
-    def _mode(rec, hit_rate, energy):
-        return {
+    def _mode(rec, cache, energy):
+        m = {
             "tokens_per_s": rec["tokens_per_s"],
             "p50_ms": rec["p50_ms"],
             "p99_ms": rec["p99_ms"],
             "latency_semantics": rec["latency_semantics"],
-            "hit_rate": hit_rate,
+            "hit_rate": cache["hit_rate"] if cache else None,
             "energy_per_token_aj": energy,
         }
+        if cache is not None:  # full executable-cache counters, per mode
+            m["cache"] = {k: cache[k] for k in
+                          ("hits", "misses", "evictions", "entries")}
+        return m
 
     # the naive row comes from the uniform-budget engine-vs-naive section;
     # batch_sync/continuous from the heterogeneous trace — see "traffic"
@@ -659,11 +839,11 @@ def _write_trajectory(out, smoke: bool) -> str:
         "modes": {
             "naive": _mode(n, None, None),
             "batch_sync": _mode(
-                c["batch_sync"], c["batch_sync"]["cache"]["hit_rate"],
+                c["batch_sync"], c["batch_sync"]["cache"],
                 c["energy_per_token_aj"],
             ),
             "continuous": _mode(
-                c["continuous"], c["continuous"]["cache"]["hit_rate"],
+                c["continuous"], c["continuous"]["cache"],
                 c["energy_per_token_aj"],
             ),
         },
@@ -677,11 +857,23 @@ def _write_trajectory(out, smoke: bool) -> str:
                               "tokens_total": c["tokens_total"]},
         },
     }
-    path = os.path.normpath(TRAJECTORY_PATH)
-    with open(path, "w") as f:
-        json.dump(record, f, indent=2)
-        f.write("\n")
-    return path
+    if "faults" in out:  # the fault-tolerance contract, machine-readable
+        fi, fd = out["faults"]["inject"], out["faults"]["drift"]
+        record["faults"] = {
+            "resolved_once": fi["resolved_once"],
+            "unaffected_bit_identical": fi["unaffected_bit_identical"],
+            "retried_completed": fi["retried_completed"],
+            "timeouts": fi["timeouts"],
+            "slot_hygiene": fi["slot_hygiene"],
+            "injected": fi["stats"],
+            "drift_detected": fd["detected"],
+            "drift_detect_within_clocks": fd["detect_within_clocks"],
+            "drift_estimate": fd["detect_estimate"],
+            "drift_events": 1 if fd["detected"] else 0,
+            "drift_zero_retraces": fd["steady"]["retraces"] == 0,
+            "recovered_in_band": fd["recovered_in_band"],
+        }
+    return atomic_write_json(TRAJECTORY_PATH, record)
 
 
 def _print(out):
@@ -704,9 +896,14 @@ def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true", help="tiny run for CI")
     ap.add_argument("--force", action="store_true", help="ignore cached JSON")
+    ap.add_argument("--faults", action="store_true",
+                    help="also run the fault-tolerance smoke (injected "
+                         "faults, drift watchdog, graceful degradation)")
     args = ap.parse_args()
     fn = serving_bench_smoke if args.smoke else serving_bench
     out = fn(force=args.force)
+    if args.faults:
+        out["faults"] = fault_smoke_bench(force=args.force)
     records = [("dense", out)]
     if "griffin" in out:
         records.append(("griffin", out["griffin"]))
@@ -766,6 +963,41 @@ def main() -> None:
             f"continuous steady throughput {c['speedup_x']:.2f}x < "
             f"{c['speedup_target_x']}x target (attempts: {c['speedup_attempts']})"
         )
+    if "faults" in out:
+        fi, fd = out["faults"]["inject"], out["faults"]["drift"]
+        print("--- fault tolerance ---")
+        print(f"storm: {fi['n_requests']} requests, {fi['n_affected']} "
+              f"affected, {fi['timeouts']} timed out, stats={fi['stats']}")
+        print(f"drift: nominal est {fd['nominal_estimate']:.3f}, detected "
+              f"{fd['detected']} at est {fd['detect_estimate']:.3f} "
+              f"({fd['detect_within_clocks']} clocks after onset), "
+              f"promoted={fd['promoted']}, retraces={fd['steady']['retraces']}, "
+              f"recovered est {fd['recovered_estimate']:.3f}")
+        assert fi["stats"]["stalled_steps"] >= 1 \
+            and fi["stats"]["exe_faults"] >= 1 \
+            and fi["stats"]["poisoned_rows"] >= 1, (
+            f"the fault storm left an injection site unexercised: {fi['stats']}"
+        )
+        assert fi["resolved_once"], "a request hung or resolved twice"
+        assert fi["unaffected_bit_identical"], (
+            "a fault leaked into an unaffected request's tokens"
+        )
+        assert fi["retried_completed"], "a retried request never completed"
+        assert fi["timeouts"] >= 1, "the deadline request did not time out"
+        assert fi["slot_hygiene"], "a decode slot leaked through the storm"
+        assert fd["nominal_in_band"], "watchdog false-positive at nominal"
+        assert fd["detected"], "watchdog missed the injected drift ramp"
+        assert fd["detect_within_clocks"] <= 12, (
+            f"drift detected {fd['detect_within_clocks']} clocks after onset "
+            "(budget: 12)"
+        )
+        assert fd["promoted"], "drift response did not promote tiers"
+        assert fd["steady"]["hit_rate"] == 1.0 and fd["steady"]["retraces"] == 0, (
+            "the drift episode re-traced: the drift factor must stay a "
+            "runtime operand"
+        )
+        assert fd["recovered_in_band"], "recalibration did not clear the drift"
+    if "continuous" in out:
         path = _write_trajectory(out, smoke=args.smoke)
         print(f"perf trajectory written to {path}")
 

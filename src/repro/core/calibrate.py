@@ -160,6 +160,31 @@ def eval_profile_accuracy(
     )
 
 
+def noise_rms(
+    apply_fn: ApplyFn,
+    energies: EnergyTree,
+    x: Array,
+    reference: Array,
+    *,
+    key: jax.Array,
+    n_noise_samples: int = 4,
+) -> float:
+    """RMS residual of the noisy forward against a clean reference output,
+    averaged over ``n_noise_samples`` independent noise draws.
+
+    This is the drift watchdog's observable: every noise model's std is
+    proportional to ``1/sqrt(E)`` (Eqs. 9-11), so a global noise-scale
+    drift factor ``d`` moves this RMS (to first order) linearly in ``d`` —
+    the ratio of a live probe's RMS to the RMS measured at registration
+    time estimates the realized drift. Energies are runtime arguments of
+    one cached jitted executable per ``(apply_fn, n_noise_samples)``, so
+    periodic probing never retraces; per-sample keys are
+    ``fold_in(key, sample)``, matching ``eval_accuracy``'s draw scheme.
+    """
+    rms = _rms_fn(apply_fn, n_noise_samples)
+    return float(rms(energies, x, reference, key))
+
+
 #: apply_fn -> {n_noise_samples: jitted counter}. Weak keys: the jitted
 #: executable (and the params the closure captures) die with the apply_fn,
 #: instead of pinning every model ever evaluated.
@@ -197,3 +222,35 @@ def _eval_fn(apply_fn: ApplyFn, n_noise_samples: int):
 
     per_fn[n_noise_samples] = n_correct
     return n_correct
+
+
+#: apply_fn -> {n_noise_samples: jitted RMS probe} — same weak-key scheme
+#: as _EVAL_FNS (the watchdog holds its engine's apply fn for its lifetime).
+_RMS_FNS: "weakref.WeakKeyDictionary" = weakref.WeakKeyDictionary()
+
+
+def _rms_fn(apply_fn: ApplyFn, n_noise_samples: int):
+    per_fn = _RMS_FNS.setdefault(apply_fn, {})
+    if n_noise_samples in per_fn:
+        return per_fn[n_noise_samples]
+    fn_ref = weakref.ref(apply_fn)
+
+    @jax.jit
+    def rms(energies, x, reference, key):
+        apply = fn_ref()
+        assert apply is not None
+        keys = jax.vmap(lambda s: jax.random.fold_in(key, s))(
+            jnp.arange(n_noise_samples)
+        )
+
+        def resid(k):
+            return (apply(energies, x, k) - reference).astype(jnp.float32)
+
+        if n_noise_samples <= 8:
+            r = jax.vmap(resid)(keys)
+        else:
+            r = jax.lax.map(resid, keys)
+        return jnp.sqrt(jnp.mean(jnp.square(r)))
+
+    per_fn[n_noise_samples] = rms
+    return rms

@@ -65,6 +65,15 @@ class AnalogHook(MatmulHook):
     (False = batch-padding row, length 0). It only affects expert-batched
     sites: pad rows fold the XOR identity into the batch-level stream, so
     the same real traffic draws the same expert noise at any pad count.
+
+    ``noise_scale`` models hardware noise drift: a (traced) scalar factor
+    multiplying the effective noise std at *every* site. All three noise
+    models have std proportional to ``1/sqrt(E)`` (core/noise.py
+    Eqs. 9-11), so scaling the std by ``d`` is realized exactly as serving
+    at energies ``E / d**2`` — a runtime value on both backends (energy is
+    a fused-kernel operand), which is what lets the serving engine drift
+    the noise floor without retracing. ``None`` (the default) is the
+    bit-identical nominal path.
     """
 
     cfg: AnalogConfig
@@ -72,9 +81,17 @@ class AnalogHook(MatmulHook):
     key: jax.Array
     n_repeats: int = 1
     valid: Optional[Array] = None
+    noise_scale: Optional[Array] = None
+
+    def _site_energy(self, site: str) -> Array:
+        e = self.energies[site]
+        if self.noise_scale is not None:
+            # std ~ 1/sqrt(E): a noise-std drift factor d IS E -> E / d^2
+            e = e / jnp.square(self.noise_scale)
+        return e
 
     def __call__(self, site: str, x: Array, w: Array) -> Array:
-        e = self.energies[site]
+        e = self._site_energy(site)
         k = site_key(self.key, site)
         y = analog_dot(x, w, cfg=self.cfg, energy=e, key=k, n_repeats=self.n_repeats)
         return y.astype(x.dtype)
@@ -82,7 +99,7 @@ class AnalogHook(MatmulHook):
     def batched(self, site: str, x: Array, w: Array) -> Array:
         # expert buffers mix requests: one batch-level stream (pad rows inert)
         key = collapse_keys(self.key, self.valid)
-        e = self.energies[site]
+        e = self._site_energy(site)
         n_e = w.shape[0]
         e = jnp.broadcast_to(jnp.atleast_1d(e), (n_e,) + jnp.shape(e)[1:])
         keys = jax.random.split(site_key(key, site), n_e)
@@ -118,14 +135,16 @@ def hook_for_layer(
     *,
     n_repeats: int = 1,
     valid: Optional[Array] = None,
+    noise_scale: Optional[Array] = None,
 ) -> MatmulHook:
     """Hook for one layer: ``n_repeats`` is that layer's K (a static int —
     per-layer schedules arrive pre-sliced from the segmented scan), ``valid``
-    the bucket batch's real-row mask (see AnalogHook)."""
+    the bucket batch's real-row mask, ``noise_scale`` the drift factor on
+    every site's noise std (see AnalogHook)."""
     if analog_cfg is None or layer_energies is None:
         return MatmulHook()
     lk = fold_key(key, layer_idx)
     return AnalogHook(
         cfg=analog_cfg, energies=layer_energies, key=lk, n_repeats=n_repeats,
-        valid=valid,
+        valid=valid, noise_scale=noise_scale,
     )

@@ -69,6 +69,11 @@ class AnalogSpec:
     fused kernel, so the layer scan is *segmented* into contiguous same-K
     runs — layers sharing K share one trace, distinct-K segments get their
     own — identically for prefill and decode.
+
+    ``noise_scale`` is an optional (traced) scalar drift factor on every
+    site's noise std — hardware noise-floor drift as a *runtime* operand
+    (std ~ 1/sqrt(E), so it reaches the kernels as energies / scale**2; see
+    AnalogHook). ``None`` is the bit-identical nominal path.
     """
 
     cfg: AnalogConfig
@@ -76,6 +81,7 @@ class AnalogSpec:
     key: jax.Array
     n_repeats: int = 1
     profile: Optional[PrecisionProfile] = None
+    noise_scale: Optional[Array] = None
 
 
 # ===========================================================================
@@ -836,6 +842,7 @@ def _run_stack(
     a_cfg = analog.cfg if analog is not None else None
     a_key = analog.key if analog is not None else None
     a_rep = getattr(analog, "n_repeats", 1) if analog is not None else 1
+    a_scale = getattr(analog, "noise_scale", None) if analog is not None else None
     profile = getattr(analog, "profile", None) if analog is not None else None
     if profile is not None and a_rep != 1:
         raise ValueError(
@@ -875,7 +882,8 @@ def _run_stack(
                         }
                     k_rep = k_row[sub] if sub is not None else k_row[per - 1]
                     return hook_for_layer(
-                        a_cfg, le, a_key, idx, n_repeats=k_rep, valid=valid_rows
+                        a_cfg, le, a_key, idx, n_repeats=k_rep, valid=valid_rows,
+                        noise_scale=a_scale,
                     )
 
                 return _xlstm_group(
@@ -886,7 +894,7 @@ def _run_stack(
             def hook_fn(i):
                 return hook_for_layer(
                     a_cfg, g_energies, a_key, idx, n_repeats=k_row[i],
-                    valid=valid_rows,
+                    valid=valid_rows, noise_scale=a_scale,
                 )
 
             if cfg.family == "griffin":
@@ -962,7 +970,7 @@ def _run_stack(
             tail_k = tail_ks[j] if tail_ks is not None else a_rep
             hook = hook_for_layer(
                 a_cfg, t_energies, a_key, g * per + j, n_repeats=tail_k,
-                valid=valid_rows,
+                valid=valid_rows, noise_scale=a_scale,
             )
             h, tc = _griffin_group(
                 h, tp, cfg, lambda i, hook=hook: hook, rope=rope, mode=mode,
@@ -1005,6 +1013,7 @@ def train_loss(params, batch, cfg: ModelConfig, analog=None) -> Array:
             cfg=analog.cfg,
             energies={"lm_head": analog.energies["lm_head"]},
             key=fold_key(analog.key, 0x1A57),
+            noise_scale=getattr(analog, "noise_scale", None),
         )
     return chunked_xent(
         h,

@@ -1,7 +1,8 @@
 """Bucket-batched analog serving: shape buckets, AOT executable cache,
 precision-tiered scheduling (uniform-K tiers and per-layer PrecisionProfile
-tiers), persistent per-tier decode slot pools (continuous batching), and
-the engine tying them to models/lm.py."""
+tiers), persistent per-tier decode slot pools (continuous batching), fault
+injection + noise-drift watchdog + graceful degradation (faults.py,
+monitor.py), and the engine tying them to models/lm.py."""
 from repro.core.profile import PrecisionProfile
 from repro.serving.bucketing import (
     DEFAULT_BATCH_BUCKETS,
@@ -12,7 +13,19 @@ from repro.serving.bucketing import (
     pool_shape,
 )
 from repro.serving.cache import ExecutableCache, aot_compile
-from repro.serving.engine import ServingEngine
+from repro.serving.engine import (
+    Failed,
+    RequestFailure,
+    ServingEngine,
+    TimedOut,
+)
+from repro.serving.faults import (
+    DriftRamp,
+    FaultPlan,
+    QueueFull,
+    TransientExecutableFault,
+)
+from repro.serving.monitor import DriftEvent, NoiseDriftWatchdog, WatchdogConfig
 from repro.serving.pool import DecodePool, SlotAllocator, SlotRecord
 from repro.serving.scheduler import Request, TierScheduler
 
@@ -20,13 +33,23 @@ __all__ = [
     "DEFAULT_BATCH_BUCKETS",
     "DEFAULT_SEQ_BUCKETS",
     "DecodePool",
+    "DriftEvent",
+    "DriftRamp",
     "ExecutableCache",
+    "Failed",
+    "FaultPlan",
+    "NoiseDriftWatchdog",
     "PrecisionProfile",
+    "QueueFull",
     "Request",
+    "RequestFailure",
     "ServingEngine",
     "SlotAllocator",
     "SlotRecord",
     "TierScheduler",
+    "TimedOut",
+    "TransientExecutableFault",
+    "WatchdogConfig",
     "aot_compile",
     "bucket_shape",
     "next_bucket",

@@ -28,12 +28,21 @@ class ExecutableCache:
     ``max_entries=None`` (default) never evicts. With a bound, the cache is
     LRU: a hit refreshes the key, an insert beyond the bound evicts the
     least-recently-used executable (counted in ``evictions``).
+
+    ``fault_hook`` is the fault-injection seam (serving/faults.py): called
+    with the cache key before *every* invocation of a cached executable,
+    raising to simulate a transient executable failure. The guard fires
+    strictly pre-dispatch, so donated buffers (decode caches) are never
+    consumed by a faulted call — the engine can retry against intact state.
+    ``None`` (the default) wraps nothing: the cache returns the raw
+    executable exactly as before.
     """
 
-    def __init__(self, max_entries: Optional[int] = None):
+    def __init__(self, max_entries: Optional[int] = None, fault_hook=None):
         if max_entries is not None and max_entries < 1:
             raise ValueError(f"max_entries must be >= 1, got {max_entries}")
         self.max_entries = max_entries
+        self.fault_hook = fault_hook
         self._exes: "OrderedDict[Hashable, Any]" = OrderedDict()
         self.hits = 0
         self.misses = 0
@@ -51,13 +60,25 @@ class ExecutableCache:
             return None  # unbounded cache: every miss is a one-time compile
         return max(64, 4 * self.max_entries)
 
+    def _guard(self, key: Hashable, exe: Any) -> Any:
+        """Wrap an executable so ``fault_hook(key)`` runs before dispatch."""
+        if self.fault_hook is None:
+            return exe
+        hook = self.fault_hook
+
+        def guarded(*args, **kwargs):
+            hook(key)  # may raise TransientExecutableFault — pre-dispatch
+            return exe(*args, **kwargs)
+
+        return guarded
+
     def get(self, key: Hashable, build: Callable[[], Any]) -> Any:
         """Return the executable for ``key``, compiling via ``build`` on miss."""
         exe = self._exes.get(key)
         if exe is not None:
             self.hits += 1
             self._exes.move_to_end(key)  # LRU refresh (no-op when unbounded)
-            return exe
+            return self._guard(key, exe)
         self.misses += 1
         t0 = time.perf_counter()
         exe = build()
@@ -69,7 +90,7 @@ class ExecutableCache:
             while len(self._exes) > self.max_entries:
                 self._exes.popitem(last=False)
                 self.evictions += 1
-        return exe
+        return self._guard(key, exe)
 
     def __len__(self) -> int:
         return len(self._exes)

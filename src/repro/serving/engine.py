@@ -61,8 +61,9 @@ MACs_l``.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
@@ -81,10 +82,48 @@ from repro.serving.bucketing import (
     pool_shape,
 )
 from repro.serving.cache import ExecutableCache, aot_compile
+from repro.serving.faults import FaultPlan, QueueFull, TransientExecutableFault
 from repro.serving.pool import DecodePool
 from repro.serving.scheduler import Request, TierScheduler
 
 Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class RequestFailure:
+    """Structured non-success result: a request the engine gave up on.
+
+    Successes stay plain ``np.ndarray`` token rows; a failed or timed-out
+    request resolves (exactly once, in the same results dict) to one of
+    these instead — no hang, no exception swallowing a batch, no leaked
+    slot. ``tokens`` carries whatever was generated before the failure
+    (a timeout mid-decode keeps its partial output, a queue timeout is
+    empty); partial tokens are a *prefix* of the fault-free output — the
+    bit-identity contract holds for every token actually emitted.
+    """
+
+    uid: int
+    tokens: np.ndarray  # tokens emitted before the failure (maybe empty)
+    detail: str
+    retries: int = 0
+
+    @property
+    def ok(self) -> bool:
+        return False
+
+
+@dataclasses.dataclass(frozen=True)
+class TimedOut(RequestFailure):
+    """The request's deadline passed while it was queued or decoding."""
+
+
+@dataclasses.dataclass(frozen=True)
+class Failed(RequestFailure):
+    """The request hit an injected/transient fault and ran out of retries."""
+
+
+#: what poll()/flush() map a uid to: a token row, or a structured failure
+RequestResult = Union[np.ndarray, RequestFailure]
 
 
 class ServingEngine:
@@ -138,7 +177,15 @@ class ServingEngine:
         pool_slots: Optional[int] = None,
         pool_cache_len: Optional[int] = None,
         max_entries: Optional[int] = None,
+        max_queue: Optional[int] = None,
+        fault_plan: Optional[FaultPlan] = None,
+        max_retries: int = 1,
+        k_ladder: Sequence[int] = (1, 2, 4, 8),
     ):
+        if max_retries < 0:
+            raise ValueError(f"max_retries must be >= 0, got {max_retries}")
+        if not k_ladder or any(int(k) < 1 for k in k_ladder):
+            raise ValueError(f"k_ladder must be positive Ks, got {k_ladder}")
         if analog_cfg is not None and energies is None:
             raise ValueError("analog serving requires an energy tree")
         if continuous and model_cfg.family == "moe":
@@ -166,8 +213,23 @@ class ServingEngine:
             max_batch=min(max_batch, max(batch_buckets)),
             max_wait=max_wait,
             seq_buckets=seq_buckets,
+            max_queue=max_queue,
         )
-        self.exe_cache = ExecutableCache(max_entries=max_entries)
+        #: injection schedule (serving/faults.py); clearing it to None
+        #: mid-run models repaired hardware — every site (including the
+        #: cache's executable guard, which reads it dynamically) goes quiet
+        self.fault_plan = fault_plan
+        self.max_retries = int(max_retries)
+        self.k_ladder = tuple(sorted({int(k) for k in k_ladder}))
+
+        def _exe_guard(key):
+            if self.fault_plan is not None:
+                self.fault_plan.check_executable(key)
+
+        self.exe_cache = ExecutableCache(
+            max_entries=max_entries,
+            fault_hook=_exe_guard if fault_plan is not None else None,
+        )
         self.continuous = bool(continuous)
         self.pool_slots, self.pool_cache_len = pool_shape(
             pool_slots if pool_slots is not None else max(batch_buckets),
@@ -193,6 +255,20 @@ class ServingEngine:
         self._uid = 0
         self._clock: Optional[str] = None  # "real" | "virtual", set on first use
         self._traces = 0  # incremented at trace time inside the step fns
+        #: realized noise-std drift factor: 1.0 is nominal (bit-identical to
+        #: an engine without the knob — the executables divide energies by
+        #: scale**2 as a runtime operand, and x/1.0 is IEEE-exact)
+        self._noise_scale = 1.0
+        #: drift response: when set, newly submitted uniform-K requests are
+        #: promoted one rung up the k_ladder until recalibrate() clears it
+        self._promoted = False
+        #: monotone per-decode-step-attempt counter — the fault plan's clock
+        #: (advances on stalled steps too, so schedules can't wedge a drain)
+        self._fault_clock = 0
+        #: engine-side record of every fault consequence: which uids were
+        #: retried/failed/timed out, and every drift response — the bench and
+        #: tests derive the affected-request set from this
+        self.fault_log: List[dict] = []
         self.stats = {
             "requests": 0,
             "batches": 0,
@@ -207,6 +283,14 @@ class ServingEngine:
             "active_slot_steps": 0,
             "admitted": 0,  # requests admitted into a pool slot
             "retired": 0,  # pool retirements (budget hit or stop id)
+            # fault tolerance: structured-failure and degradation counters
+            "timed_out": 0,  # requests retired past their deadline
+            "failed": 0,  # requests that exhausted fault retries
+            "retried": 0,  # fault-triggered resubmissions
+            "stalled_steps": 0,  # pool decode steps lost to injected stalls
+            "exe_faults": 0,  # transient executable failures absorbed
+            "poisoned_rows": 0,  # corrupted decode rows detected + retired
+            "promotions": 0,  # drift-response tier promotions activated
         }
 
     # -- request intake ------------------------------------------------------
@@ -260,10 +344,11 @@ class ServingEngine:
         *,
         n_repeats: int = 1,
         profile=None,
-        max_new_tokens: int = 16,
+        max_new_tokens: Optional[int] = None,
         stop_tokens: Sequence[int] = (),
         key: Optional[Array] = None,
         now: Optional[float] = None,
+        deadline: Optional[float] = None,
     ) -> int:
         """Enqueue one request; returns its uid (results key in poll()).
 
@@ -276,6 +361,21 @@ class ServingEngine:
         ``stop_tokens``: EOS-style ids. Greedy decode finishes the request
         the step it emits one (the stop id is included as the last output
         token); without any, the request runs its full ``max_new_tokens``.
+
+        ``deadline``: absolute timestamp (same clock domain as ``now``)
+        past which the request is retired with a structured ``TimedOut``
+        result — empty if still queued, the partial output if mid-decode.
+        Deadlines are enforced on clocked ``poll``/``pump_step`` calls;
+        ``flush()`` drains everything and checks none (like ``max_wait``).
+
+        Raises :class:`~repro.serving.faults.QueueFull` when the scheduler
+        queue is at its ``max_queue`` high-water mark (backpressure), and
+        ``ValueError`` for requests the engine could never serve: an empty
+        prompt, a prompt longer than the largest seq bucket, or a
+        ``max_new_tokens`` outside ``[1, max_gen]`` (the decode budget is
+        part of every compiled cache length — silently clamping it would
+        return fewer tokens than asked for). ``max_new_tokens=None`` (the
+        default) requests the full ``max_gen`` budget.
         """
         tokens = np.asarray(tokens, np.int32).reshape(-1)
         if tokens.size == 0:
@@ -283,14 +383,28 @@ class ServingEngine:
                 "empty prompt: a request must carry at least one token "
                 "(there is no position to continue generation from)"
             )
+        if tokens.size > max(self.seq_buckets):
+            raise ValueError(
+                f"prompt of {tokens.size} tokens exceeds the largest seq "
+                f"bucket ({max(self.seq_buckets)}); extend seq_buckets or "
+                "truncate the prompt"
+            )
+        if max_new_tokens is None:
+            max_new_tokens = self.max_gen  # default: the full decode budget
         if max_new_tokens < 1:
             raise ValueError(f"max_new_tokens must be >= 1, got {max_new_tokens}")
+        if max_new_tokens > self.max_gen:
+            raise ValueError(
+                f"max_new_tokens={max_new_tokens} exceeds this engine's "
+                f"decode budget max_gen={self.max_gen} (cache lengths are "
+                "compiled around it); raise max_gen or lower the request"
+            )
         if n_repeats < 1:
             raise ValueError(f"n_repeats must be >= 1, got {n_repeats}")
         if self.continuous:
             # a pool slot must hold the prompt's seq bucket + decode budget
             sb = next_bucket(tokens.size, self.seq_buckets)
-            budget = min(int(max_new_tokens), self.max_gen)
+            budget = int(max_new_tokens)
             if sb + budget > self.pool_cache_len:
                 raise ValueError(
                     f"request needs {sb} (seq bucket) + {budget} (decode "
@@ -328,42 +442,198 @@ class ServingEngine:
         if self.analog_cfg is None:
             # digital serving: K is a no-op, don't split batches on it
             n_repeats, profile_id = 1, None
+        elif self._promoted and profile_id is None:
+            # drift response: serve new uniform-K traffic one rung up the
+            # ladder until recalibration clears the event (queued/in-flight
+            # requests keep their tier — their noise keys already bind them)
+            n_repeats = self._promote_k(int(n_repeats))
         req = Request(
             uid=uid,
             tokens=tokens,
             n_repeats=int(n_repeats),
-            max_new_tokens=min(int(max_new_tokens), self.max_gen),
+            max_new_tokens=int(max_new_tokens),
             key=raw_key(key),
             arrival=self._now(now, "submit"),
             profile_id=profile_id,
             stop_tokens=stop_tokens,
+            deadline=deadline,
         )
         self.scheduler.submit(req)
         self.stats["requests"] += 1
         return uid
 
-    def poll(self, now: Optional[float] = None) -> Dict[int, np.ndarray]:
+    def poll(self, now: Optional[float] = None) -> Dict[int, RequestResult]:
         """Serve every request that is ready at ``now``; returns finished
-        uids. Batch-synchronous: runs each ready batch to completion.
-        Continuous: admits ready requests into pool slots and pumps masked
-        decode steps — re-admitting as retirements free slots — until the
-        pools drain and nothing else is deadline-ready."""
+        uids (token rows, or structured ``TimedOut``/``Failed`` values).
+        Batch-synchronous: runs each ready batch to completion. Continuous:
+        admits ready requests into pool slots and pumps masked decode steps
+        — re-admitting as retirements free slots — until the pools drain
+        and nothing else is deadline-ready. Requests requeued by a
+        transient fault are reserved within the same call when ready."""
         now = self._now(now, "poll")
         if self.continuous:
             return self._pump(now, force=False)
-        results: Dict[int, np.ndarray] = {}
-        for reqs in self.scheduler.pop_ready(now):
-            results.update(self._run_batch(reqs))
-        return results
+        results: Dict[int, RequestResult] = self._expire_queued(now)
+        # loop: a faulted batch requeues its requests (aged arrivals stay
+        # deadline-ready), so one poll drains everything ready at `now`
+        while True:
+            batches = self.scheduler.pop_ready(now)
+            if not batches:
+                return results
+            for reqs in batches:
+                results.update(self._run_batch(reqs))
 
-    def flush(self) -> Dict[int, np.ndarray]:
+    def flush(self) -> Dict[int, RequestResult]:
         """Drain the queue regardless of deadlines (end of replay/shutdown)."""
         if self.continuous:
             return self._pump(None, force=True)
-        results: Dict[int, np.ndarray] = {}
-        for reqs in self.scheduler.flush():
-            results.update(self._run_batch(reqs))
+        results: Dict[int, RequestResult] = {}
+        while self.scheduler.n_pending:  # fault retries re-enter the queue
+            for reqs in self.scheduler.flush():
+                results.update(self._run_batch(reqs))
         return results
+
+    # -- graceful degradation ------------------------------------------------
+
+    def _expire_queued(self, now: Optional[float]) -> Dict[int, RequestResult]:
+        """Retire queued requests whose deadline passed (clocked calls only)."""
+        out: Dict[int, RequestResult] = {}
+        if now is None:
+            return out
+        for r in self.scheduler.pop_expired(now):
+            out[r.uid] = TimedOut(
+                uid=r.uid, tokens=np.zeros((0,), np.int32), retries=r.retries,
+                detail=f"deadline {r.deadline:g} passed at {now:g} in queue",
+            )
+            self.stats["timed_out"] += 1
+            self.fault_log.append(
+                {"kind": "timeout", "where": "queue", "uids": [r.uid]}
+            )
+        return out
+
+    def _expire_pooled(self, now: Optional[float]) -> Dict[int, RequestResult]:
+        """Retire pooled requests past deadline; partial tokens are kept
+        (a prefix of the fault-free output) and slots free immediately."""
+        out: Dict[int, RequestResult] = {}
+        if now is None:
+            return out
+        for pool in self._pools.values():
+            for s in pool.expired(now):
+                rec = pool.retire(s)
+                r = rec.request
+                out[r.uid] = TimedOut(
+                    uid=r.uid,
+                    tokens=np.asarray(rec.emitted, np.int32),
+                    retries=r.retries,
+                    detail=(
+                        f"deadline {r.deadline:g} passed at {now:g} after "
+                        f"{len(rec.emitted)} tokens"
+                    ),
+                )
+                self.stats["timed_out"] += 1
+                self.stats["retired"] += 1
+                self.fault_log.append(
+                    {"kind": "timeout", "where": "pool", "uids": [r.uid]}
+                )
+        return out
+
+    def _promote_k(self, k: int) -> int:
+        """Next rung up the K ladder (the ladder top is the calibrated
+        energy cap — Ks above it were never validated, so promotion
+        saturates there)."""
+        for rung in self.k_ladder:
+            if rung > k:
+                return rung
+        return k
+
+    def _fault_requeue(
+        self, reqs: List[Request], kind: str, detail: str
+    ) -> Dict[int, RequestResult]:
+        """Handle requests whose batch hit a transient fault: one bounded
+        retry from scratch at a *promoted* uniform K (noise/sqrt(K) buys
+        margin against whatever corrupted the batch; profile tiers retry
+        at their own schedule — per-layer promotion is the profile
+        library's job), else a structured ``Failed``. Partial output is
+        discarded: a faulted batch's tokens are not trustworthy."""
+        out: Dict[int, RequestResult] = {}
+        entry = {
+            "kind": kind, "clock": self._fault_clock, "detail": detail,
+            "uids": [r.uid for r in reqs], "retried": [], "failed": [],
+            "promoted": {},
+        }
+        for r in reqs:
+            if r.retries < self.max_retries:
+                n_rep = r.n_repeats
+                if r.profile_id is None and self.analog_cfg is not None:
+                    n_rep = self._promote_k(n_rep)
+                r2 = dataclasses.replace(
+                    r, n_repeats=n_rep, retries=r.retries + 1
+                )
+                # force: an internal requeue must never bounce off QueueFull
+                self.scheduler.submit(r2, force=True)
+                self.stats["retried"] += 1
+                entry["retried"].append(r.uid)
+                entry["promoted"][r.uid] = r2.tier
+            else:
+                out[r.uid] = Failed(
+                    uid=r.uid, tokens=np.zeros((0,), np.int32),
+                    detail=detail, retries=r.retries,
+                )
+                self.stats["failed"] += 1
+                entry["failed"].append(r.uid)
+        self.fault_log.append(entry)
+        return out
+
+    def set_noise_scale(self, scale: float) -> None:
+        """Set the realized noise-std drift factor (1.0 = nominal). The
+        scale is a *runtime operand* of every compiled executable — no
+        retrace, and 1.0 is bit-identical to an engine without the knob."""
+        if scale <= 0.0:
+            raise ValueError(f"noise scale must be > 0, got {scale}")
+        self._noise_scale = float(scale)
+
+    @property
+    def noise_scale(self) -> float:
+        return self._noise_scale
+
+    @property
+    def promoted(self) -> bool:
+        """True while the drift response is promoting new uniform-K traffic."""
+        return self._promoted
+
+    def promote_tiers(self, event=None) -> None:
+        """Drift response: until :meth:`recalibrate`, newly submitted
+        uniform-K requests serve one rung up the ``k_ladder`` (extra
+        repeats buy back the drifted noise floor at higher energy; the
+        ladder top is the calibrated bound). Typically driven by a
+        ``NoiseDriftWatchdog`` event; idempotent."""
+        if not self._promoted:
+            self.stats["promotions"] += 1
+        self._promoted = True
+        self.fault_log.append(
+            {"kind": "drift_promotion", "clock": self._fault_clock,
+             "event": event if event is None else dataclasses.asdict(event)}
+        )
+
+    def recalibrate(self, *, noise_scale: float = 1.0) -> None:
+        """The recalibration hook: clear the drift response and pin the
+        realized noise scale (1.0 after physical recalibration; the
+        measured residual factor if the hardware can only partially
+        correct). New submissions return to their requested tiers."""
+        self._promoted = False
+        self.set_noise_scale(noise_scale)
+        self.fault_log.append(
+            {"kind": "recalibrated", "clock": self._fault_clock,
+             "noise_scale": float(noise_scale)}
+        )
+
+    def _sync_noise_scale(self) -> None:
+        """Pull the fault plan's drift factor at the current fault clock."""
+        if self.fault_plan is not None and self.fault_plan.drift is not None:
+            self._noise_scale = self.fault_plan.noise_scale_at(self._fault_clock)
+
+    def _scale_arr(self) -> Array:
+        return jnp.asarray(self._noise_scale, jnp.float32)
 
     # -- execution -----------------------------------------------------------
 
@@ -385,17 +655,20 @@ class ServingEngine:
         n_repeats: int,
         profile: Optional[PrecisionProfile] = None,
         pos: Optional[Array] = None,
+        noise_scale: Optional[Array] = None,
     ):
         """AnalogSpec for one batch: stacked per-request keys, folded with
         the decode position so every generated token draws fresh noise.
         ``profile`` (a trace-time constant) switches the layer scan to the
-        segmented per-layer-K form."""
+        segmented per-layer-K form. ``noise_scale`` is the *traced* drift
+        operand: realized hardware drift rides into the frozen-energy
+        executables as a runtime value (1.0 = nominal, bit-identical)."""
         if self.analog_cfg is None:
             return None
         k = keys if pos is None else jax.vmap(jax.random.fold_in)(keys, pos)
         return lm.AnalogSpec(
             cfg=self.analog_cfg, energies=self._energies, key=k,
-            n_repeats=n_repeats, profile=profile,
+            n_repeats=n_repeats, profile=profile, noise_scale=noise_scale,
         )
 
     def _keys_spec(self, bb: int) -> jax.ShapeDtypeStruct:
@@ -411,9 +684,10 @@ class ServingEngine:
     ):
         cfg = self.model_cfg
 
-        def fn(params, tokens, lengths, keys):
+        def fn(params, tokens, lengths, keys, noise_scale):
             self._traces += 1  # runs at trace time only: the retrace audit
-            analog = self._analog_spec(keys, n_repeats, profile)
+            analog = self._analog_spec(keys, n_repeats, profile,
+                                       noise_scale=noise_scale)
             cache, h_last = lm.prefill(
                 params, {"tokens": tokens}, cfg,
                 analog=analog, cache_len=cache_len, lengths=lengths,
@@ -429,6 +703,7 @@ class ServingEngine:
             jax.ShapeDtypeStruct((bb, sb), i32),
             jax.ShapeDtypeStruct((bb,), i32),
             self._keys_spec(bb),
+            jax.ShapeDtypeStruct((), jnp.float32),
         )
 
     def _build_decode(
@@ -437,9 +712,10 @@ class ServingEngine:
     ):
         cfg = self.model_cfg
 
-        def fn(params, cache, tok, pos, lengths, keys):
+        def fn(params, cache, tok, pos, lengths, keys, noise_scale):
             self._traces += 1
-            analog = self._analog_spec(keys, n_repeats, profile, pos=pos)
+            analog = self._analog_spec(keys, n_repeats, profile, pos=pos,
+                                       noise_scale=noise_scale)
             logits, new_cache = lm.decode_step(
                 params, cache, {"tokens": tok}, pos, cfg, analog=analog,
                 lengths=lengths,
@@ -457,6 +733,7 @@ class ServingEngine:
             jax.ShapeDtypeStruct((bb,), i32),
             jax.ShapeDtypeStruct((bb,), i32),
             self._keys_spec(bb),
+            jax.ShapeDtypeStruct((), jnp.float32),
             donate_argnums=(1,),
         )
 
@@ -515,8 +792,10 @@ class ServingEngine:
             ("prefill", bb, sb, cache_len, tier_key) + sig,
             lambda: self._build_prefill(bb, sb, cache_len, n_repeats, profile),
         )
+        self._sync_noise_scale()
         cache, tok = prefill_exe(
-            self.params, jnp.asarray(tokens_np), jnp.asarray(lengths_np), keys
+            self.params, jnp.asarray(tokens_np), jnp.asarray(lengths_np), keys,
+            self._scale_arr(),
         )
         self.stats["batches"] += 1
         self.stats["padded_rows"] += bb - len(reqs)
@@ -524,10 +803,14 @@ class ServingEngine:
 
     # -- batch-synchronous execution ----------------------------------------
 
-    def _run_batch(self, reqs: List[Request]) -> Dict[int, np.ndarray]:
+    def _run_batch(self, reqs: List[Request]) -> Dict[int, RequestResult]:
         tier = reqs[0].tier
         n_repeats, profile, tier_key = self._tier_parts(tier)
-        (bb, _sb, cache_len), keys, cache, tok = self._prefill_batch(reqs)
+        try:
+            (bb, _sb, cache_len), keys, cache, tok = self._prefill_batch(reqs)
+        except TransientExecutableFault as f:
+            self.stats["exe_faults"] += 1
+            return self._fault_requeue(reqs, "exe_fault", str(f))
         lengths = jnp.asarray([r.prompt_len for r in reqs] + [0] * (bb - len(reqs)),
                               jnp.int32)
         toks = [tok]
@@ -552,9 +835,21 @@ class ServingEngine:
             if has_stops and all(done):
                 break  # EOS early exit: every real row hit budget or stop id
             pos = lengths + t
-            tok, cache = decode_exe(
-                self.params, cache, tok[:, None], pos, lengths, keys
-            )
+            self._fault_clock += 1
+            self._sync_noise_scale()
+            try:
+                tok, cache = decode_exe(
+                    self.params, cache, tok[:, None], pos, lengths, keys,
+                    self._scale_arr(),
+                )
+            except TransientExecutableFault as f:
+                # pre-dispatch guard: the donated cache was not consumed,
+                # but a faulted batch's partial tokens are discarded — the
+                # whole batch retries from scratch (or fails, bounded)
+                self.stats["exe_faults"] += 1
+                self.stats["decode_steps"] += steps_run
+                self.stats["decode_slot_steps"] += steps_run * bb
+                return self._fault_requeue(reqs, "exe_fault", str(f))
             toks.append(tok)
             steps_run += 1
             if has_stops:  # per-step host read only when EOS is in play
@@ -611,7 +906,7 @@ class ServingEngine:
 
     def pump_step(
         self, now: Optional[float] = None, *, force: bool = False
-    ) -> Dict[int, np.ndarray]:
+    ) -> Dict[int, RequestResult]:
         """One continuous-scheduling iteration (the unit real serving loops
         and latency measurements want): admit deadline-ready requests into
         free slots (all pending requests when ``force``), then run ONE
@@ -623,8 +918,8 @@ class ServingEngine:
         results, _ = self._pump_once(now, force)
         return results
 
-    def _pump(self, now: Optional[float], force: bool) -> Dict[int, np.ndarray]:
-        results: Dict[int, np.ndarray] = {}
+    def _pump(self, now: Optional[float], force: bool) -> Dict[int, RequestResult]:
+        results: Dict[int, RequestResult] = {}
         while True:
             step_results, progressed = self._pump_once(now, force)
             results.update(step_results)
@@ -639,10 +934,15 @@ class ServingEngine:
         the prefill/decode interleave knob), then every pool with active
         slots takes exactly one masked decode step. ``progressed`` is False
         only when nothing was admitted and no slot decoded: the caller's
-        drain loop is done.
+        drain loop is done. Deadline expiry runs first on clocked calls
+        (``now=None`` flush drains everything and times out nothing).
         """
-        results: Dict[int, np.ndarray] = {}
+        results: Dict[int, RequestResult] = {}
         progressed = False
+        results.update(self._expire_queued(now))
+        results.update(self._expire_pooled(now))
+        if results:
+            progressed = True
         free = {}
         for tier in self.scheduler.pending_tiers():
             pool = self._pools.get(tier)
@@ -656,16 +956,22 @@ class ServingEngine:
                 progressed = True
         return results, progressed
 
-    def _admit(self, reqs: List[Request]) -> Dict[int, np.ndarray]:
+    def _admit(self, reqs: List[Request]) -> Dict[int, RequestResult]:
         """Prefill a ready group at the pool's cache length and scatter it
         into free slots. Requests that finish at their first token (1-token
         budget, or the first token is a stop id) complete here and never
-        occupy a decode slot."""
+        occupy a decode slot. A transient executable fault at either
+        dispatch requeues the whole admission wave (taken slots released;
+        the pre-dispatch guard left the pool cache intact)."""
         pool = self._pool(reqs[0].tier)
         assert len(reqs) <= pool.n_free, "scheduler admitted beyond free slots"
-        (bb, _sb, _cl), _keys, src_cache, tok0 = self._prefill_batch(
-            reqs, pool.cache_len
-        )
+        try:
+            (bb, _sb, _cl), _keys, src_cache, tok0 = self._prefill_batch(
+                reqs, pool.cache_len
+            )
+        except TransientExecutableFault as f:
+            self.stats["exe_faults"] += 1
+            return self._fault_requeue(reqs, "exe_fault", str(f))
         tok0 = np.asarray(tok0)  # admission bookkeeping needs host values
         slots = pool.take(len(reqs))
         # prefill batch-padding rows aim past the pool: dropped by the scatter
@@ -675,7 +981,13 @@ class ServingEngine:
             ("insert", pool.slots, pool.cache_len, bb),
             lambda: self._build_insert(pool.slots, pool.cache_len, bb),
         )
-        pool.cache = insert_exe(pool.cache, src_cache, jnp.asarray(slot_ids))
+        try:
+            pool.cache = insert_exe(pool.cache, src_cache, jnp.asarray(slot_ids))
+        except TransientExecutableFault as f:
+            for s in slots:
+                pool.release(s)
+            self.stats["exe_faults"] += 1
+            return self._fault_requeue(reqs, "exe_fault", str(f))
         self.stats["admitted"] += len(reqs)
         out: Dict[int, np.ndarray] = {}
         for i, (r, s) in enumerate(zip(reqs, slots)):
@@ -689,12 +1001,33 @@ class ServingEngine:
                 pool.activate(s, r, t0, r.key)
         return out
 
-    def _pool_step(self, pool: DecodePool) -> Dict[int, np.ndarray]:
+    def _pool_step(self, pool: DecodePool) -> Dict[int, RequestResult]:
         """One masked decode step over a whole pool: inactive slots are
         length-0 rows (inert), active rows decode at their own position
         under their own key, and rows that hit their budget or emit a stop
         id retire immediately — the freed slots are admission targets on the
-        very next pump iteration."""
+        very next pump iteration.
+
+        Fault sites live here too (injected by the engine's FaultPlan): a
+        *stalled* step skips the dispatch (the latency cost of a wedged
+        batch, charged to the fault clock so schedules can't stall a drain
+        forever), a *transient executable fault* retires every active row
+        into the bounded-retry path (pre-dispatch: the donated cache
+        survives), and a *poisoned row* — any emitted token outside the
+        vocab — retires just that row the step it appears (per-request
+        noise keys keep batch-mates bit-identical through all of it).
+        """
+        plan = self.fault_plan
+        clock = self._fault_clock
+        self._fault_clock += 1
+        if plan is not None and plan.stalled(clock):
+            self.stats["stalled_steps"] += 1
+            self.fault_log.append(
+                {"kind": "stall", "clock": clock, "tier": pool.tier,
+                 "uids": [pool.record(s).request.uid
+                          for s in pool.active_slots()]}
+            )
+            return {}
         # the pool carries its tier's frozen repeat schedule (profiles are
         # add-only, so the copy can't drift from the registry)
         tier_key = (
@@ -708,29 +1041,58 @@ class ServingEngine:
                 pool.slots, pool.cache_len, pool.n_repeats, pool.profile
             ),
         )
-        tok, pool.cache = decode_exe(
-            self.params,
-            pool.cache,
-            jnp.asarray(pool.tok[:, None]),
-            jnp.asarray(pool.pos),
-            jnp.asarray(pool.lengths),
-            jnp.asarray(pool.keys),
-        )
+        self._sync_noise_scale()
+        try:
+            tok, pool.cache = decode_exe(
+                self.params,
+                pool.cache,
+                jnp.asarray(pool.tok[:, None]),
+                jnp.asarray(pool.pos),
+                jnp.asarray(pool.lengths),
+                jnp.asarray(pool.keys),
+                self._scale_arr(),
+            )
+        except TransientExecutableFault as f:
+            self.stats["exe_faults"] += 1
+            out: Dict[int, RequestResult] = {}
+            reqs = []
+            for s in pool.active_slots():
+                rec = pool.retire(s)
+                self.stats["retired"] += 1
+                reqs.append(rec.request)
+            out.update(self._fault_requeue(reqs, "exe_fault", str(f)))
+            return out
         tok_np = np.asarray(tok)
+        if plan is not None and plan.poison_map:
+            tok_np = tok_np.copy()  # device views are read-only
+            plan.poison_rows(clock, tok_np)  # detected below by value
         self.stats["decode_steps"] += 1
         self.stats["decode_slot_steps"] += pool.slots
         self.stats["active_slot_steps"] += pool.n_active
-        out: Dict[int, np.ndarray] = {}
+        out: Dict[int, RequestResult] = {}
+        poisoned_reqs: List[Request] = []
+        vocab = self.model_cfg.vocab_size
         for s in pool.active_slots():
+            t = int(tok_np[s])
+            if not 0 <= t < vocab:
+                # corrupted readout: retire the row alone; its batch-mates'
+                # noise streams never depended on it
+                rec = pool.retire(s)
+                self.stats["poisoned_rows"] += 1
+                self.stats["retired"] += 1
+                poisoned_reqs.append(rec.request)
+                continue
             rec = pool.record(s)
-            rec.emitted.append(int(tok_np[s]))
-            pool.tok[s] = tok_np[s]
+            rec.emitted.append(t)
+            pool.tok[s] = t
             pool.pos[s] += 1
             if rec.done:
                 pool.retire(s)
                 out[rec.request.uid] = np.asarray(rec.emitted, np.int32)
                 self.stats["tokens_generated"] += len(rec.emitted)
                 self.stats["retired"] += 1
+        for r in poisoned_reqs:
+            out.update(self._fault_requeue([r], "poison", "out-of-vocab token"))
         return out
 
     # -- introspection -------------------------------------------------------
@@ -739,6 +1101,49 @@ class ServingEngine:
     def energies(self):
         """The frozen energy allocation (baked into compiled executables)."""
         return self._energies
+
+    def effective_energies(self):
+        """The energy tree the hardware is *actually* delivering right now:
+        registered energies divided by the realized drift factor squared
+        (std ~ 1/sqrt(E)). At the nominal scale 1.0 this is the registered
+        tree bit-for-bit."""
+        if self._energies is None:
+            raise ValueError("digital engine: no energy tree")
+        s = self._noise_scale
+        if s == 1.0:
+            return self._energies
+        return jax.tree.map(lambda e: e / (s * s), self._energies)
+
+    def probe_apply(self):
+        """``(energies, tokens, key) -> final hidden states`` over the live
+        model — the calibrate-machinery apply fn the drift watchdog probes
+        through. Cached on the engine (one object) so the probe's jitted
+        executable compiles once; energies are runtime arguments, so
+        probing at drifted energies never retraces."""
+        if self.analog_cfg is None:
+            raise ValueError("digital engine: nothing to probe for drift")
+        fn = getattr(self, "_probe_apply_fn", None)
+        if fn is None:
+            params, cfg, a_cfg = self.params, self.model_cfg, self.analog_cfg
+
+            def fn(energies, tokens, key):
+                spec = lm.AnalogSpec(cfg=a_cfg, energies=energies, key=key)
+                h, _ = lm.forward_hidden(
+                    params, {"tokens": tokens}, cfg, mode="train", analog=spec
+                )
+                return h
+
+            self._probe_apply_fn = fn
+        return fn
+
+    def probe_reference(self, tokens) -> Array:
+        """Clean (digital) hidden states for a probe batch — the zero-noise
+        reference the watchdog measures residual RMS against."""
+        h, _ = lm.forward_hidden(
+            self.params, {"tokens": jnp.asarray(tokens, jnp.int32)},
+            self.model_cfg, mode="train", analog=None,
+        )
+        return h
 
     @property
     def profiles(self) -> Dict[str, PrecisionProfile]:

@@ -1,0 +1,218 @@
+"""Deterministic fault injection for the serving engine.
+
+Real analog accelerators fail in ways digital stacks never see: the noise
+floor *drifts* as the device ages or heats (arxiv 2309.10759 calls drift
+the dominant deployed failure mode), batches stall on a wedged dispatch,
+and transient component faults corrupt a row or kill a kernel launch. The
+engine owns every one of those sites — the noise spec it builds, the pool
+step it dispatches, the executable cache it calls through — so faults are
+injected *at the engine's seams*, never inside model code.
+
+A :class:`FaultPlan` is the injection schedule. It is deterministic and
+seedable: explicit schedules name exact injection points (the engine's
+fault clock for drift/stalls/poison, a per-phase call counter for
+executable faults), and the optional probabilistic knobs draw from a
+seeded ``numpy`` generator so the same plan replayed against the same
+traffic injects the same faults. Plans are *stateful* (call counters, the
+injection log) — use a fresh plan per engine run when comparing a faulted
+run against a baseline.
+
+Sites:
+
+``drift``
+    A :class:`DriftRamp` mapping the engine's fault clock to a noise-scale
+    factor ``d``: every analog site's noise std is multiplied by ``d``.
+    Because all three noise models have std proportional to ``1/sqrt(E)``
+    (core/noise.py Eqs. 9-11), the engine realizes the drift exactly by
+    serving at effective energies ``E / d**2`` — threaded into compiled
+    executables as a runtime scalar operand, so drift never retraces.
+
+``exe_faults``
+    ``(phase, n)`` pairs: the ``n``-th call (0-based, counted per phase
+    over the engine's lifetime) of a cached executable for ``phase``
+    (``"prefill"`` / ``"decode"`` / ``"insert"``) raises
+    :class:`TransientExecutableFault` *before* dispatch — donated buffers
+    are never consumed, so the engine can retry cleanly.
+
+``stall_steps``
+    Fault-clock steps at which a pool decode step is stuck: the engine
+    skips the dispatch (the latency is a lost step — virtual-clock
+    friendly), optionally also sleeping ``stall_sleep_s`` on a real clock.
+
+``poison``
+    ``(clock, slot) -> token`` overrides applied to the decode step's
+    emitted tokens — an out-of-vocab id models a corrupted readout row.
+    Poison is per-row: batch-mates are untouched.
+
+Every injection is appended to ``plan.log`` so tests and the bench can
+assert exactly what fired and derive the affected-request set from the
+engine's own ``fault_log``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, List, Optional, Tuple
+
+import numpy as np
+
+
+class TransientExecutableFault(RuntimeError):
+    """A compiled executable transiently failed (pre-dispatch).
+
+    Carries the cache-key phase and the per-phase call index so handlers
+    and logs can name the exact injection point.
+    """
+
+    def __init__(self, phase: str, call_index: int, key=None):
+        super().__init__(
+            f"injected transient fault: {phase} call #{call_index}"
+            + (f" (key={key!r})" if key is not None else "")
+        )
+        self.phase = phase
+        self.call_index = call_index
+        self.key = key
+
+
+class QueueFull(RuntimeError):
+    """Backpressure: the scheduler queue is at its high-water mark.
+
+    Raised by ``submit`` instead of growing the queue without bound —
+    callers shed load or retry later; nothing is silently dropped.
+    """
+
+
+@dataclasses.dataclass(frozen=True)
+class DriftRamp:
+    """Noise-scale drift schedule over the engine's fault clock.
+
+    Scale is 1.0 before ``start``, then grows multiplicatively by
+    ``rate`` per step, capped at ``max_scale``. ``rate=None`` is a step
+    function: the scale jumps straight to ``max_scale`` at ``start``
+    (the sharpest drift a watchdog can be asked to catch).
+    """
+
+    start: int
+    rate: Optional[float] = 0.25
+    max_scale: float = 2.0
+
+    def scale_at(self, clock: int) -> float:
+        if clock < self.start:
+            return 1.0
+        if self.rate is None:
+            return float(self.max_scale)
+        return float(min(self.max_scale, (1.0 + self.rate) ** (clock - self.start)))
+
+
+class FaultPlan:
+    """A deterministic, seedable injection schedule (see module docstring).
+
+    Parameters
+    ----------
+    seed:
+        Seeds the generator behind ``exe_fault_rate`` (the only stochastic
+        knob); explicit schedules ignore it.
+    drift:
+        Optional :class:`DriftRamp`. ``noise_scale_at(clock)`` is 1.0
+        without one.
+    exe_faults:
+        Iterable of ``(phase, nth_call)`` pairs — fail that phase's n-th
+        executable invocation (0-based, counted across the engine's life).
+    exe_fault_rate:
+        Probability of failing any executable call, drawn from the seeded
+        generator (deterministic given seed and call order). Composes with
+        the explicit schedule.
+    stall_steps:
+        Fault-clock steps whose pool decode dispatch is stuck.
+    stall_sleep_s:
+        Optional real-time sleep per stalled step (wall-clock runs only;
+        virtual-clock tests leave it 0).
+    poison:
+        Mapping ``(clock, slot) -> token`` (or an iterable of
+        ``(clock, slot)`` pairs, poisoned with ``poison_token``) applied
+        to the decode step's emitted tokens.
+    poison_token:
+        Token injected for iterable-form ``poison`` entries; out-of-vocab
+        by default so the engine's row validation trips.
+    """
+
+    def __init__(
+        self,
+        *,
+        seed: int = 0,
+        drift: Optional[DriftRamp] = None,
+        exe_faults: Iterable[Tuple[str, int]] = (),
+        exe_fault_rate: float = 0.0,
+        stall_steps: Iterable[int] = (),
+        stall_sleep_s: float = 0.0,
+        poison=(),
+        poison_token: int = -1,
+    ):
+        if not 0.0 <= exe_fault_rate <= 1.0:
+            raise ValueError(f"exe_fault_rate must be in [0, 1], got {exe_fault_rate}")
+        self.seed = int(seed)
+        self.drift = drift
+        self.exe_faults = frozenset((str(p), int(n)) for p, n in exe_faults)
+        self.exe_fault_rate = float(exe_fault_rate)
+        self.stall_steps = frozenset(int(s) for s in stall_steps)
+        self.stall_sleep_s = float(stall_sleep_s)
+        if isinstance(poison, dict):
+            self.poison_map: Dict[Tuple[int, int], int] = {
+                (int(c), int(s)): int(t) for (c, s), t in poison.items()
+            }
+        else:
+            self.poison_map = {
+                (int(c), int(s)): int(poison_token) for c, s in poison
+            }
+        self._rng = np.random.default_rng(self.seed)
+        self._calls: Dict[str, int] = {}
+        #: every injection that actually fired, in order: dicts with a
+        #: ``site`` field (drift is continuous, not logged per step)
+        self.log: List[dict] = []
+
+    # -- drift ---------------------------------------------------------------
+
+    def noise_scale_at(self, clock: int) -> float:
+        """Noise-std drift factor at a fault-clock step (1.0 = nominal)."""
+        return 1.0 if self.drift is None else self.drift.scale_at(clock)
+
+    # -- transient executable failures ---------------------------------------
+
+    def check_executable(self, key) -> None:
+        """Called by the ExecutableCache guard before every invocation;
+        raises :class:`TransientExecutableFault` at scheduled calls."""
+        phase = key[0] if isinstance(key, tuple) and key else str(key)
+        n = self._calls.get(phase, 0)
+        self._calls[phase] = n + 1
+        hit = (phase, n) in self.exe_faults
+        if not hit and self.exe_fault_rate > 0.0:
+            hit = bool(self._rng.random() < self.exe_fault_rate)
+        if hit:
+            self.log.append({"site": "executable", "phase": phase, "call": n})
+            raise TransientExecutableFault(phase, n, key)
+
+    # -- stuck batches -------------------------------------------------------
+
+    def stalled(self, clock: int) -> bool:
+        """True when the pool decode step at ``clock`` is stuck; the engine
+        skips the dispatch (and this method sleeps ``stall_sleep_s``)."""
+        if clock not in self.stall_steps:
+            return False
+        self.log.append({"site": "stall", "clock": clock})
+        if self.stall_sleep_s > 0.0:
+            import time
+
+            time.sleep(self.stall_sleep_s)
+        return True
+
+    # -- poisoned rows -------------------------------------------------------
+
+    def poison_rows(self, clock: int, tok: np.ndarray) -> List[int]:
+        """Apply scheduled token overrides for ``clock`` in place; returns
+        the poisoned slot indices (empty for an unscheduled step)."""
+        slots = []
+        for (c, s), t in self.poison_map.items():
+            if c == clock and 0 <= s < tok.shape[0]:
+                tok[s] = t
+                slots.append(s)
+                self.log.append({"site": "poison", "clock": c, "slot": s, "token": t})
+        return slots

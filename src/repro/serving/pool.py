@@ -146,6 +146,17 @@ class DecodePool:
         assert rec is not None, f"slot {slot} is not active"
         return rec
 
+    def expired(self, now: float) -> List[int]:
+        """Active slots whose request's deadline has passed at ``now`` —
+        the engine retires them with a partial ``TimedOut`` result through
+        the normal :meth:`retire` path (no special slot state)."""
+        out = []
+        for s in self.active_slots():
+            d = self.record(s).request.deadline
+            if d is not None and d <= now:
+                out.append(s)
+        return out
+
     # -- lifecycle -----------------------------------------------------------
 
     def take(self, k: int) -> List[int]:

@@ -21,6 +21,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.serving.bucketing import DEFAULT_SEQ_BUCKETS, next_bucket
+from repro.serving.faults import QueueFull
 
 
 @dataclasses.dataclass
@@ -36,6 +37,13 @@ class Request:
     greedy decode retires the request the step it emits one (the stop id is
     the last token of the output), instead of running out its full
     ``max_new_tokens`` budget.
+
+    ``deadline`` is an absolute timestamp on the engine's clock domain: a
+    request still queued or decoding past it is retired with a structured
+    ``TimedOut`` result instead of burning more analog energy on an answer
+    nobody is waiting for. ``retries`` counts fault-triggered
+    resubmissions (the engine bounds them and promotes the precision tier
+    on each retry).
     """
 
     uid: int
@@ -46,6 +54,8 @@ class Request:
     arrival: float = 0.0
     profile_id: Optional[str] = None  # registered PrecisionProfile tier
     stop_tokens: Tuple[int, ...] = ()  # EOS ids: emit one -> retire the row
+    deadline: Optional[float] = None  # absolute timeout (engine clock)
+    retries: int = 0  # fault-triggered resubmissions so far
 
     @property
     def prompt_len(self) -> int:
@@ -71,9 +81,13 @@ class TierScheduler:
         max_batch: int = 8,
         max_wait: float = 0.05,
         seq_buckets: Sequence[int] = DEFAULT_SEQ_BUCKETS,
+        max_queue: Optional[int] = None,
     ):
+        if max_queue is not None and max_queue < 1:
+            raise ValueError(f"max_queue must be >= 1, got {max_queue}")
         self.max_batch = max_batch
         self.max_wait = max_wait
+        self.max_queue = max_queue
         self.seq_buckets = tuple(seq_buckets)
         # group (tier, seq_bucket) -> FIFO of requests, where tier is the
         # uniform K int or a profile id string. OrderedDict so dispatch order
@@ -83,7 +97,22 @@ class TierScheduler:
     def group_of(self, req: Request) -> Tuple[object, int]:
         return (req.tier, next_bucket(req.prompt_len, self.seq_buckets))
 
-    def submit(self, req: Request) -> Tuple[int, int]:
+    def submit(self, req: Request, *, force: bool = False) -> Tuple[int, int]:
+        """Enqueue one request. With ``max_queue`` set, submission past the
+        high-water mark raises :class:`QueueFull` — explicit backpressure
+        instead of unbounded queue growth. ``force`` bypasses the bound:
+        the engine's internal fault-retry requeues must never be shed (the
+        request was already admitted once)."""
+        if (
+            not force
+            and self.max_queue is not None
+            and self.n_pending >= self.max_queue
+        ):
+            raise QueueFull(
+                f"scheduler queue is at its high-water mark "
+                f"({self.n_pending}/{self.max_queue} pending); poll/pump to "
+                "drain or shed load upstream"
+            )
         g = self.group_of(req)
         self._queues.setdefault(g, []).append(req)
         return g
@@ -107,6 +136,23 @@ class TierScheduler:
             if not q:
                 del self._queues[g]
         return batches
+
+    def pop_expired(self, now: float) -> List[Request]:
+        """Remove and return every queued request whose deadline has passed
+        at ``now`` (the engine turns them into structured ``TimedOut``
+        results). FIFO order is preserved for the survivors."""
+        expired: List[Request] = []
+        for g in list(self._queues):
+            q = self._queues[g]
+            keep = []
+            for r in q:
+                (expired if r.deadline is not None and r.deadline <= now
+                 else keep).append(r)
+            if keep:
+                self._queues[g] = keep
+            else:
+                del self._queues[g]
+        return expired
 
     def pending_tiers(self):
         """Tiers with queued requests (continuous pools are created lazily,

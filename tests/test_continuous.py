@@ -16,8 +16,10 @@ from repro.models import init_energy_tree, init_params, lm
 from repro.serving import (
     DecodePool,
     ExecutableCache,
+    FaultPlan,
     PrecisionProfile,
     Request,
+    RequestFailure,
     ServingEngine,
     SlotAllocator,
     TierScheduler,
@@ -494,3 +496,82 @@ def test_executable_cache_lru_eviction():
     for i in range(10):
         unbounded.get(i, make(i))
     assert len(unbounded) == 10 and unbounded.stats()["evictions"] == 0
+
+
+# --------------------------------------------------------------------------
+# fault hygiene: random faults + deadlines never leak or alias slots
+# --------------------------------------------------------------------------
+
+_FAULT_ENG = []  # lazy singleton: examples share executables, not state
+
+
+def _fault_engine():
+    if not _FAULT_ENG:
+        cfg = FAMILY_CONFIGS["dense"]
+        params = init_params(KEY, cfg)
+        # constructed WITH a (empty) plan so the cache fault guard is armed;
+        # each example swaps in its own plan, then clears it
+        _FAULT_ENG.append(
+            _continuous_engine(params, cfg, pool_slots=2,
+                               fault_plan=FaultPlan())
+        )
+    return _FAULT_ENG[0]
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 2**16))
+def test_faulted_pool_accounting_property(seed):
+    """Random stalls, transient executable faults, poisoned rows, and tight
+    deadlines over continuous traffic: every submitted uid resolves exactly
+    once (tokens or a structured RequestFailure), nothing hangs, and after
+    the drain every pool's slots are fully free with the scheduler empty —
+    faults may fail requests but can never leak or alias a slot."""
+    rng = np.random.default_rng(seed)
+    eng = _fault_engine()
+    cfg = eng.model_cfg
+    c0 = eng._fault_clock  # plans are scheduled relative to the live clock
+    plan = FaultPlan(
+        seed=seed,
+        stall_steps=tuple(c0 + int(o) for o in rng.integers(0, 14, 3)),
+        exe_faults=tuple(
+            ("decode", int(n)) for n in rng.choice(12, 2, replace=False)
+        ) + ((("prefill", int(rng.integers(0, 3))),) if rng.random() < 0.5
+             else ()),
+        poison={(c0 + int(rng.integers(0, 10)), int(rng.integers(0, 2))): -7}
+        if rng.random() < 0.5 else (),
+    )
+    eng.fault_plan = plan
+    try:
+        n = int(rng.integers(2, 5))
+        uids = []
+        for i in range(n):
+            prompt = rng.integers(0, cfg.vocab_size, int(rng.integers(1, SB)))
+            deadline = float(rng.uniform(0.002, 0.02)) if rng.random() < 0.4 \
+                else None
+            uids.append(eng.submit(
+                prompt, max_new_tokens=int(rng.integers(1, 9)),
+                now=0.0, deadline=deadline,
+            ))
+        results, t, steps = {}, 0.0, 0
+        while eng.n_in_flight:
+            t += 1e-3
+            for uid, res in eng.pump_step(now=t, force=True).items():
+                assert uid not in results  # resolved at most once
+                results[uid] = res
+            steps += 1
+            assert steps < 500, "faulted drain hung"
+    finally:
+        eng.fault_plan = FaultPlan()  # disarm for the next example
+    assert set(results) == set(uids)  # every uid resolved exactly once
+    for res in results.values():
+        if isinstance(res, RequestFailure):
+            assert res.detail and not res.ok
+        else:
+            assert isinstance(res, np.ndarray) and res.dtype == np.int32
+    # slot hygiene: nothing leaked, nothing half-held, scheduler empty
+    assert eng.scheduler.n_pending == 0 and eng.n_in_flight == 0
+    for pool in eng.pools.values():
+        assert pool.n_active == 0
+        assert pool.allocator.n_free == pool.slots
+        assert not pool.allocator.held()
+        assert (np.asarray(pool.lengths) == 0).all()  # all rows inert

@@ -1,0 +1,404 @@
+"""Fault tolerance: deterministic injection (FaultPlan), structured
+failure results (TimedOut/Failed), bounded retry with K-promotion, the
+noise-drift watchdog, and the acceptance contract — with faults injected
+(drift + transient executable failure + stalled batches + poisoned rows),
+every surviving request's tokens are bit-identical to a fault-free run for
+unaffected requests, expired requests time out with structured results (no
+hangs, no leaked slots), and the watchdog detects injected drift within
+its probe budget. The no-fault path stays bit-identical with zero
+steady-state retraces."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import AnalogConfig
+from repro.models import init_energy_tree, init_params
+from repro.models.config import ModelConfig
+from repro.serving import (
+    DriftRamp,
+    ExecutableCache,
+    Failed,
+    FaultPlan,
+    NoiseDriftWatchdog,
+    QueueFull,
+    ServingEngine,
+    TimedOut,
+    TransientExecutableFault,
+    WatchdogConfig,
+)
+from test_serving import ENERGY_AJ, SB
+
+KEY = jax.random.PRNGKey(0)
+MODEL = ModelConfig(
+    name="fault-test", family="dense", n_layers=2, d_model=32, n_heads=2,
+    n_kv_heads=1, d_ff=64, vocab_size=128, attn_q_chunk=16, attn_kv_chunk=16,
+    loss_chunk=32, dtype="float32",
+)
+
+
+@pytest.fixture(scope="module")
+def env():
+    params = init_params(KEY, MODEL)
+    energies = init_energy_tree(MODEL, ENERGY_AJ)
+    return dict(params=params, energies=energies)
+
+
+def _engine(env, *, analog=True, plan=None, **kw):
+    extra = {}
+    if analog:
+        extra = dict(analog_cfg=AnalogConfig.shot(), energies=env["energies"])
+    kw.setdefault("max_gen", 8)
+    kw.setdefault("max_wait", 0.0)  # instant admission on the virtual clock
+    return ServingEngine(
+        env["params"], MODEL, max_batch=4,
+        batch_buckets=(1, 2, 4), seq_buckets=(SB,),
+        continuous=True, pool_slots=2, fault_plan=plan,
+        k_ladder=(1, 2, 4), **extra, **kw,
+    )
+
+
+def _traffic(n=3, lens=(7, 19, 28), vocab=128, seed=3):
+    rng = np.random.default_rng(seed)
+    prompts = [rng.integers(0, vocab, L).astype(np.int32) for L in lens[:n]]
+    keys = [jax.random.fold_in(jax.random.PRNGKey(5), i) for i in range(n)]
+    return prompts, keys
+
+
+def _serve(eng, submits, max_iters=300):
+    """Submit (prompt, kwargs) pairs at t=0 and pump on a virtual clock
+    until everything resolves; returns {uid: result}. Bounded iterations:
+    a hang is a failure, not a timeout of the test suite."""
+    uids = [eng.submit(p, now=0.0, **kw) for p, kw in submits]
+    results, t = {}, 0.0
+    for _ in range(max_iters):
+        if not eng.n_in_flight:
+            break
+        t += 1e-3
+        results.update(eng.poll(now=t))
+    assert not eng.n_in_flight, "engine failed to drain (hang)"
+    return uids, results
+
+
+def _affected_uids(eng):
+    """Every uid named by an injection consequence in the engine's log."""
+    out = set()
+    for e in eng.fault_log:
+        out.update(e.get("uids", ()))
+    return out
+
+
+def _assert_slot_hygiene(eng):
+    for pool in eng.pools.values():
+        assert pool.allocator.n_free == pool.slots
+        assert pool.n_active == 0
+        assert (pool.lengths == 0).all()
+    assert eng.scheduler.n_pending == 0
+
+
+# --------------------------------------------------------------------------
+# FaultPlan: deterministic, seedable, logged
+# --------------------------------------------------------------------------
+
+
+def test_fault_plan_schedules_are_deterministic():
+    def drive(plan):
+        fired = []
+        for i in range(20):
+            try:
+                plan.check_executable(("decode", 4, 40, 2))
+            except TransientExecutableFault as f:
+                fired.append(("exe", f.phase, f.call_index))
+            if plan.stalled(i):
+                fired.append(("stall", i))
+            tok = np.zeros(4, np.int32)
+            for s in plan.poison_rows(i, tok):
+                fired.append(("poison", i, s, int(tok[s])))
+        return fired
+
+    mk = lambda: FaultPlan(
+        seed=7, exe_faults=[("decode", 3), ("decode", 11)],
+        exe_fault_rate=0.1, stall_steps=(2, 5), poison={(4, 1): -9},
+    )
+    a, b = mk(), mk()
+    assert drive(a) == drive(b)  # same seed + schedule -> same injections
+    assert ("exe", "decode", 3) in drive(mk())
+    assert ("stall", 2) in drive(mk()) and ("poison", 4, 1, -9) in drive(mk())
+    assert a.log == b.log and len(a.log) > 0
+
+
+def test_drift_ramp_shapes():
+    step = DriftRamp(start=5, rate=None, max_scale=2.0)
+    assert step.scale_at(4) == 1.0 and step.scale_at(5) == 2.0
+    ramp = DriftRamp(start=0, rate=0.5, max_scale=3.0)
+    assert ramp.scale_at(0) == 1.0
+    assert ramp.scale_at(1) == 1.5
+    assert ramp.scale_at(100) == 3.0
+    assert FaultPlan().noise_scale_at(123) == 1.0
+
+
+def test_cache_fault_hook_fires_pre_dispatch():
+    calls = []
+
+    def exe(*a):
+        calls.append(a)
+        return "ran"
+
+    plan = FaultPlan(exe_faults=[("prefill", 1)])
+    cache = ExecutableCache(fault_hook=plan.check_executable)
+    got = cache.get(("prefill", 1, 32), lambda: exe)
+    assert got(1) == "ran"  # call #0 passes through
+    with pytest.raises(TransientExecutableFault):
+        cache.get(("prefill", 1, 32), lambda: exe)(2)  # call #1 injected
+    # the guard raised BEFORE dispatch: the executable never saw call #2
+    assert calls == [(1,)]
+    assert cache.stats()["hits"] == 1 and cache.stats()["misses"] == 1
+
+
+# --------------------------------------------------------------------------
+# submit validation + backpressure
+# --------------------------------------------------------------------------
+
+
+def test_submit_rejects_unservable_requests(env):
+    eng = _engine(env, analog=False)
+    with pytest.raises(ValueError, match="empty prompt"):
+        eng.submit([], now=0.0)
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        eng.submit([1, 2], max_new_tokens=0, now=0.0)
+    with pytest.raises(ValueError, match="max_gen"):
+        eng.submit([1, 2], max_new_tokens=eng.max_gen + 1, now=0.0)
+    with pytest.raises(ValueError, match="largest seq bucket"):
+        eng.submit(np.zeros(SB + 1, np.int32), now=0.0)
+    assert eng.scheduler.n_pending == 0  # nothing half-enqueued
+
+
+def test_queue_full_backpressure(env):
+    eng = _engine(env, analog=False, max_queue=2, max_wait=0.0)
+    p = np.arange(4, dtype=np.int32)
+    eng.submit(p, now=0.0)
+    eng.submit(p, now=0.0)
+    with pytest.raises(QueueFull, match="high-water"):
+        eng.submit(p, now=0.0)
+    eng.poll(now=1.0)  # drain
+    eng.flush()
+    eng.submit(p, now=2.0)  # capacity is back
+
+
+# --------------------------------------------------------------------------
+# deadlines -> structured TimedOut, slots released
+# --------------------------------------------------------------------------
+
+
+def test_queued_deadline_times_out_with_empty_result(env):
+    # max_wait keeps the lone request queued past its deadline
+    eng = _engine(env, analog=False, max_wait=10.0)
+    u = eng.submit(np.arange(5, dtype=np.int32), now=0.0, deadline=0.5)
+    assert eng.poll(now=0.1) == {}
+    res = eng.poll(now=0.6)
+    assert isinstance(res[u], TimedOut) and res[u].tokens.size == 0
+    assert not res[u].ok
+    assert eng.stats["timed_out"] == 1
+    _assert_slot_hygiene(eng)
+
+
+def test_pooled_deadline_keeps_partial_prefix(env):
+    prompts, keys = _traffic(1)
+    # stall every decode step from clock 1 on: the request can never finish,
+    # so its deadline must retire it with the partial tokens it earned
+    plan = FaultPlan(stall_steps=range(1, 1000))
+    eng = _engine(env, plan=plan, max_wait=0.0)
+    base = _engine(env, max_wait=0.0)
+    (u_b,), res_b = _serve(
+        base, [(prompts[0], dict(n_repeats=2, max_new_tokens=8, key=keys[0]))]
+    )
+    u = eng.submit(prompts[0], n_repeats=2, max_new_tokens=8, key=keys[0],
+                   now=0.0, deadline=0.004)
+    res, t = {}, 0.0
+    for _ in range(50):
+        t += 1e-3
+        res.update(eng.pump_step(now=t))
+        if u in res:
+            break
+    r = res[u]
+    assert isinstance(r, TimedOut) and 1 <= r.tokens.size < 8
+    # partial output is a strict PREFIX of the fault-free tokens: timeout
+    # retirement never perturbs the numerics of what was already emitted
+    np.testing.assert_array_equal(r.tokens, res_b[u_b][: r.tokens.size])
+    assert eng.stats["stalled_steps"] > 0
+    _assert_slot_hygiene(eng)
+
+
+# --------------------------------------------------------------------------
+# transient executable faults -> bounded retry at a promoted K
+# --------------------------------------------------------------------------
+
+
+def test_transient_decode_fault_retries_promoted_and_preserves_neighbors(env):
+    prompts, keys = _traffic(3)
+    submits = [
+        (prompts[0], dict(n_repeats=1, max_new_tokens=6, key=keys[0])),
+        (prompts[1], dict(n_repeats=2, max_new_tokens=6, key=keys[1])),
+        (prompts[2], dict(n_repeats=2, max_new_tokens=6, key=keys[2])),
+    ]
+    base_uids, base_res = _serve(_engine(env), list(submits))
+    plan = FaultPlan(exe_faults=[("decode", 2)])
+    eng = _engine(env, plan=plan)
+    uids, res = _serve(eng, list(submits))
+    assert eng.stats["exe_faults"] == 1 and eng.stats["retried"] >= 1
+    affected = _affected_uids(eng)
+    assert affected, "the injected fault must have hit someone"
+    for u, b in zip(uids, base_uids):
+        assert isinstance(res[u], np.ndarray), res[u]  # all survived (1 retry)
+        if u not in affected:  # bit-identity for unaffected requests
+            np.testing.assert_array_equal(res[u], base_res[b])
+    # retried uniform-K requests were promoted one rung up the ladder
+    entry = next(e for e in eng.fault_log if e["kind"] == "exe_fault")
+    for u in entry["retried"]:
+        assert entry["promoted"][u] > 1
+    _assert_slot_hygiene(eng)
+
+
+def test_fault_beyond_retry_budget_fails_structured(env):
+    prompts, keys = _traffic(1)
+    # fail every decode call: the retry also faults -> structured Failed
+    plan = FaultPlan(exe_fault_rate=1.0)
+    eng = _engine(env, plan=plan, max_retries=1)
+    uids, res = _serve(eng, [(prompts[0], dict(n_repeats=1, max_new_tokens=4,
+                                               key=keys[0]))])
+    r = res[uids[0]]
+    assert isinstance(r, Failed) and r.retries == 1
+    assert eng.stats["failed"] == 1 and eng.stats["retried"] == 1
+    _assert_slot_hygiene(eng)
+
+
+def test_poisoned_row_retires_only_that_row(env):
+    prompts, keys = _traffic(2, lens=(7, 19))
+    submits = [
+        (prompts[0], dict(n_repeats=2, max_new_tokens=8, key=keys[0])),
+        (prompts[1], dict(n_repeats=2, max_new_tokens=8, key=keys[1])),
+    ]
+    base_uids, base_res = _serve(_engine(env), list(submits))
+    # poison slot 0's readout a few steps in (token -9 is out-of-vocab)
+    plan = FaultPlan(poison={(2, 0): -9})
+    eng = _engine(env, plan=plan)
+    uids, res = _serve(eng, list(submits))
+    assert eng.stats["poisoned_rows"] == 1
+    affected = _affected_uids(eng)
+    assert len(affected) == 1  # per-row fault: exactly one request touched
+    for u, b in zip(uids, base_uids):
+        assert isinstance(res[u], np.ndarray)
+        if u not in affected:
+            np.testing.assert_array_equal(res[u], base_res[b])
+    _assert_slot_hygiene(eng)
+
+
+# --------------------------------------------------------------------------
+# no-fault path: bit-identical, zero steady-state retraces
+# --------------------------------------------------------------------------
+
+
+def test_empty_fault_plan_is_bit_identical_and_never_retraces(env):
+    prompts, keys = _traffic(3)
+    submits = [
+        (p, dict(n_repeats=2, max_new_tokens=g, key=k))
+        for p, g, k in zip(prompts, (2, 5, 8), keys)
+    ]
+    base_uids, base_res = _serve(_engine(env), list(submits))
+    eng = _engine(env, plan=FaultPlan())  # armed but empty: injects nothing
+    uids, res = _serve(eng, list(submits))
+    for u, b in zip(uids, base_uids):
+        np.testing.assert_array_equal(res[u], base_res[b])
+    traces = eng.trace_count
+    eng.exe_cache.reset_stats()
+    uids2, res2 = _serve(eng, list(submits))  # warm replay
+    for u, b in zip(uids2, base_uids):
+        np.testing.assert_array_equal(res2[u], base_res[b])
+    assert eng.trace_count == traces  # zero steady-state retraces
+    assert eng.exe_cache.stats()["hit_rate"] == 1.0
+    assert eng.fault_log == [] and eng.stats["exe_faults"] == 0
+
+
+# --------------------------------------------------------------------------
+# noise-drift watchdog + graceful precision degradation
+# --------------------------------------------------------------------------
+
+
+def test_watchdog_quiet_at_nominal_and_config_validation(env):
+    eng = _engine(env)
+    probe = np.arange(2 * 16, dtype=np.int32).reshape(2, 16) % 128
+    wd = NoiseDriftWatchdog(eng, probe, key=jax.random.PRNGKey(3))
+    assert wd.baseline_rms > 0
+    for step in range(0, 3 * wd.config.interval, wd.config.interval):
+        assert wd.maybe_probe(step) is None  # healthy device: no events
+    assert all(0.7 < e < 1.4 for _, e in wd.estimates)
+    # interval honored: a mid-interval step does not probe
+    n = len(wd.estimates)
+    assert wd.maybe_probe(wd.estimates[-1][0] + 1) is None
+    assert len(wd.estimates) == n
+    with pytest.raises(ValueError, match="band"):
+        WatchdogConfig(band=(1.1, 1.4))
+    with pytest.raises(ValueError, match="analog"):
+        NoiseDriftWatchdog(_engine(env, analog=False), probe)
+
+
+def test_watchdog_detects_injected_drift_within_budget(env):
+    prompts, keys = _traffic(2, lens=(7, 19))
+    onset = 6  # fault-clock step the hardware jumps to 2x noise
+    plan = FaultPlan(drift=DriftRamp(start=onset, rate=None, max_scale=2.0))
+    eng = _engine(env, plan=plan)
+    probe = np.arange(2 * 16, dtype=np.int32).reshape(2, 16) % 128
+    cfg = WatchdogConfig(interval=2, n_samples=4)
+    wd = NoiseDriftWatchdog(eng, probe, config=cfg, key=jax.random.PRNGKey(3))
+    for i, (p, k) in enumerate(zip(prompts, keys)):
+        eng.submit(p, n_repeats=2, max_new_tokens=8, key=k, now=0.0)
+    event, t = None, 0.0
+    for step in range(60):
+        t += 1e-3
+        eng.pump_step(now=t)
+        if eng.n_in_flight == 0:  # keep the pools decoding under drift
+            eng.submit(prompts[0], n_repeats=2, max_new_tokens=8,
+                       key=keys[0], now=t)
+        event = event or wd.maybe_probe(step)
+        if event is not None:
+            break
+    assert event is not None, "watchdog missed a 2x drift"
+    assert event.estimate > cfg.band[1]
+    # detection budget: the drift was visible at the first probe after the
+    # engine's clock crossed the onset, caught within 2 probe intervals
+    assert event.step <= onset + 2 * cfg.interval
+    # drift response: promote new uniform-K traffic one rung up the ladder
+    eng.promote_tiers(event)
+    assert eng.promoted and eng.stats["promotions"] == 1
+    u = eng.submit(prompts[0], n_repeats=2, max_new_tokens=2, key=keys[0],
+                   now=t + 1e-3)
+    assert 4 in eng.scheduler.pending_tiers()  # K=2 -> K=4
+    eng.flush()
+    # recalibration: hardware repaired (stop injecting), scale re-pinned,
+    # response cleared — new traffic returns to its requested tier
+    eng.fault_plan = None
+    eng.recalibrate()
+    wd.clear()
+    assert not eng.promoted and eng.noise_scale == 1.0
+    assert wd.probe(step=100) is None
+    assert 0.7 < wd.estimates[-1][1] < 1.4
+    eng.submit(prompts[0], n_repeats=2, max_new_tokens=2, key=keys[0],
+               now=t + 2e-3)
+    assert 2 in eng.scheduler.pending_tiers()
+    eng.flush()
+    _assert_slot_hygiene(eng)
+
+
+def test_drift_is_zero_retrace(env):
+    """The drift factor is a runtime operand: serving through a drifting
+    noise floor compiles nothing new."""
+    prompts, keys = _traffic(1)
+    submits = [(prompts[0], dict(n_repeats=2, max_new_tokens=8, key=keys[0]))]
+    eng = _engine(env)
+    _serve(eng, list(submits))  # warm the executables at nominal
+    traces = eng.trace_count
+    eng.exe_cache.reset_stats()
+    eng.fault_plan = FaultPlan(drift=DriftRamp(start=0, rate=None, max_scale=2.0))
+    uids, res = _serve(eng, list(submits))
+    assert isinstance(res[uids[0]], np.ndarray)
+    assert eng.trace_count == traces
+    assert eng.exe_cache.stats()["hit_rate"] == 1.0

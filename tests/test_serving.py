@@ -538,12 +538,14 @@ def test_submit_rejects_empty_prompt(env):
 def test_digital_engine_and_tier_energy_accounting(env):
     """analog_cfg=None serves the digital model: K is a no-op there, so
     mixed-K submissions coalesce into one batch; submissions above max_gen
-    clip; uid results cover every request."""
+    are rejected (no silent clamp); uid results cover every request."""
     eng = ServingEngine(
         env["params"], MODEL, max_gen=4, max_batch=2, max_wait=0.0,
         batch_buckets=(1, 2), seq_buckets=(SB,),
     )
-    u0 = eng.submit(np.arange(10) % MODEL.vocab_size, max_new_tokens=99, now=0.0)
+    with pytest.raises(ValueError, match="max_gen"):
+        eng.submit(np.arange(10) % MODEL.vocab_size, max_new_tokens=99, now=0.0)
+    u0 = eng.submit(np.arange(10) % MODEL.vocab_size, max_new_tokens=4, now=0.0)
     u1 = eng.submit(np.arange(4) % MODEL.vocab_size, n_repeats=4,
                     max_new_tokens=2, now=0.0)
     out = eng.flush()
