@@ -39,15 +39,24 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import atomic_write_json, cache_json
-from repro.core import AnalogConfig, PrecisionProfile, coalesce_runs, repeat_profile_search
+from repro.core import (
+    AnalogConfig,
+    PrecisionProfile,
+    coalesce_runs,
+    online_repeat_profile_search,
+    repeat_profile_search,
+)
 from repro.models import init_energy_tree, init_params, lm
 from repro.models.config import ModelConfig
 from repro.serving import (
     DriftRamp,
     FaultPlan,
     NoiseDriftWatchdog,
+    PolicyConfig,
+    QueueFull,
     RequestFailure,
     ServingEngine,
+    TierSpec,
     TimedOut,
     WatchdogConfig,
 )
@@ -763,6 +772,270 @@ def fault_smoke_bench():
 
 
 # ---------------------------------------------------------------------------
+# overload smoke: SLA-aware precision governor vs no governor, 3x burst
+# ---------------------------------------------------------------------------
+
+#: the governor's tier ladder in the overload replay (uniform K)
+OVERLOAD_TIERS = (1, 2, 4)
+#: SLO every overload request carries (modeled time units; arms the deadline)
+OVERLOAD_SLO = 25.0
+#: floor mix drawn per request: no floor / K=2's accuracy / K=4's accuracy
+OVERLOAD_FLOOR_WEIGHTS = (0.5, 0.3, 0.2)
+
+
+def make_overload_schedule(accs, *, steady_gap=6.0, n_steady=6, n_burst=30,
+                           seed=5, vocab=1024):
+    """Steady arrivals, a 3x burst, then steady recovery traffic. Every
+    request asks for the top tier (K=4) with an SLO; floors are drawn from
+    (None, acc(K=2), acc(K=4)) so most of the burst has demotion headroom
+    but a slice is pinned at the top. Returns [(arrival, prompt, floor,
+    gen, phase)] on the modeled clock."""
+    rng = np.random.default_rng(seed)
+    floors = (None, accs[2], accs[4])
+    sched, t = [], 0.0
+
+    def add(n, gap, phase):
+        nonlocal t
+        for _ in range(n):
+            floor = floors[rng.choice(3, p=OVERLOAD_FLOOR_WEIGHTS)]
+            prompt = rng.integers(0, vocab, int(rng.integers(8, 25)))
+            sched.append((t, prompt, floor, int(rng.integers(2, 5)), phase))
+            t += gap
+
+    add(n_steady, steady_gap, "steady")
+    add(n_burst, steady_gap / 3.0, "burst")  # 3x the steady arrival rate
+    add(n_steady, steady_gap, "recover")
+    return sched
+
+
+def _replay_overload(eng, schedule, *, slo=OVERLOAD_SLO, t_unit=1.0,
+                     base_tick=0.25):
+    """Drive one arrival schedule through an engine on an
+    energy-proportional virtual clock.
+
+    The fused kernel makes K free in *host* wall time, so overload is
+    modeled the way time-redundant analog hardware pays for it: each
+    pump's clock advance is ``base_tick`` (scheduling/prefill overhead)
+    plus ``t_unit * E_tier/E_(K=1)`` per decode step each active tier ran
+    (pools share one accelerator, so active tiers add up). Demotion then
+    genuinely buys modeled latency as well as energy. Deterministic:
+    replays of the same schedule produce identical clocks and batches.
+    """
+    base_e = eng.tier_energy_per_token(1)
+    cost = {k: eng.tier_energy_per_token(k) / base_e for k in OVERLOAD_TIERS}
+    t, i, pumps = 0.0, 0, 0
+    arrivals, completions = {}, {}
+    rejected = []  # schedule indices refused with QueueFull
+    while i < len(schedule) or eng.n_in_flight:
+        if not eng.n_in_flight and i < len(schedule) and schedule[i][0] > t:
+            t = schedule[i][0]  # idle: jump the clock to the next arrival
+        while i < len(schedule) and schedule[i][0] <= t:
+            _, prompt, floor, gen, _ = schedule[i]
+            try:
+                uid = eng.submit(prompt, n_repeats=max(OVERLOAD_TIERS),
+                                 max_new_tokens=gen, now=t,
+                                 target_latency=slo, accuracy_floor=floor)
+                arrivals[uid] = (t, i)
+            except QueueFull:
+                rejected.append(i)
+            i += 1
+        before = dict(eng.stats["tier_decode_steps"])
+        res = eng.pump_step(now=t)
+        dt = base_tick
+        for tier, n in eng.stats["tier_decode_steps"].items():
+            d = n - before.get(tier, 0)
+            if d:
+                dt += d * t_unit * cost[tier]
+        t += dt
+        for uid, r in res.items():
+            completions[uid] = (t - arrivals[uid][0], r)
+        pumps += 1
+        assert pumps < 20000, "overload replay hung"
+    return {"arrivals": arrivals, "completions": completions,
+            "rejected": rejected, "end": t}
+
+
+def _summarize_overload(eng, rec, schedule, accs):
+    """Per-side record: SLA outcomes, burst-window energy/token at the
+    tiers requests were actually SERVED at, realized accuracy proxy, and
+    floor-violation count."""
+    lat_ok = []
+    timeouts = 0
+    served_tok, served_e, served_acc = 0, 0.0, 0.0
+    burst_tok, burst_e = 0, 0.0
+    violations = 0
+    for uid, (lat, r) in rec["completions"].items():
+        if isinstance(r, TimedOut):
+            timeouts += 1
+            continue
+        if not isinstance(r, np.ndarray):
+            continue
+        lat_ok.append(lat)
+        _, idx = rec["arrivals"][uid]
+        floor, phase = schedule[idx][2], schedule[idx][4]
+        tier = eng.served_tiers[uid]
+        n = int(r.size)
+        e = eng.tier_energy_per_token(tier)
+        served_tok += n
+        served_e += n * e
+        served_acc += n * accs[tier]
+        if phase == "burst":
+            burst_tok += n
+            burst_e += n * e
+        if floor is not None and accs[tier] < floor - 1e-9:
+            violations += 1
+    p = _percentiles(lat_ok) if lat_ok else {"p50_ms": None, "p99_ms": None}
+    return {
+        "completed": len(lat_ok),
+        "timeouts": timeouts,
+        "rejected": len(rec["rejected"]),
+        # modeled-clock latencies (time units, not ms despite the key names)
+        "p50": p["p50_ms"] / 1e3 if lat_ok else None,
+        "p99": p["p99_ms"] / 1e3 if lat_ok else None,
+        "energy_per_token_aj": served_e / max(1, served_tok),
+        "burst_energy_per_token_aj": (burst_e / burst_tok) if burst_tok else None,
+        "realized_accuracy": served_acc / max(1, served_tok),
+        "floor_violations": violations,
+    }
+
+
+@cache_json("serving_bench_overload")
+def overload_smoke_bench():
+    """Replay a 3x overload burst through the SAME traffic twice — once with
+    the SLA-aware precision governor, once without — and record the
+    graceful-degradation contract main() asserts: with the governor on,
+    demotion engages before any shedding, modeled p99 stays under the SLO,
+    strictly fewer requests are lost (TimedOut + QueueFull + shed) than
+    governor-off, burst energy/token drops below governor-off's, no
+    request is ever served below its accuracy floor, the governor walks
+    back to nominal after the drain, and the whole episode — demotions,
+    promotions, retier sweeps — causes ZERO steady-state retraces (tier
+    reassignment only ever lands on already-warmed executables). Also runs
+    the online profile re-trim (``online_repeat_profile_search``) against
+    the same accuracy proxy as the between-epochs maintenance step."""
+    cfg = ModelConfig(**dict(SMOKE_MODEL, name="serve-bench-overload"))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    # a genuinely noisy device (low per-site energy): K visibly buys
+    # accuracy, so the tier ladder has real floors to respect
+    energies = init_energy_tree(cfg, 20.0)
+    shot = AnalogConfig.shot()
+    key = jax.random.PRNGKey(21)
+    eval_toks = jax.random.randint(key, (4, 32), 0, cfg.vocab_size)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+
+    def greedy_tokens(analog):
+        h, _ = lm.forward_hidden(
+            params, {"tokens": eval_toks}, cfg, mode="train", analog=analog
+        )
+        return np.asarray(jnp.argmax(jnp.matmul(h, head), axis=-1))
+
+    ref = greedy_tokens(None)
+
+    def agreement(profile):
+        analog = lm.AnalogSpec(cfg=shot, energies=energies, key=key,
+                               profile=profile)
+        return float((greedy_tokens(analog) == ref).mean())
+
+    # measured accuracy proxy per tier: the governor's demotion metadata
+    accs = {k: agreement(PrecisionProfile.uniform(k, cfg.n_layers))
+            for k in OVERLOAD_TIERS}
+    schedule = make_overload_schedule(accs, vocab=cfg.vocab_size)
+    policy = PolicyConfig(
+        tiers=tuple(TierSpec(k, accs[k]) for k in OVERLOAD_TIERS),
+        demote_at=1.5, promote_at=0.5, shed_at=5.0, min_dwell=2,
+    )
+
+    def run_side(with_governor):
+        eng = ServingEngine(
+            params, cfg, analog_cfg=shot, energies=energies, max_gen=6,
+            max_batch=4, max_wait=0.0, batch_buckets=(1, 2, 4),
+            seq_buckets=(32,), continuous=True, pool_slots=2,
+            k_ladder=OVERLOAD_TIERS, max_queue=8,
+            policy=policy if with_governor else None,
+        )
+        rec = None
+        for replay in range(2):  # replay 0 is warmup (compiles)
+            if replay == 1:
+                eng.exe_cache.reset_stats()
+            traces_before = eng.trace_count
+            rec = _replay_overload(eng, schedule)
+            t = rec["end"]
+            if eng.governor is not None:  # idle ticks: walk back to nominal
+                for _ in range(2 * policy.min_dwell + 2):
+                    t += 1.0
+                    eng.pump_step(now=t)
+            rec["steady_retraces"] = eng.trace_count - traces_before
+        side = _summarize_overload(eng, rec, schedule, accs)
+        side["steady_retraces"] = rec["steady_retraces"]
+        side["cache"] = eng.exe_cache.stats()
+        side["shed"] = eng.stats["shed"]
+        if eng.governor is not None:
+            gov = eng.governor
+            side["demoted"] = eng.stats["demoted"]
+            side["promoted_back"] = eng.stats["promoted_back"]
+            side["transitions"] = eng.stats["policy_transitions"]
+            side["final_mode"] = gov.mode
+            first = {}
+            for e in gov.events:
+                first.setdefault(e.kind, e.step)
+            side["first_event_step"] = first
+            side["demote_before_shed"] = "demote" in first and (
+                "shed_on" not in first or first["demote"] < first["shed_on"]
+            )
+        return side
+
+    on = run_side(True)
+    off = run_side(False)
+    lost_on = on["timeouts"] + on["rejected"]
+    lost_off = off["timeouts"] + off["rejected"]
+
+    # --- online re-trim: the between-epochs profile maintenance step -------
+    base = lm.profile_token_energy(
+        cfg, energies, PrecisionProfile.uniform(1, cfg.n_layers))
+    weights = tuple(
+        lm.profile_token_energy(
+            cfg, energies,
+            PrecisionProfile(
+                tuple(2 if i == l else 1 for i in range(cfg.n_layers)),
+                name="w"),
+        ) - base
+        for l in range(cfg.n_layers)
+    )
+    acc_fn = lambda reps: agreement(PrecisionProfile(tuple(reps), name="online"))
+    frozen_hi = PrecisionProfile.uniform(max(OVERLOAD_TIERS), cfg.n_layers)
+    retrim = online_repeat_profile_search(
+        acc_fn, frozen=frozen_hi, float_acc=accs[max(OVERLOAD_TIERS)],
+        max_degradation=0.05, k_levels=OVERLOAD_TIERS, weights=weights,
+    )
+    frozen_cost = sum(w * k for w, k in zip(weights, frozen_hi.repeats))
+    repair = online_repeat_profile_search(  # drifted floor: warm-start repair
+        acc_fn, frozen=PrecisionProfile.uniform(1, cfg.n_layers),
+        float_acc=accs[max(OVERLOAD_TIERS)], max_degradation=0.05,
+        k_levels=OVERLOAD_TIERS, weights=weights,
+    )
+    return {
+        "backend": jax.default_backend(),
+        "accuracy_metric": "greedy token agreement vs digital, all prefix positions",
+        "tier_accuracy": {str(k): accs[k] for k in OVERLOAD_TIERS},
+        "slo": OVERLOAD_SLO,
+        "n_requests": len(schedule),
+        "burst_x": 3,
+        "governor_on": on,
+        "governor_off": off,
+        "lost": {"on": lost_on + on["shed"], "off": lost_off + off["shed"]},
+        "online_retrim": {
+            "trim": {"repeats": list(retrim.repeats), "feasible": retrim.feasible,
+                     "repaired": retrim.repaired, "n_evals": retrim.n_evals,
+                     "cost": retrim.cost, "frozen_cost": frozen_cost,
+                     "accuracy": retrim.accuracy},
+            "repair": {"repeats": list(repair.repeats),
+                       "feasible": repair.feasible, "repaired": repair.repaired,
+                       "n_evals": repair.n_evals, "accuracy": repair.accuracy},
+        },
+    }
+
+
+# ---------------------------------------------------------------------------
 
 
 def _bench(model_kw, n_requests, gen, max_len, tiers=TIERS, weights=TIER_WEIGHTS):
@@ -857,6 +1130,34 @@ def _write_trajectory(out, smoke: bool) -> str:
                               "tokens_total": c["tokens_total"]},
         },
     }
+    if "policy" in out:  # the SLA-governor frontier, machine-readable
+        p = out["policy"]
+        on, off = p["governor_on"], p["governor_off"]
+        record["policy"] = {
+            "slo": p["slo"],
+            "burst_x": p["burst_x"],
+            "tier_accuracy": p["tier_accuracy"],
+            "frontier": {
+                side: {
+                    "energy_per_token_aj": rec["energy_per_token_aj"],
+                    "burst_energy_per_token_aj": rec["burst_energy_per_token_aj"],
+                    "p99": rec["p99"],
+                    "realized_accuracy": rec["realized_accuracy"],
+                    "timeouts": rec["timeouts"],
+                    "rejected": rec["rejected"],
+                    "shed": rec["shed"],
+                }
+                for side, rec in (("governor_on", on), ("governor_off", off))
+            },
+            "demoted": on["demoted"],
+            "promoted_back": on["promoted_back"],
+            "transitions": on["transitions"],
+            "demote_before_shed": on["demote_before_shed"],
+            "floor_violations": on["floor_violations"],
+            "lost": p["lost"],
+            "zero_steady_retraces": on["steady_retraces"] == 0,
+            "online_retrim": p["online_retrim"],
+        }
     if "faults" in out:  # the fault-tolerance contract, machine-readable
         fi, fd = out["faults"]["inject"], out["faults"]["drift"]
         record["faults"] = {
@@ -899,11 +1200,16 @@ def main() -> None:
     ap.add_argument("--faults", action="store_true",
                     help="also run the fault-tolerance smoke (injected "
                          "faults, drift watchdog, graceful degradation)")
+    ap.add_argument("--overload", action="store_true",
+                    help="also replay a 3x overload burst with and without "
+                         "the SLA-aware precision governor")
     args = ap.parse_args()
     fn = serving_bench_smoke if args.smoke else serving_bench
     out = fn(force=args.force)
     if args.faults:
         out["faults"] = fault_smoke_bench(force=args.force)
+    if args.overload:
+        out["policy"] = overload_smoke_bench(force=args.force)
     records = [("dense", out)]
     if "griffin" in out:
         records.append(("griffin", out["griffin"]))
@@ -962,6 +1268,62 @@ def main() -> None:
         assert c["speedup_x"] >= c["speedup_target_x"], (
             f"continuous steady throughput {c['speedup_x']:.2f}x < "
             f"{c['speedup_target_x']}x target (attempts: {c['speedup_attempts']})"
+        )
+    if "policy" in out:
+        p = out["policy"]
+        on, off = p["governor_on"], p["governor_off"]
+        print(f"--- SLA governor ({p['burst_x']}x overload burst, "
+              f"{p['n_requests']} requests, SLO {p['slo']:.0f}) ---")
+        print(f"{'':>14} {'p99':>8} {'e/tok_aJ':>10} {'burst_e':>9} "
+              f"{'acc':>6} {'timeout':>8} {'reject':>7} {'shed':>5}")
+        for label, rec in (("governor_on", on), ("governor_off", off)):
+            burst_e = rec["burst_energy_per_token_aj"]
+            print(f"{label:>14} {rec['p99']:>8.1f} "
+                  f"{rec['energy_per_token_aj']:>10.0f} "
+                  f"{burst_e if burst_e is None else round(burst_e):>9} "
+                  f"{rec['realized_accuracy']:>6.3f} {rec['timeouts']:>8} "
+                  f"{rec['rejected']:>7} {rec['shed']:>5}")
+        print(f"demoted={on['demoted']} promoted_back={on['promoted_back']} "
+              f"transitions={on['transitions']} "
+              f"final_mode={on['final_mode']} "
+              f"lost on/off={p['lost']['on']}/{p['lost']['off']} "
+              f"retraces={on['steady_retraces']}")
+        rt = p["online_retrim"]
+        print(f"online re-trim: {rt['trim']['repeats']} "
+              f"(cost {rt['trim']['cost']:.0f} vs frozen "
+              f"{rt['trim']['frozen_cost']:.0f}, {rt['trim']['n_evals']} "
+              f"evals) repair: {rt['repair']['repeats']} "
+              f"(repaired={rt['repair']['repaired']})")
+        # the graceful-degradation contract, in shedding order
+        assert on["demoted"] > 0, "the burst never engaged demotion"
+        assert on["demote_before_shed"], "shedding engaged before demotion"
+        assert on["p99"] is not None and on["p99"] <= p["slo"], (
+            f"governor-on p99 {on['p99']} blew the SLO {p['slo']}"
+        )
+        assert p["lost"]["off"] > 0, (
+            "the burst did not overload the governor-off engine: the "
+            "comparison is vacuous"
+        )
+        assert p["lost"]["on"] < p["lost"]["off"], (
+            f"governor lost no fewer requests ({p['lost']['on']} vs "
+            f"{p['lost']['off']})"
+        )
+        assert on["burst_energy_per_token_aj"] < off["burst_energy_per_token_aj"], (
+            "demotion did not cut burst energy/token"
+        )
+        assert on["floor_violations"] == 0 and off["floor_violations"] == 0, (
+            "a request was served below its accuracy floor"
+        )
+        assert on["final_mode"] == "nominal", (
+            f"governor never recovered after the drain: {on['final_mode']}"
+        )
+        assert on["steady_retraces"] == 0 and off["steady_retraces"] == 0, (
+            "tier reassignment re-traced in steady state"
+        )
+        assert on["cache"]["hit_rate"] == 1.0
+        assert rt["trim"]["feasible"] and rt["repair"]["feasible"]
+        assert rt["trim"]["cost"] <= rt["trim"]["frozen_cost"], (
+            "online re-trim made the frozen profile more expensive"
         )
     if "faults" in out:
         fi, fd = out["faults"]["inject"], out["faults"]["drift"]

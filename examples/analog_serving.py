@@ -18,9 +18,16 @@ Two modes:
               admission, early retirement) instead of run-to-completion
               batches.
 
+              admission, early retirement) instead of run-to-completion
+              batches. Add --slo SECONDS to attach the SLA-aware precision
+              governor: every request carries a latency SLO and a random
+              accuracy floor, the middle of the replay arrives as a 3x
+              burst, and the governor demotes/promotes precision tiers
+              against live queue pressure (policy events are printed).
+
 Run:  PYTHONPATH=src python examples/analog_serving.py [--energy 10.0]
       PYTHONPATH=src python examples/analog_serving.py --traffic \
-          [--requests 24] [--gen 8] [--continuous]
+          [--requests 24] [--gen 8] [--continuous] [--slo 2.0]
 """
 import argparse
 import time
@@ -40,7 +47,7 @@ from repro.models import (
 )
 from repro.models.config import ModelConfig
 from repro.data.pipeline import TokenTaskConfig, markov_batch
-from repro.serving import ServingEngine
+from repro.serving import PolicyConfig, ServingEngine, TierSpec, TimedOut
 
 CFG = ModelConfig(
     name="serve-demo", family="dense", n_layers=4, d_model=256, n_heads=8,
@@ -73,6 +80,33 @@ def _trained_params():
     return out["state"]["params"]
 
 
+def _tier_agreement(params, energies, ks):
+    """Greedy-token-agreement accuracy stand-in per uniform-K tier: the
+    metadata the governor's demotion floors are enforced against."""
+    from repro.core import PrecisionProfile
+    from repro.models import lm
+
+    key = jax.random.PRNGKey(5)
+    toks = jax.random.randint(key, (2, 32), 0, CFG.vocab_size)
+    head = params["embed"].T if CFG.tie_embeddings else params["lm_head"]
+
+    def greedy(analog):
+        h, _ = lm.forward_hidden(
+            params, {"tokens": toks}, CFG, mode="train", analog=analog
+        )
+        return np.asarray(jnp.argmax(jnp.matmul(h, head), axis=-1))
+
+    ref = greedy(None)
+    out = {}
+    for k in ks:
+        spec = AnalogSpec(
+            cfg=AnalogConfig.shot(), energies=energies, key=key,
+            profile=PrecisionProfile.uniform(k, CFG.n_layers),
+        )
+        out[k] = float((greedy(spec) == ref).mean())
+    return out
+
+
 def run_traffic(args, params):
     """Replay a mixed-precision load through the serving engine."""
     tiers, weights = (1, 2, 4), (0.5, 0.3, 0.2)
@@ -85,6 +119,15 @@ def run_traffic(args, params):
         # route a slice of traffic to the per-layer profile tier
         tiers, weights = (1, 2, 4, "cli"), (0.4, 0.25, 0.15, 0.2)
     energies = init_energy_tree(CFG, args.energy)
+    policy, accs = None, {}
+    if args.slo is not None:
+        accs = _tier_agreement(params, energies, (1, 2, 4))
+        print(f"tier agreement vs digital: "
+              + ", ".join(f"K={k}: {a:.3f}" for k, a in sorted(accs.items())))
+        policy = PolicyConfig(
+            tiers=tuple(TierSpec(k, accs[k]) for k in (1, 2, 4)),
+            demote_at=1.0, promote_at=0.25, shed_at=6.0, min_dwell=2,
+        )
     seq_buckets = [32]
     while seq_buckets[-1] < args.prompt_len:
         seq_buckets.append(seq_buckets[-1] * 2)
@@ -92,7 +135,7 @@ def run_traffic(args, params):
         params, CFG, analog_cfg=AnalogConfig.shot(backend=args.backend),
         energies=energies, max_gen=args.gen, max_batch=8, max_wait=0.5,
         batch_buckets=(1, 2, 4, 8), seq_buckets=tuple(seq_buckets),
-        profiles=profiles, continuous=args.continuous,
+        profiles=profiles, continuous=args.continuous, policy=policy,
     )
     rng = np.random.default_rng(0)
     reqs = []
@@ -106,13 +149,30 @@ def run_traffic(args, params):
                      k if isinstance(k, str) else int(k), gen))
 
     t0 = time.perf_counter()
-    uid_tier = {}
+    uid_tier, results = {}, {}
+    t = 0.0
     for i, (prompt, k, gen) in enumerate(reqs):
         tier_kw = {"profile": k} if isinstance(k, str) else {"n_repeats": k}
-        uid = engine.submit(prompt, max_new_tokens=gen, now=i * 1e-3, **tier_kw)
+        slo_kw = {}
+        if args.slo is not None:
+            # the middle third of the replay arrives as a 3x burst; each
+            # request carries the SLO and a random accuracy floor
+            t += 1e-3 / 3 if args.requests // 3 <= i < 2 * args.requests // 3 else 1e-3
+            floor = (None, accs[2], accs[4])[rng.choice(3, p=(0.5, 0.3, 0.2))]
+            slo_kw = {"target_latency": args.slo, "accuracy_floor": floor}
+        else:
+            t = i * 1e-3
+        uid = engine.submit(prompt, max_new_tokens=gen, now=t, **tier_kw, **slo_kw)
         uid_tier[uid] = k
-    results = engine.flush()
+        results.update(engine.poll(now=t))
+    while engine.n_in_flight:  # drain on the virtual clock (governor live)
+        t += 1e-2
+        results.update(
+            engine.pump_step(now=t) if args.continuous else engine.poll(now=t)
+        )
     wall = time.perf_counter() - t0
+    timed_out = {u for u, r in results.items() if isinstance(r, TimedOut)}
+    results = {u: r for u, r in results.items() if u not in timed_out}
 
     total_toks = sum(len(v) for v in results.values())
     print(f"replayed {args.requests} requests ({total_toks} tokens) "
@@ -120,7 +180,7 @@ def run_traffic(args, params):
           f"[backend={args.backend}]")
     for k in tiers:
         uids = [u for u, t in uid_tier.items() if t == k]
-        toks = sum(len(results[u]) for u in uids)
+        toks = sum(len(results[u]) for u in uids if u in results)
         # true per-tier spend: sum_l K_l * E_l * MACs_l (lm_head is digital)
         e_tok = engine.tier_energy_per_token(k)
         label = f"K={k}" if not isinstance(k, str) else (
@@ -141,6 +201,26 @@ def run_traffic(args, params):
               f"{s['retired']} retired in-flight, {s['decode_steps']} pool "
               f"steps ({s['decode_slot_steps']} row-slots, "
               f"{active:.0%} occupancy)")
+    if engine.governor is not None:
+        gov, s = engine.governor, engine.stats
+        served = {}  # tokens by the tier each request was SERVED at
+        for uid, toks in results.items():
+            tier = engine.served_tiers.get(uid, uid_tier[uid])
+            served[tier] = served.get(tier, 0) + len(toks)
+        total = sum(served.values())
+        blended = sum(
+            n * engine.tier_energy_per_token(tier) for tier, n in served.items()
+        ) / max(1, total)
+        print(f"governor: mode={gov.mode} demoted={s['demoted']} "
+              f"promoted_back={s['promoted_back']} shed={s['shed']} "
+              f"timed_out={len(timed_out)} "
+              f"transitions={s['policy_transitions']}")
+        print(f"  served tier mix {dict(sorted(served.items(), key=str))} -> "
+              f"blended {blended / 1e6:.3f} pJ/token")
+        for e in gov.events:
+            print(f"  [{e.kind:>8}] policy step {e.step} pressure="
+                  f"{e.pressure:.2f} queue={e.queue_depth} moved={e.moved} "
+                  f"{e.detail}")
     sample = results[min(results)]
     print("sample tokens:", sample[:12].tolist())
 
@@ -165,6 +245,11 @@ def main():
                          "of run-to-completion batches (--traffic mode)")
     ap.add_argument("--requests", type=int, default=24,
                     help="number of requests in --traffic mode")
+    ap.add_argument("--slo", type=float, default=None,
+                    help="per-request latency SLO in virtual seconds: attach "
+                         "the SLA-aware precision governor, replay the middle "
+                         "third as a 3x burst, and print policy events "
+                         "(--traffic mode)")
     ap.add_argument("--profile", default=None,
                     help="comma-separated per-layer K schedule (e.g. 4,2,1,1)"
                          " served as its own precision tier in --traffic mode")

@@ -47,6 +47,7 @@ from repro.core.search import (
     ProfileSearchResult,
     SearchResult,
     min_energy_search,
+    online_repeat_profile_search,
     repeat_profile_search,
 )
 
@@ -79,6 +80,7 @@ __all__ = [
     "learn_energies",
     "log_energy_penalty",
     "min_energy_search",
+    "online_repeat_profile_search",
     "repeat_profile_search",
     "repeat_total_energy",
     "noise_bits",

@@ -41,11 +41,20 @@ class PrecisionProfile:
     scan segments — every scan group then runs as its own segment. That is
     the *unrolled-loop test oracle* for the segmented scan; serving always
     keeps the default.
+
+    ``accuracy`` is optional metadata: the schedule's measured accuracy
+    proxy from the search eval that learned it
+    (``repro.core.search.repeat_profile_search`` /
+    ``eval_profile_accuracy``). The serving policy reads it to enforce
+    per-request accuracy floors when demoting under overload. It is NOT
+    part of the profile's identity (``cache_key`` ignores it — the trace
+    depends only on the repeats).
     """
 
     repeats: Tuple[int, ...]
     name: str = "profile"
     coalesce: bool = True
+    accuracy: Optional[float] = None
 
     def __post_init__(self):
         reps = tuple(int(k) for k in self.repeats)
@@ -56,6 +65,8 @@ class PrecisionProfile:
         object.__setattr__(self, "repeats", reps)
         if not self.name:
             raise ValueError("a profile needs a non-empty name")
+        if self.accuracy is not None:
+            object.__setattr__(self, "accuracy", float(self.accuracy))
 
     # -- shape ---------------------------------------------------------------
 
@@ -100,11 +111,18 @@ class PrecisionProfile:
     # -- persistence (the freeze step of learn -> freeze -> serve) -----------
 
     def to_json(self) -> dict:
-        return {"name": self.name, "repeats": list(self.repeats)}
+        obj = {"name": self.name, "repeats": list(self.repeats)}
+        if self.accuracy is not None:
+            obj["accuracy"] = self.accuracy
+        return obj
 
     @classmethod
     def from_json(cls, obj: dict) -> "PrecisionProfile":
-        return cls(repeats=tuple(obj["repeats"]), name=obj.get("name", "profile"))
+        return cls(
+            repeats=tuple(obj["repeats"]),
+            name=obj.get("name", "profile"),
+            accuracy=obj.get("accuracy"),
+        )
 
     def save(self, path: str) -> None:
         with open(path, "w") as f:

@@ -20,16 +20,30 @@ from repro.serving.engine import (
     TimedOut,
 )
 from repro.serving.faults import (
+    BoundedLog,
     DriftRamp,
     FaultPlan,
     QueueFull,
     TransientExecutableFault,
 )
-from repro.serving.monitor import DriftEvent, NoiseDriftWatchdog, WatchdogConfig
+from repro.serving.monitor import (
+    DriftEvent,
+    LoadSignals,
+    NoiseDriftWatchdog,
+    WatchdogConfig,
+    load_signals,
+)
+from repro.serving.policy import (
+    PolicyConfig,
+    PolicyEvent,
+    PrecisionGovernor,
+    TierSpec,
+)
 from repro.serving.pool import DecodePool, SlotAllocator, SlotRecord
 from repro.serving.scheduler import Request, TierScheduler
 
 __all__ = [
+    "BoundedLog",
     "DEFAULT_BATCH_BUCKETS",
     "DEFAULT_SEQ_BUCKETS",
     "DecodePool",
@@ -38,7 +52,11 @@ __all__ = [
     "ExecutableCache",
     "Failed",
     "FaultPlan",
+    "LoadSignals",
     "NoiseDriftWatchdog",
+    "PolicyConfig",
+    "PolicyEvent",
+    "PrecisionGovernor",
     "PrecisionProfile",
     "QueueFull",
     "Request",
@@ -47,11 +65,13 @@ __all__ = [
     "SlotAllocator",
     "SlotRecord",
     "TierScheduler",
+    "TierSpec",
     "TimedOut",
     "TransientExecutableFault",
     "WatchdogConfig",
     "aot_compile",
     "bucket_shape",
+    "load_signals",
     "next_bucket",
     "pad_to_bucket",
     "pool_shape",

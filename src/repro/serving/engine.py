@@ -82,7 +82,13 @@ from repro.serving.bucketing import (
     pool_shape,
 )
 from repro.serving.cache import ExecutableCache, aot_compile
-from repro.serving.faults import FaultPlan, QueueFull, TransientExecutableFault
+from repro.serving.faults import (
+    BoundedLog,
+    FaultPlan,
+    QueueFull,
+    TransientExecutableFault,
+)
+from repro.serving.policy import PolicyConfig, PrecisionGovernor
 from repro.serving.pool import DecodePool
 from repro.serving.scheduler import Request, TierScheduler
 
@@ -181,6 +187,8 @@ class ServingEngine:
         fault_plan: Optional[FaultPlan] = None,
         max_retries: int = 1,
         k_ladder: Sequence[int] = (1, 2, 4, 8),
+        fault_log_maxlen: Optional[int] = 4096,
+        policy: Optional[PolicyConfig] = None,
     ):
         if max_retries < 0:
             raise ValueError(f"max_retries must be >= 0, got {max_retries}")
@@ -265,10 +273,6 @@ class ServingEngine:
         #: monotone per-decode-step-attempt counter — the fault plan's clock
         #: (advances on stalled steps too, so schedules can't wedge a drain)
         self._fault_clock = 0
-        #: engine-side record of every fault consequence: which uids were
-        #: retried/failed/timed out, and every drift response — the bench and
-        #: tests derive the affected-request set from this
-        self.fault_log: List[dict] = []
         self.stats = {
             "requests": 0,
             "batches": 0,
@@ -291,7 +295,45 @@ class ServingEngine:
             "exe_faults": 0,  # transient executable failures absorbed
             "poisoned_rows": 0,  # corrupted decode rows detected + retired
             "promotions": 0,  # drift-response tier promotions activated
+            # SLA policy (serving/policy.py) + bounded-log accounting
+            "shed": 0,  # submissions rejected by the governor's last rung
+            "demoted": 0,  # queued requests retiered down under pressure
+            "promoted_back": 0,  # queued requests restored after the drain
+            "policy_transitions": 0,  # governor mode flips (dwell-gated)
+            "dropped_events": 0,  # fault_log entries evicted by the bound
+            # per-tier realized work: tier -> generated tokens / decode
+            # steps dispatched (the energy-attribution surface: multiply by
+            # tier_energy_per_token for realized spend)
+            "tier_tokens": {},
+            "tier_decode_steps": {},
         }
+        #: engine-side record of every fault consequence and policy action:
+        #: which uids were retried/failed/timed out/retiered, and every
+        #: drift response — the bench and tests derive the affected-request
+        #: set from this. Ring-bounded (``fault_log_maxlen``): evictions
+        #: are counted in stats["dropped_events"], never silently lost.
+        self.fault_log: List[dict] = BoundedLog(
+            maxlen=fault_log_maxlen, on_drop=self._note_dropped_events
+        )
+        #: uid -> tier the request was actually dispatched at (set when it
+        #: enters a prefill batch; governor demotions land *before*
+        #: dispatch, so this is the ground truth for accuracy-floor audits
+        #: and the bench's realized accuracy proxy). A fault retry that
+        #: re-dispatches at a promoted tier overwrites its entry.
+        self.served_tiers: Dict[int, object] = {}
+        #: SLA-aware precision governor (None without a policy config)
+        self.governor: Optional[PrecisionGovernor] = None
+        if policy is not None:
+            self.governor = PrecisionGovernor(self, policy)
+
+    def _note_dropped_events(self, n: int) -> None:
+        """BoundedLog eviction hook: surface ring-buffer drops as a stat."""
+        self.stats["dropped_events"] += n
+
+    def _bump_tier(self, stat: str, tier, n: int) -> None:
+        """Accumulate per-tier realized work (tokens / decode steps)."""
+        d = self.stats[stat]
+        d[tier] = d.get(tier, 0) + n
 
     # -- request intake ------------------------------------------------------
 
@@ -349,6 +391,9 @@ class ServingEngine:
         key: Optional[Array] = None,
         now: Optional[float] = None,
         deadline: Optional[float] = None,
+        target_latency: Optional[float] = None,
+        accuracy_floor: Optional[float] = None,
+        max_degradation: Optional[float] = None,
     ) -> int:
         """Enqueue one request; returns its uid (results key in poll()).
 
@@ -368,8 +413,24 @@ class ServingEngine:
         Deadlines are enforced on clocked ``poll``/``pump_step`` calls;
         ``flush()`` drains everything and checks none (like ``max_wait``).
 
+        SLO fields (the precision governor's inputs, serving/policy.py):
+        ``target_latency`` is a *relative* latency target in seconds from
+        arrival — it defaults ``deadline`` to ``arrival + target_latency``
+        when no explicit deadline is given, and feeds the governor's
+        deadline-headroom urgency signal. ``accuracy_floor`` bounds how far
+        the governor may demote this request under overload (the minimum
+        acceptable tier accuracy); ``max_degradation`` expresses the same
+        floor relative to the *requested* tier's measured accuracy
+        (``floor = acc(requested tier) - max_degradation``, the paper's
+        degradation form — requires a governor whose table prices the
+        requested tier). Without a governor the floors are inert metadata
+        and ``target_latency`` still arms the deadline.
+
         Raises :class:`~repro.serving.faults.QueueFull` when the scheduler
-        queue is at its ``max_queue`` high-water mark (backpressure), and
+        queue is at its ``max_queue`` high-water mark (backpressure), when
+        the governor is **shedding** (the policy's last rung: every queued
+        request is already at its accuracy floor and pressure is still
+        above the shed threshold), and
         ``ValueError`` for requests the engine could never serve: an empty
         prompt, a prompt longer than the largest seq bucket, or a
         ``max_new_tokens`` outside ``[1, max_gen]`` (the decode budget is
@@ -401,6 +462,28 @@ class ServingEngine:
             )
         if n_repeats < 1:
             raise ValueError(f"n_repeats must be >= 1, got {n_repeats}")
+        if target_latency is not None and target_latency <= 0.0:
+            raise ValueError(
+                f"target_latency must be > 0 seconds, got {target_latency}"
+            )
+        if accuracy_floor is not None and max_degradation is not None:
+            raise ValueError(
+                "pass either accuracy_floor or max_degradation, not both: "
+                "max_degradation is the floor expressed relative to the "
+                "requested tier's accuracy"
+            )
+        if max_degradation is not None:
+            if max_degradation < 0.0:
+                raise ValueError(
+                    f"max_degradation must be >= 0, got {max_degradation}"
+                )
+            if self.governor is None:
+                raise ValueError(
+                    "max_degradation needs a policy governor: the floor is "
+                    "relative to the requested tier's measured accuracy, "
+                    "which lives in the governor's tier table (pass "
+                    "accuracy_floor for an absolute bound instead)"
+                )
         if self.continuous:
             # a pool slot must hold the prompt's seq bucket + decode budget
             sb = next_bucket(tokens.size, self.seq_buckets)
@@ -435,6 +518,27 @@ class ServingEngine:
             # deliberately distinct, so it must stay a profile tier)
             if p.is_uniform and p.coalesce:
                 n_repeats, profile_id = int(p.repeats[0]), None
+        if max_degradation is not None:
+            # the paper's degradation form: floor relative to the requested
+            # tier's measured accuracy (raises if the tier is unpriced)
+            requested = profile_id if profile_id is not None else int(n_repeats)
+            accuracy_floor = (
+                self.governor.tier_accuracy(requested) - float(max_degradation)
+            )
+        if self.governor is not None and self.governor.shedding:
+            # the policy's last rung: demotion headroom is exhausted, so new
+            # traffic is rejected instead of queued past every deadline
+            self.stats["shed"] += 1
+            self.fault_log.append({
+                "kind": "shed", "clock": self._fault_clock,
+                "queue_depth": self.scheduler.n_pending,
+            })
+            raise QueueFull(
+                f"precision governor is shedding load: every queued request "
+                f"is already at its accuracy floor and pressure is still "
+                f"above the shed threshold ({self.scheduler.n_pending} "
+                "pending); retry after the queue drains"
+            )
         uid = self._uid
         self._uid += 1
         if key is None:
@@ -447,16 +551,27 @@ class ServingEngine:
             # ladder until recalibration clears the event (queued/in-flight
             # requests keep their tier — their noise keys already bind them)
             n_repeats = self._promote_k(int(n_repeats))
+        arrival = self._now(now, "submit")
+        if deadline is None and target_latency is not None:
+            # the SLO arms the deadline: a missed latency target surfaces as
+            # a structured TimedOut (which the governor's job is to prevent)
+            deadline = arrival + float(target_latency)
         req = Request(
             uid=uid,
             tokens=tokens,
             n_repeats=int(n_repeats),
             max_new_tokens=int(max_new_tokens),
             key=raw_key(key),
-            arrival=self._now(now, "submit"),
+            arrival=arrival,
             profile_id=profile_id,
             stop_tokens=stop_tokens,
             deadline=deadline,
+            target_latency=(
+                None if target_latency is None else float(target_latency)
+            ),
+            accuracy_floor=(
+                None if accuracy_floor is None else float(accuracy_floor)
+            ),
         )
         self.scheduler.submit(req)
         self.stats["requests"] += 1
@@ -474,6 +589,8 @@ class ServingEngine:
         if self.continuous:
             return self._pump(now, force=False)
         results: Dict[int, RequestResult] = self._expire_queued(now)
+        if self.governor is not None:
+            self.governor.step(now)
         # loop: a faulted batch requeues its requests (aged arrivals stay
         # deadline-ready), so one poll drains everything ready at `now`
         while True:
@@ -776,6 +893,8 @@ class ServingEngine:
         batch-synchronous path keeps enqueueing work without a sync."""
         tier = reqs[0].tier
         assert all(r.tier == tier for r in reqs), "mixed-tier batch"
+        for r in reqs:  # dispatch point: the tier is now bound (see ctor)
+            self.served_tiers[r.uid] = tier
         n_repeats, profile, tier_key = self._tier_parts(tier)
         bb, sb = bucket_shape(
             len(reqs), max(r.prompt_len for r in reqs),
@@ -872,8 +991,10 @@ class ServingEngine:
                     row = row[: hits[0] + 1]
             out[r.uid] = row.copy()
             self.stats["tokens_generated"] += int(row.size)
+            self._bump_tier("tier_tokens", tier, int(row.size))
         self.stats["decode_steps"] += steps_run
         self.stats["decode_slot_steps"] += steps_run * bb
+        self._bump_tier("tier_decode_steps", tier, steps_run)
         return out
 
     # -- continuous execution: persistent per-tier decode slot pools ---------
@@ -943,6 +1064,11 @@ class ServingEngine:
         results.update(self._expire_pooled(now))
         if results:
             progressed = True
+        if self.governor is not None and not force:
+            # one policy step per pump round: demotions land *before*
+            # admission, so retiered requests prefill into their new tier's
+            # pool this very round (flush keeps requests as-submitted)
+            self.governor.step(now)
         free = {}
         for tier in self.scheduler.pending_tiers():
             pool = self._pools.get(tier)
@@ -996,6 +1122,7 @@ class ServingEngine:
                 pool.release(s)
                 out[r.uid] = np.asarray([t0], np.int32)
                 self.stats["tokens_generated"] += 1
+                self._bump_tier("tier_tokens", r.tier, 1)
                 self.stats["retired"] += 1
             else:
                 pool.activate(s, r, t0, r.key)
@@ -1069,6 +1196,7 @@ class ServingEngine:
         self.stats["decode_steps"] += 1
         self.stats["decode_slot_steps"] += pool.slots
         self.stats["active_slot_steps"] += pool.n_active
+        self._bump_tier("tier_decode_steps", pool.tier, 1)
         out: Dict[int, RequestResult] = {}
         poisoned_reqs: List[Request] = []
         vocab = self.model_cfg.vocab_size
@@ -1090,6 +1218,7 @@ class ServingEngine:
                 pool.retire(s)
                 out[rec.request.uid] = np.asarray(rec.emitted, np.int32)
                 self.stats["tokens_generated"] += len(rec.emitted)
+                self._bump_tier("tier_tokens", pool.tier, len(rec.emitted))
                 self.stats["retired"] += 1
         for r in poisoned_reqs:
             out.update(self._fault_requeue([r], "poison", "out-of-vocab token"))

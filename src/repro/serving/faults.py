@@ -78,7 +78,39 @@ class QueueFull(RuntimeError):
 
     Raised by ``submit`` instead of growing the queue without bound —
     callers shed load or retry later; nothing is silently dropped.
+    (The precision governor raises it too, as its last rung: load is shed
+    only once every queued request is already at its accuracy floor.)
     """
+
+
+class BoundedLog(list):
+    """An event log with list semantics and a ring-buffer bound.
+
+    ``append`` keeps at most ``maxlen`` entries, evicting the oldest and
+    counting evictions in ``dropped`` (optionally reporting each eviction
+    batch through ``on_drop``) — long fault storms and policy episodes
+    can't grow host memory without bound. It IS a ``list`` (equality,
+    slicing, iteration all behave), so test assertions like
+    ``engine.fault_log == []`` keep working; ``maxlen=None`` is an
+    ordinary unbounded list with a drop counter pinned at zero.
+    """
+
+    def __init__(self, maxlen: Optional[int] = None, *, on_drop=None):
+        super().__init__()
+        if maxlen is not None and maxlen < 1:
+            raise ValueError(f"maxlen must be >= 1, got {maxlen}")
+        self.maxlen = maxlen
+        self.on_drop = on_drop
+        self.dropped = 0
+
+    def append(self, item) -> None:
+        if self.maxlen is not None and len(self) >= self.maxlen:
+            n = len(self) - self.maxlen + 1
+            del self[:n]
+            self.dropped += n
+            if self.on_drop is not None:
+                self.on_drop(n)
+        super().append(item)
 
 
 @dataclasses.dataclass(frozen=True)

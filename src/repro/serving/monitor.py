@@ -41,7 +41,13 @@ import numpy as np
 
 from repro.core.calibrate import noise_rms
 
-__all__ = ["DriftEvent", "WatchdogConfig", "NoiseDriftWatchdog"]
+__all__ = [
+    "DriftEvent",
+    "WatchdogConfig",
+    "NoiseDriftWatchdog",
+    "LoadSignals",
+    "load_signals",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -75,12 +81,20 @@ class WatchdogConfig:
 
 @dataclasses.dataclass(frozen=True)
 class DriftEvent:
-    """One out-of-band probe: the realized noise scale left calibration."""
+    """One out-of-band probe: the realized noise scale left calibration.
+
+    ``clock`` is the engine's fault-clock step at the probe and
+    ``residual_rms`` the triggering measurement (the probe's raw residual
+    RMS, before dividing by the baseline) — the event lines up against
+    stalls/timeouts/policy actions in the same ``fault_log``.
+    """
 
     step: int  # watchdog step at which the probe fired
     probe_idx: int  # how many probes had run (0-based)
     estimate: float  # realized noise-scale estimate
     band: Tuple[float, float]
+    clock: int = 0  # engine fault clock at the probe (attribution)
+    residual_rms: float = 0.0  # the triggering measurement (raw probe RMS)
 
 
 class NoiseDriftWatchdog:
@@ -153,6 +167,8 @@ class NoiseDriftWatchdog:
             event = DriftEvent(
                 step=step, probe_idx=self._n_probes - 1,
                 estimate=float(estimate), band=(lo, hi),
+                clock=int(getattr(self.engine, "_fault_clock", 0)),
+                residual_rms=float(rms),
             )
             self.events.append(event)
             self.active = event
@@ -172,3 +188,72 @@ class NoiseDriftWatchdog:
     def clear(self) -> None:
         """Recalibration hook: drop the active event (probing continues)."""
         self.active = None
+
+
+# ===========================================================================
+# load / headroom signals (the precision governor's observation surface)
+# ===========================================================================
+
+
+@dataclasses.dataclass(frozen=True)
+class LoadSignals:
+    """One observation of the engine's load and deadline headroom.
+
+    The drift watchdog above watches the *noise* leave calibration; these
+    signals watch the *load* leave capacity — together they are the
+    monitoring surface the serving policy reacts to. All host-side reads,
+    no dispatch: observing load never costs analog energy.
+
+    ``queue_pressure`` is queue depth in units of one pool's slot capacity
+    (batch-synchronous engines: the max batch) — 1.0 means a full pool's
+    worth of work is waiting. ``urgent_frac`` is the fraction of queued
+    SLO-carrying requests that have already burned over half their
+    ``target_latency`` waiting — the p99-vs-deadline headroom signal: it
+    climbs before deadlines start striking. ``min_slack`` is the tightest
+    ``deadline - now`` over queued + pooled requests (``None`` without a
+    clock or deadlines).
+    """
+
+    clock: int  # engine fault clock at the observation
+    queue_depth: int
+    active: int  # occupied decode slots across live pools
+    slots: int  # total decode slots across live pools (or max_batch)
+    occupancy: float  # active / slots
+    queue_pressure: float  # queue_depth / per-tier slot capacity
+    min_slack: Optional[float]  # tightest deadline - now, None if unknowable
+    urgent_frac: float  # queued SLO requests past half their latency budget
+
+
+def load_signals(engine, now: Optional[float] = None) -> LoadSignals:
+    """Read the engine's current load/headroom signals (host-only)."""
+    sched = engine.scheduler
+    queued = sched.queued_requests()
+    pooled = []
+    for pool in engine.pools.values():
+        for s in pool.active_slots():
+            pooled.append(pool.record(s).request)
+    unit = engine.pool_slots if engine.continuous else sched.max_batch
+    slots = unit * max(1, len(engine.pools)) if engine.continuous else unit
+    min_slack = None
+    urgent = with_slo = 0
+    if now is not None:
+        slacks = [
+            r.deadline - now for r in queued + pooled if r.deadline is not None
+        ]
+        if slacks:
+            min_slack = float(min(slacks))
+        for r in queued:
+            if r.target_latency is not None:
+                with_slo += 1
+                if now - r.arrival >= 0.5 * r.target_latency:
+                    urgent += 1
+    return LoadSignals(
+        clock=int(getattr(engine, "_fault_clock", 0)),
+        queue_depth=len(queued),
+        active=len(pooled),
+        slots=int(slots),
+        occupancy=len(pooled) / max(1, slots),
+        queue_pressure=len(queued) / max(1, unit),
+        min_slack=min_slack,
+        urgent_frac=urgent / with_slo if with_slo else 0.0,
+    )

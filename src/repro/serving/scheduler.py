@@ -44,6 +44,12 @@ class Request:
     nobody is waiting for. ``retries`` counts fault-triggered
     resubmissions (the engine bounds them and promotes the precision tier
     on each retry).
+
+    ``target_latency`` and ``accuracy_floor`` are the request's SLO for
+    the precision governor (serving/policy.py): the latency target is
+    *relative* to arrival (it defaults the absolute ``deadline``), and the
+    floor is the minimum tier accuracy the governor may demote the request
+    to under overload (``None``: any registered tier is acceptable).
     """
 
     uid: int
@@ -56,6 +62,8 @@ class Request:
     stop_tokens: Tuple[int, ...] = ()  # EOS ids: emit one -> retire the row
     deadline: Optional[float] = None  # absolute timeout (engine clock)
     retries: int = 0  # fault-triggered resubmissions so far
+    target_latency: Optional[float] = None  # SLO: seconds from arrival
+    accuracy_floor: Optional[float] = None  # SLO: min acceptable tier accuracy
 
     @property
     def prompt_len(self) -> int:
@@ -158,6 +166,62 @@ class TierScheduler:
         """Tiers with queued requests (continuous pools are created lazily,
         so the engine sizes free-slot accounting off this set)."""
         return {tier for tier, _sb in self._queues}
+
+    def queued_requests(self) -> List[Request]:
+        """Every queued request, in deterministic group-then-FIFO order
+        (the precision governor's observation/sweep surface)."""
+        out: List[Request] = []
+        for q in self._queues.values():
+            out.extend(q)
+        return out
+
+    def reassign(self, assign) -> List[Tuple[Request, object, object]]:
+        """Move queued requests between precision tiers (the governor's
+        demote/promote sweep).
+
+        ``assign(req)`` returns the request's new tier — a uniform K int
+        or a registered profile id — or ``None`` to leave it in place.
+        Retiered requests are re-grouped under their new
+        ``(tier, seq_bucket)`` queue, and every destination queue is
+        re-sorted by ``(arrival, uid)`` so dispatch order stays global
+        FIFO: a demoted request never loses its place to younger traffic.
+        ``assign`` must be idempotent (return ``None`` once a request is
+        already at its target) — requests can land in a group the sweep
+        has not visited yet and be offered again.
+
+        Returns ``[(request, old_tier, new_tier)]`` in sweep order.
+        Requests already dispatched to a batch or pool slot are out of
+        reach by design: their noise keys and compiled executables bound
+        them to their tier at admission.
+        """
+        moves: List[Tuple[Request, object, object]] = []
+        touched = set()
+        for g in list(self._queues):
+            q = self._queues.get(g)
+            if not q:
+                continue
+            keep: List[Request] = []
+            for r in q:
+                new = assign(r)
+                if new is None or new == r.tier:
+                    keep.append(r)
+                    continue
+                old = r.tier
+                if isinstance(new, str):
+                    r.profile_id, r.n_repeats = new, 1
+                else:
+                    r.profile_id, r.n_repeats = None, int(new)
+                ng = self.group_of(r)
+                self._queues.setdefault(ng, []).append(r)
+                touched.add(ng)
+                moves.append((r, old, new))
+            if keep:
+                self._queues[g] = keep
+            else:
+                del self._queues[g]
+        for ng in touched:
+            self._queues[ng].sort(key=lambda r: (r.arrival, r.uid))
+        return moves
 
     def pop_admissible(
         self,
