@@ -17,8 +17,12 @@ thermal, per paper Appendix A), train/test batches, and the clean accuracy.
 from __future__ import annotations
 
 import dataclasses
+import datetime
 import json
 import os
+import platform
+import subprocess
+import sys
 from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
@@ -58,6 +62,35 @@ def atomic_write_json(path: str, record) -> str:
         f.write("\n")
     os.replace(tmp, path)
     return path
+
+
+def run_provenance() -> dict:
+    """What produced this artifact: git sha (+dirty flag), UTC timestamp,
+    and the software stack. Benchmarks embed it as a top-level block so a
+    checked-in BENCH_*.json is auditable — numbers without the commit and
+    jax version that produced them are not comparable across PRs."""
+    repo_root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+    def _git(*argv):
+        try:
+            return subprocess.run(
+                ("git",) + argv, cwd=repo_root, stdout=subprocess.PIPE,
+                stderr=subprocess.DEVNULL, text=True, timeout=10,
+            ).stdout.strip() or None
+        except (OSError, subprocess.SubprocessError):
+            return None
+
+    return {
+        "git_sha": _git("rev-parse", "HEAD"),
+        "git_dirty": bool(_git("status", "--porcelain")),
+        "timestamp_utc": datetime.datetime.now(datetime.timezone.utc)
+        .isoformat(timespec="seconds"),
+        "jax_version": jax.__version__,
+        "numpy_version": np.__version__,
+        "jax_backend": jax.default_backend(),
+        "python": sys.version.split()[0],
+        "platform": platform.platform(),
+    }
 
 
 def cache_json(name: str):

@@ -38,19 +38,23 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import atomic_write_json, cache_json
+from benchmarks.common import PAPER_DIR, atomic_write_json, cache_json, run_provenance
 from repro.core import (
+    DIGITAL_INT8_AJ_PER_MAC,
     AnalogConfig,
     PrecisionProfile,
     coalesce_runs,
     online_repeat_profile_search,
     repeat_profile_search,
+    total_macs,
 )
 from repro.models import init_energy_tree, init_params, lm
 from repro.models.config import ModelConfig
 from repro.serving import (
     DriftRamp,
     FaultPlan,
+    Int8DigitalTier,
+    MetricsFeed,
     NoiseDriftWatchdog,
     PolicyConfig,
     QueueFull,
@@ -1036,6 +1040,112 @@ def overload_smoke_bench():
 
 
 # ---------------------------------------------------------------------------
+# hybrid smoke: analog uniform-K + analog profile + int8 digital, one engine
+# ---------------------------------------------------------------------------
+
+#: the streaming MetricsFeed's JSONL artifact (uploaded by CI)
+METRICS_JSONL_PATH = os.path.join(PAPER_DIR, "serving_metrics.jsonl")
+
+
+@cache_json("serving_bench_hybrid")
+def hybrid_smoke_bench():
+    """Serve int8 digital traffic NEXT TO uniform-K and per-layer-profile
+    analog traffic in one continuous engine — three implementations of one
+    ``ExecutionTier`` interface sharing the scheduler, the AOT cache, and
+    the slot pools. Records the cross-domain contract main() asserts:
+    100% steady-state hit rate and zero retraces across all four tiers,
+    per-request bit-identity per tier (pooled == solo, analog and digital
+    alike), honest per-tier energy/token — the digital tier priced from
+    the per-MAC digital cost model, never the analog energy tree — with
+    the expected ordering e(K=1) < e(profile) < e(K=4) < e(int8), and the
+    per-tier MetricsFeed time series streamed to the JSONL artifact."""
+    cfg = ModelConfig(**dict(SMOKE_MODEL, name="serve-bench-hybrid"))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    energies = init_energy_tree(cfg, ENERGY_AJ)
+    profile = PrecisionProfile((2, 1), name="mixed")  # fixed non-uniform
+    if os.path.exists(METRICS_JSONL_PATH):  # the sink appends; start fresh
+        os.remove(METRICS_JSONL_PATH)
+    feed = MetricsFeed(capacity=4096, jsonl_path=METRICS_JSONL_PATH)
+    eng = ServingEngine(
+        params, cfg, analog_cfg=AnalogConfig.shot(), energies=energies,
+        max_gen=6, max_batch=4, max_wait=1.0, batch_buckets=(1, 2, 4),
+        seq_buckets=(32,), continuous=True, pool_slots=4,
+        profiles=[profile], metrics=feed,
+    )
+    eng.register_tier(Int8DigitalTier())
+
+    tiers = (1, 4, "mixed", "int8")
+    trace = make_trace(16, 4, 28, seed=13, tiers=tiers,
+                       weights=(0.3, 0.2, 0.25, 0.25))
+    req_keys = [jax.random.fold_in(jax.random.PRNGKey(31), i)
+                for i in range(len(trace))]
+    results, steady = {}, {}
+    for replay in range(2):  # replay 0 is warmup (compiles)
+        if replay == 1:
+            eng.exe_cache.reset_stats()
+            traces_before = eng.trace_count
+        uid_of = {}
+        for i, (prompt, k, gen) in enumerate(trace):
+            # submit(tier=...) is the general form: uniform-K ints, profile
+            # ids, and custom registered tiers all go through one knob
+            uid_of[i] = eng.submit(prompt, tier=k, max_new_tokens=gen,
+                                   key=req_keys[i], now=i * 1e-3)
+        done = {}
+        vt = len(trace) * 1e-3
+        while eng.n_in_flight:
+            done.update(eng.pump_step(now=vt, force=True))
+        res = {i: done[uid] for i, uid in uid_of.items()}
+        prev = results or res
+        assert all(np.array_equal(res[i], prev[i]) for i in res), (
+            "hybrid replay changed a request's tokens"
+        )
+        results = res
+        if replay == 1:
+            steady = {**eng.exe_cache.stats(),
+                      "retraces": eng.trace_count - traces_before}
+
+    # --- bit-identity: pooled tokens == solo re-serve, per domain ----------
+    solo_ok = {}
+    for label, pick in (("analog", "mixed"), ("digital", "int8")):
+        i0 = next(i for i, (_, k, _) in enumerate(trace) if k == pick)
+        prompt, _, gen = trace[i0]
+        uid = eng.submit(prompt, tier=pick, max_new_tokens=gen,
+                         key=req_keys[i0], now=0.0)
+        solo = eng.flush()[uid]
+        solo_ok[label] = bool(np.array_equal(solo, results[i0]))
+
+    # --- honest per-tier pricing ------------------------------------------
+    e = {str(t): float(eng.tier_energy_per_token(t)) for t in tiers}
+    macs = float(total_macs(lm.energy_macs(cfg, 1)))
+    int8_expected = DIGITAL_INT8_AJ_PER_MAC * macs
+    tokens = {str(t): int(eng.stats["tier_tokens"].get(t, 0)) for t in tiers}
+    feed.close()
+    return {
+        "backend": jax.default_backend(),
+        "n_requests": len(trace),
+        "tiers": [str(t) for t in tiers],
+        "tier_tokens": tokens,
+        "all_tiers_served": all(v > 0 for v in tokens.values()),
+        "energy_per_token_aj": e,
+        "int8_expected_aj": int8_expected,
+        "int8_priced_from_digital_model": (
+            abs(e["int8"] - int8_expected) <= 1e-6 * int8_expected
+        ),
+        "energy_ordering_ok": e["1"] < e["mixed"] < e["4"] < e["int8"],
+        "solo_matches": solo_ok,
+        "steady": steady,
+        "metrics": {
+            "jsonl_path": os.path.relpath(
+                METRICS_JSONL_PATH, os.path.dirname(os.path.dirname(
+                    os.path.abspath(__file__)))),
+            "n_samples": len(feed),
+            "tier_tokens_series": feed.tier_series("tokens"),
+            "queue_depth_series": [s["queue_depth"] for s in feed.samples()],
+        },
+    }
+
+
+# ---------------------------------------------------------------------------
 
 
 def _bench(model_kw, n_requests, gen, max_len, tiers=TIERS, weights=TIER_WEIGHTS):
@@ -1108,6 +1218,7 @@ def _write_trajectory(out, smoke: bool) -> str:
         "bench": "serving",
         "schema": 1,
         "smoke": bool(smoke),
+        "provenance": run_provenance(),
         "backend": out["backend"],
         "modes": {
             "naive": _mode(n, None, None),
@@ -1158,6 +1269,19 @@ def _write_trajectory(out, smoke: bool) -> str:
             "zero_steady_retraces": on["steady_retraces"] == 0,
             "online_retrim": p["online_retrim"],
         }
+    if "hybrid" in out:  # analog + digital tiers in one engine, with the
+        h = out["hybrid"]  # per-tier MetricsFeed time series
+        record["hybrid"] = {
+            "tiers": h["tiers"],
+            "tier_tokens": h["tier_tokens"],
+            "energy_per_token_aj": h["energy_per_token_aj"],
+            "energy_ordering_ok": h["energy_ordering_ok"],
+            "int8_priced_from_digital_model": h["int8_priced_from_digital_model"],
+            "solo_matches": h["solo_matches"],
+            "zero_steady_retraces": h["steady"]["retraces"] == 0,
+            "hit_rate": h["steady"]["hit_rate"],
+            "metrics": h["metrics"],
+        }
     if "faults" in out:  # the fault-tolerance contract, machine-readable
         fi, fd = out["faults"]["inject"], out["faults"]["drift"]
         record["faults"] = {
@@ -1203,6 +1327,10 @@ def main() -> None:
     ap.add_argument("--overload", action="store_true",
                     help="also replay a 3x overload burst with and without "
                          "the SLA-aware precision governor")
+    ap.add_argument("--hybrid", action="store_true",
+                    help="also serve int8 digital tiers next to uniform-K "
+                         "and profile analog tiers in one engine, streaming "
+                         "the per-tier MetricsFeed to a JSONL artifact")
     args = ap.parse_args()
     fn = serving_bench_smoke if args.smoke else serving_bench
     out = fn(force=args.force)
@@ -1210,6 +1338,8 @@ def main() -> None:
         out["faults"] = fault_smoke_bench(force=args.force)
     if args.overload:
         out["policy"] = overload_smoke_bench(force=args.force)
+    if args.hybrid:
+        out["hybrid"] = hybrid_smoke_bench(force=args.force)
     records = [("dense", out)]
     if "griffin" in out:
         records.append(("griffin", out["griffin"]))
@@ -1325,6 +1455,33 @@ def main() -> None:
         assert rt["trim"]["cost"] <= rt["trim"]["frozen_cost"], (
             "online re-trim made the frozen profile more expensive"
         )
+    if "hybrid" in out:
+        h = out["hybrid"]
+        print(f"--- hybrid tiers ({h['n_requests']} requests over "
+              f"{h['tiers']}) ---")
+        print(f"{'tier':>8} {'tokens':>7} {'e/tok_aJ':>11}")
+        for t in h["tiers"]:
+            print(f"{t:>8} {h['tier_tokens'][t]:>7} "
+                  f"{h['energy_per_token_aj'][t]:>11.0f}")
+        print(f"steady: hit_rate={h['steady']['hit_rate']:.0%} "
+              f"retraces={h['steady']['retraces']} "
+              f"solo==pooled: {h['solo_matches']} "
+              f"metrics_samples={h['metrics']['n_samples']}")
+        assert h["all_tiers_served"], "a hybrid tier served no tokens"
+        assert h["steady"]["hit_rate"] == 1.0 and h["steady"]["misses"] == 0
+        assert h["steady"]["retraces"] == 0, (
+            "mixed analog+digital traffic re-traced in steady state"
+        )
+        assert h["solo_matches"]["analog"] and h["solo_matches"]["digital"], (
+            "pooled tokens != solo run in the hybrid engine"
+        )
+        assert h["int8_priced_from_digital_model"], (
+            "the int8 tier was not priced from the digital cost model"
+        )
+        assert h["energy_ordering_ok"], (
+            f"per-tier energy ordering broke: {h['energy_per_token_aj']}"
+        )
+        assert h["metrics"]["n_samples"] > 0, "the MetricsFeed never sampled"
     if "faults" in out:
         fi, fd = out["faults"]["inject"], out["faults"]["drift"]
         print("--- fault tolerance ---")

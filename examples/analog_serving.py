@@ -24,10 +24,14 @@ Two modes:
               accuracy floor, the middle of the replay arrives as a 3x
               burst, and the governor demotes/promotes precision tiers
               against live queue pressure (policy events are printed).
+              Add --dashboard to attach the streaming MetricsFeed
+              (serving/monitor.py) and render a compact per-tier dashboard
+              — tokens/s, queue depth, pool occupancy — from the sampled
+              ring after the replay (samples also stream to a JSONL file).
 
 Run:  PYTHONPATH=src python examples/analog_serving.py [--energy 10.0]
       PYTHONPATH=src python examples/analog_serving.py --traffic \
-          [--requests 24] [--gen 8] [--continuous] [--slo 2.0]
+          [--requests 24] [--gen 8] [--continuous] [--slo 2.0] [--dashboard]
 """
 import argparse
 import time
@@ -47,7 +51,13 @@ from repro.models import (
 )
 from repro.models.config import ModelConfig
 from repro.data.pipeline import TokenTaskConfig, markov_batch
-from repro.serving import PolicyConfig, ServingEngine, TierSpec, TimedOut
+from repro.serving import (
+    MetricsFeed,
+    PolicyConfig,
+    ServingEngine,
+    TierSpec,
+    TimedOut,
+)
 
 CFG = ModelConfig(
     name="serve-demo", family="dense", n_layers=4, d_model=256, n_heads=8,
@@ -131,11 +141,22 @@ def run_traffic(args, params):
     seq_buckets = [32]
     while seq_buckets[-1] < args.prompt_len:
         seq_buckets.append(seq_buckets[-1] * 2)
+    feed = None
+    if args.dashboard:
+        import os
+        import tempfile
+
+        feed = MetricsFeed(
+            capacity=4096,
+            jsonl_path=os.path.join(tempfile.gettempdir(),
+                                    "repro_serving_metrics.jsonl"),
+        )
     engine = ServingEngine(
         params, CFG, analog_cfg=AnalogConfig.shot(backend=args.backend),
         energies=energies, max_gen=args.gen, max_batch=8, max_wait=0.5,
         batch_buckets=(1, 2, 4, 8), seq_buckets=tuple(seq_buckets),
         profiles=profiles, continuous=args.continuous, policy=policy,
+        metrics=feed,
     )
     rng = np.random.default_rng(0)
     reqs = []
@@ -221,8 +242,54 @@ def run_traffic(args, params):
             print(f"  [{e.kind:>8}] policy step {e.step} pressure="
                   f"{e.pressure:.2f} queue={e.queue_depth} moved={e.moved} "
                   f"{e.detail}")
+    if feed is not None:
+        _render_dashboard(feed, engine)
     sample = results[min(results)]
     print("sample tokens:", sample[:12].tolist())
+
+
+def _sparkline(values, width=48):
+    """Unicode mini-chart of a numeric series (None plotted as 0)."""
+    vals = [0.0 if v is None else float(v) for v in values]
+    if len(vals) > width:  # downsample: mean over equal chunks
+        step = len(vals) / width
+        vals = [
+            float(np.mean(vals[int(i * step):max(int(i * step) + 1,
+                                                 int((i + 1) * step))]))
+            for i in range(width)
+        ]
+    blocks = " .:-=+*#%@"
+    hi = max(vals) or 1.0
+    return "".join(blocks[min(len(blocks) - 1,
+                              int(v / hi * (len(blocks) - 1)))] for v in vals)
+
+
+def _render_dashboard(feed, engine):
+    """Compact per-tier dashboard rendered from the MetricsFeed ring:
+    token throughput per tier over pump steps, queue depth, and pool
+    occupancy — the same samples the JSONL sink streams for offline
+    dashboards."""
+    samples = feed.samples()
+    if not samples:
+        print("dashboard: no samples recorded")
+        return
+    print(f"--- dashboard ({len(samples)} retained samples, "
+          f"jsonl: {feed.jsonl_path}) ---")
+    deltas = feed.tier_series("tokens_delta")
+    for tier in sorted(deltas, key=str):
+        series = deltas[tier]
+        total = samples[-1]["tiers"][tier]["tokens"]
+        e = samples[-1]["tiers"][tier]["energy_per_token_aj"]
+        e_txt = "n/a" if e is None else f"{e / 1e6:.3f} pJ/tok"
+        print(f"  tier {tier:>8} |{_sparkline(series)}| "
+              f"{total:>5} tokens, {e_txt}")
+    print(f"  queue depth   |{_sparkline([s['queue_depth'] for s in samples])}| "
+          f"peak {max(s['queue_depth'] for s in samples)}")
+    occ = [s["occupancy"] for s in samples]
+    if any(occ):
+        print(f"  pool occupancy|{_sparkline(occ)}| "
+              f"peak {max(occ):.0%}")
+    feed.close()
 
 
 def main():
@@ -253,6 +320,11 @@ def main():
     ap.add_argument("--profile", default=None,
                     help="comma-separated per-layer K schedule (e.g. 4,2,1,1)"
                          " served as its own precision tier in --traffic mode")
+    ap.add_argument("--dashboard", action="store_true",
+                    help="attach the streaming MetricsFeed and render a "
+                         "compact per-tier dashboard (tokens/s, queue depth, "
+                         "pool occupancy) after the replay; samples are also "
+                         "streamed to a JSONL file (--traffic mode)")
     args = ap.parse_args()
 
     if args.traffic:

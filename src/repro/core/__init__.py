@@ -30,6 +30,8 @@ from repro.core.calibrate import (
     softmax_xent,
 )
 from repro.core.energy import (
+    DIGITAL_BF16_AJ_PER_MAC,
+    DIGITAL_INT8_AJ_PER_MAC,
     apply_repeats,
     avg_energy_per_mac,
     dense_site_macs,
@@ -62,6 +64,8 @@ __all__ = [
     "THERMAL",
     "WEIGHT",
     "DEFAULT_K_LEVELS",
+    "DIGITAL_BF16_AJ_PER_MAC",
+    "DIGITAL_INT8_AJ_PER_MAC",
     "PrecisionProfile",
     "ProfileSearchResult",
     "SearchResult",

@@ -21,6 +21,17 @@ Array = jax.Array
 EnergyTree = Dict[str, Array]  # site name -> scalar (per-layer) or (C,) (per-channel)
 MacTree = Dict[str, Array]  # site name -> per-example MACs, same shape as energy leaf
 
+# Digital per-MAC cost constants, in aJ/MAC, for pricing digital execution
+# tiers next to the analog energy tree in one honest ledger. Anchored to the
+# classic CMOS survey numbers (Horowitz, ISSCC'14: ~0.2 pJ per 8-bit MAC and
+# ~1 pJ per fp16-class MAC at 45 nm) scaled ~6-7x down for a modern ~7 nm
+# node. Order-of-magnitude constants by design: the point is that digital
+# MACs sit 2-3 decades above the analog array's tens of aJ/MAC, not any
+# particular process corner — pass a measured value to a DigitalTier to pin
+# a real device.
+DIGITAL_INT8_AJ_PER_MAC = 30_000.0  # 30 fJ/MAC: int8 multiply-accumulate
+DIGITAL_BF16_AJ_PER_MAC = 120_000.0  # 120 fJ/MAC: bf16 multiply-accumulate
+
 
 def to_energy(log_e: EnergyTree, *, discrete: bool = False, quantum: float = 1.0) -> EnergyTree:
     """Map log-parameters to positive energies; optionally snap to discrete

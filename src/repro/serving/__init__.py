@@ -1,8 +1,10 @@
 """Bucket-batched analog serving: shape buckets, AOT executable cache,
-precision-tiered scheduling (uniform-K tiers and per-layer PrecisionProfile
-tiers), persistent per-tier decode slot pools (continuous batching), fault
-injection + noise-drift watchdog + graceful degradation (faults.py,
-monitor.py), and the engine tying them to models/lm.py."""
+pluggable execution tiers (tiers.py: uniform-K, per-layer PrecisionProfile,
+and digital/int8 tiers behind one ExecutionTier interface + TierRegistry),
+precision-tiered scheduling, persistent per-tier decode slot pools
+(continuous batching), fault injection + noise-drift watchdog + streaming
+MetricsFeed + graceful degradation (faults.py, monitor.py), and the engine
+tying them to models/lm.py."""
 from repro.core.profile import PrecisionProfile
 from repro.serving.bucketing import (
     DEFAULT_BATCH_BUCKETS,
@@ -29,6 +31,7 @@ from repro.serving.faults import (
 from repro.serving.monitor import (
     DriftEvent,
     LoadSignals,
+    MetricsFeed,
     NoiseDriftWatchdog,
     WatchdogConfig,
     load_signals,
@@ -41,18 +44,31 @@ from repro.serving.policy import (
 )
 from repro.serving.pool import DecodePool, SlotAllocator, SlotRecord
 from repro.serving.scheduler import Request, TierScheduler
+from repro.serving.tiers import (
+    AnalogProfileTier,
+    DigitalTier,
+    ExecutionTier,
+    Int8DigitalTier,
+    TierRegistry,
+    UniformKTier,
+)
 
 __all__ = [
+    "AnalogProfileTier",
     "BoundedLog",
     "DEFAULT_BATCH_BUCKETS",
     "DEFAULT_SEQ_BUCKETS",
     "DecodePool",
+    "DigitalTier",
     "DriftEvent",
     "DriftRamp",
     "ExecutableCache",
+    "ExecutionTier",
     "Failed",
     "FaultPlan",
+    "Int8DigitalTier",
     "LoadSignals",
+    "MetricsFeed",
     "NoiseDriftWatchdog",
     "PolicyConfig",
     "PolicyEvent",
@@ -64,8 +80,10 @@ __all__ = [
     "ServingEngine",
     "SlotAllocator",
     "SlotRecord",
+    "TierRegistry",
     "TierScheduler",
     "TierSpec",
+    "UniformKTier",
     "TimedOut",
     "TransientExecutableFault",
     "WatchdogConfig",

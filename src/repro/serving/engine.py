@@ -50,14 +50,19 @@ batch-synchronous engine, whose noise is reproducible per batch
 composition. (Re-folding ``collapse_keys(valid=active)`` per step is the
 documented alternative if mid-request noise drift is ever acceptable.)
 
-Precision tiers can never share a batch (or a pool): K is static in the
-fused kernel (baked into the trace), which is exactly why the tier
-scheduler exists. A tier is a repeat *schedule*: the uniform
-``n_repeats=K``, or a registered per-layer ``PrecisionProfile`` (the
-paper's learned per-layer precision, §V-VI) — profile batches run the
-segmented layer scan, their executables are cache-keyed on the profile's
-repeat tuple, and their energy/token is the true ``sum_l K_l * E_l *
-MACs_l``.
+Execution tiers can never share a batch (or a pool): what a tier computes
+is static in the fused kernel (baked into the trace), which is exactly why
+the tier scheduler exists. A tier is an *execution configuration*
+(serving/tiers.py): the uniform analog ``n_repeats=K``, a registered
+per-layer ``PrecisionProfile`` (the paper's learned per-layer precision,
+§V-VI — profile batches run the segmented layer scan, their executables
+are cache-keyed on the profile's repeat tuple, and their energy/token is
+the true ``sum_l K_l * E_l * MACs_l``), or a registered custom tier such
+as the weight-only ``Int8DigitalTier`` — all three are implementations of
+one ``ExecutionTier`` interface resolved through the engine-owned
+``TierRegistry``, so analog and digital traffic serve side by side in one
+engine with per-tier executables, params, energy models, and degradation
+ladders.
 """
 from __future__ import annotations
 
@@ -81,7 +86,7 @@ from repro.serving.bucketing import (
     pad_to_bucket,
     pool_shape,
 )
-from repro.serving.cache import ExecutableCache, aot_compile
+from repro.serving.cache import ExecutableCache
 from repro.serving.faults import (
     BoundedLog,
     FaultPlan,
@@ -91,6 +96,7 @@ from repro.serving.faults import (
 from repro.serving.policy import PolicyConfig, PrecisionGovernor
 from repro.serving.pool import DecodePool
 from repro.serving.scheduler import Request, TierScheduler
+from repro.serving.tiers import ExecutionTier, TierRegistry
 
 Array = jax.Array
 
@@ -189,6 +195,7 @@ class ServingEngine:
         k_ladder: Sequence[int] = (1, 2, 4, 8),
         fault_log_maxlen: Optional[int] = 4096,
         policy: Optional[PolicyConfig] = None,
+        metrics=None,
     ):
         if max_retries < 0:
             raise ValueError(f"max_retries must be >= 0, got {max_retries}")
@@ -208,9 +215,12 @@ class ServingEngine:
         self.model_cfg = model_cfg
         self.analog_cfg = analog_cfg
         self._energies = energies
-        #: registered per-layer repeat schedules: tier id -> frozen profile.
-        #: add-only (profiles are hashed into executable cache keys).
-        self._profiles: Dict[str, PrecisionProfile] = {}
+        #: the tier registry (serving/tiers.py): the ONE component that
+        #: maps tier ids — uniform K ints, profile names, custom digital
+        #: tier ids — to ExecutionTier objects (executable factory, cache
+        #: identity, params, energy model, degradation ladder). Add-only,
+        #: like the profile store it subsumes.
+        self.tiers = TierRegistry(self)
         for p in profiles or ():
             self.register_profile(p)
         self.max_gen = max_gen
@@ -321,6 +331,10 @@ class ServingEngine:
         #: and the bench's realized accuracy proxy). A fault retry that
         #: re-dispatches at a promoted tier overwrites its entry.
         self.served_tiers: Dict[int, object] = {}
+        #: streaming observability feed (monitor.MetricsFeed or anything
+        #: with a ``record(engine, now=...)`` method): sampled once per
+        #: pump/poll round — the per-tier time-series surface
+        self.metrics = metrics
         #: SLA-aware precision governor (None without a policy config)
         self.governor: Optional[PrecisionGovernor] = None
         if policy is not None:
@@ -369,16 +383,14 @@ class ServingEngine:
         a schedule in place would silently serve the old trace). Returns the
         tier id (the profile's name) for ``submit(profile=...)``.
         """
-        lm.profile_rows(self.model_cfg, profile)  # validates length vs model
-        prev = self._profiles.get(profile.name)
-        if prev is not None and prev.cache_key() != profile.cache_key():
-            raise ValueError(
-                f"profile {profile.name!r} is already registered with a "
-                f"different schedule {prev.repeats}; profiles are frozen — "
-                "register the new schedule under a new name"
-            )
-        self._profiles[profile.name] = profile
-        return profile.name
+        return self.tiers.register_profile(profile)
+
+    def register_tier(self, tier: ExecutionTier):
+        """Register a custom execution tier (e.g. ``Int8DigitalTier``) as
+        a servable tier id for ``submit(tier=...)`` — the plug point for
+        execution domains beyond analog K-repeats. Add-only, same AOT
+        contract as profiles. Returns the tier id."""
+        return self.tiers.register(tier)
 
     def submit(
         self,
@@ -386,6 +398,7 @@ class ServingEngine:
         *,
         n_repeats: int = 1,
         profile=None,
+        tier=None,
         max_new_tokens: Optional[int] = None,
         stop_tokens: Sequence[int] = (),
         key: Optional[Array] = None,
@@ -402,6 +415,14 @@ class ServingEngine:
         ``n_repeats``; a *uniform* profile degenerates to the equivalent
         ``n_repeats=K`` tier (identical trace, shared executables, shared
         batches). Digital engines ignore both — K is a no-op without noise.
+
+        ``tier`` is the general form: any registered tier id (a uniform K
+        int, a profile name, or a custom tier id such as the int8 digital
+        tier's — see ``register_tier``), a ``PrecisionProfile``, or an
+        ``ExecutionTier`` instance (auto-registered). Mutually exclusive
+        with the two legacy knobs above; unlike them it is honored on
+        digital engines too (an explicitly requested digital tier is not
+        an analog precision knob to coalesce away).
 
         ``stop_tokens``: EOS-style ids. Greedy decode finishes the request
         the step it emits one (the stop id is included as the last output
@@ -496,34 +517,31 @@ class ServingEngine:
                     "seq_buckets/max_gen to the traffic"
                 )
         stop_tokens = tuple(int(t) for t in stop_tokens)
-        profile_id = None
-        if profile is not None:
+        if tier is not None:
+            if profile is not None or n_repeats != 1:
+                raise ValueError(
+                    "pass either tier, or the legacy n_repeats/profile "
+                    "knobs, not both: tier is the general form of the "
+                    "same dial"
+                )
+            tier_id = self.tiers.resolve(tier)
+        elif profile is not None:
             if n_repeats != 1:
                 raise ValueError(
                     "pass either n_repeats or profile, not both: a profile "
                     "is the per-layer form of the same knob"
                 )
-            if isinstance(profile, PrecisionProfile):
-                profile_id = self.register_profile(profile)
-            else:
-                profile_id = str(profile)
-                if profile_id not in self._profiles:
-                    raise ValueError(
-                        f"unknown profile {profile_id!r}; register_profile() "
-                        "it first (or pass the PrecisionProfile itself)"
-                    )
-            p = self._profiles[profile_id]
-            # degenerate case: a uniform coalesced profile IS the uniform-K
-            # tier (coalesce=False is the unrolled test oracle — its trace is
-            # deliberately distinct, so it must stay a profile tier)
-            if p.is_uniform and p.coalesce:
-                n_repeats, profile_id = int(p.repeats[0]), None
+            # a uniform coalesced profile degenerates to its bare-K tier id
+            # (coalesce=False is the unrolled test oracle — its trace is
+            # deliberately distinct, so it stays a profile tier)
+            tier_id = self.tiers.resolve_profile(profile)
+        else:
+            tier_id = int(n_repeats)
         if max_degradation is not None:
             # the paper's degradation form: floor relative to the requested
             # tier's measured accuracy (raises if the tier is unpriced)
-            requested = profile_id if profile_id is not None else int(n_repeats)
             accuracy_floor = (
-                self.governor.tier_accuracy(requested) - float(max_degradation)
+                self.governor.tier_accuracy(tier_id) - float(max_degradation)
             )
         if self.governor is not None and self.governor.shedding:
             # the policy's last rung: demotion headroom is exhausted, so new
@@ -543,14 +561,16 @@ class ServingEngine:
         self._uid += 1
         if key is None:
             key = jax.random.fold_in(self._base_key, uid)
-        if self.analog_cfg is None:
-            # digital serving: K is a no-op, don't split batches on it
-            n_repeats, profile_id = 1, None
-        elif self._promoted and profile_id is None:
-            # drift response: serve new uniform-K traffic one rung up the
+        if tier is None and self.analog_cfg is None:
+            # digital serving: K/profile are analog precision no-ops, don't
+            # split batches on them (explicit tier= requests keep their tier)
+            tier_id = self.tiers.base_id
+        elif self._promoted:
+            # drift response: serve new traffic one rung up its tier's own
             # ladder until recalibration clears the event (queued/in-flight
-            # requests keep their tier — their noise keys already bind them)
-            n_repeats = self._promote_k(int(n_repeats))
+            # requests keep their tier — their noise keys already bind them;
+            # profile and drift-exempt digital tiers pass through unchanged)
+            tier_id = self.tiers.drift_promote(tier_id)
         arrival = self._now(now, "submit")
         if deadline is None and target_latency is not None:
             # the SLO arms the deadline: a missed latency target surfaces as
@@ -559,11 +579,9 @@ class ServingEngine:
         req = Request(
             uid=uid,
             tokens=tokens,
-            n_repeats=int(n_repeats),
             max_new_tokens=int(max_new_tokens),
             key=raw_key(key),
             arrival=arrival,
-            profile_id=profile_id,
             stop_tokens=stop_tokens,
             deadline=deadline,
             target_latency=(
@@ -573,6 +591,7 @@ class ServingEngine:
                 None if accuracy_floor is None else float(accuracy_floor)
             ),
         )
+        req.retier(tier_id)
         self.scheduler.submit(req)
         self.stats["requests"] += 1
         return uid
@@ -596,9 +615,12 @@ class ServingEngine:
         while True:
             batches = self.scheduler.pop_ready(now)
             if not batches:
-                return results
+                break
             for reqs in batches:
                 results.update(self._run_batch(reqs))
+        if self.metrics is not None:
+            self.metrics.record(self, now=now)
+        return results
 
     def flush(self) -> Dict[int, RequestResult]:
         """Drain the queue regardless of deadlines (end of replay/shutdown)."""
@@ -654,24 +676,17 @@ class ServingEngine:
                 )
         return out
 
-    def _promote_k(self, k: int) -> int:
-        """Next rung up the K ladder (the ladder top is the calibrated
-        energy cap — Ks above it were never validated, so promotion
-        saturates there)."""
-        for rung in self.k_ladder:
-            if rung > k:
-                return rung
-        return k
-
     def _fault_requeue(
         self, reqs: List[Request], kind: str, detail: str
     ) -> Dict[int, RequestResult]:
         """Handle requests whose batch hit a transient fault: one bounded
-        retry from scratch at a *promoted* uniform K (noise/sqrt(K) buys
-        margin against whatever corrupted the batch; profile tiers retry
-        at their own schedule — per-layer promotion is the profile
-        library's job), else a structured ``Failed``. Partial output is
-        discarded: a faulted batch's tokens are not trustworthy."""
+        retry from scratch at the tier's own *promoted* rung — uniform K
+        goes one rung up the ladder (noise/sqrt(K) buys margin against
+        whatever corrupted the batch), a profile tier promotes to a
+        registered higher-accuracy tier or a per-layer re-trim, digital
+        tiers retry in place (repeats buy nothing without noise) — else
+        a structured ``Failed``. Partial output is discarded: a faulted
+        batch's tokens are not trustworthy."""
         out: Dict[int, RequestResult] = {}
         entry = {
             "kind": kind, "clock": self._fault_clock, "detail": detail,
@@ -680,12 +695,8 @@ class ServingEngine:
         }
         for r in reqs:
             if r.retries < self.max_retries:
-                n_rep = r.n_repeats
-                if r.profile_id is None and self.analog_cfg is not None:
-                    n_rep = self._promote_k(n_rep)
-                r2 = dataclasses.replace(
-                    r, n_repeats=n_rep, retries=r.retries + 1
-                )
+                r2 = dataclasses.replace(r, retries=r.retries + 1)
+                r2.retier(self.tiers.get(r.tier).promote())
                 # force: an internal requeue must never bounce off QueueFull
                 self.scheduler.submit(r2, force=True)
                 self.stats["retried"] += 1
@@ -729,7 +740,10 @@ class ServingEngine:
         self._promoted = True
         self.fault_log.append(
             {"kind": "drift_promotion", "clock": self._fault_clock,
-             "event": event if event is None else dataclasses.asdict(event)}
+             "event": event if event is None else dataclasses.asdict(event),
+             # attribution: registered tiers the response does NOT touch
+             # (digital executions don't share the analog array's physics)
+             "exempt_tiers": self.tiers.drift_exempt_ids()}
         )
 
     def recalibrate(self, *, noise_scale: float = 1.0) -> None:
@@ -753,125 +767,17 @@ class ServingEngine:
         return jnp.asarray(self._noise_scale, jnp.float32)
 
     # -- execution -----------------------------------------------------------
-
-    def _cfg_sig(self) -> tuple:
-        if self.analog_cfg is None:
-            return ("digital",)
-        return (self.analog_cfg.backend, self.analog_cfg.noise.kind)
-
-    def _tier_parts(self, tier):
-        """(n_repeats, profile, tier_key) of a scheduler tier."""
-        if isinstance(tier, str):
-            profile = self._profiles[tier]
-            return 1, profile, profile.cache_key()
-        return tier, None, tier
-
-    def _analog_spec(
-        self,
-        keys: Array,
-        n_repeats: int,
-        profile: Optional[PrecisionProfile] = None,
-        pos: Optional[Array] = None,
-        noise_scale: Optional[Array] = None,
-    ):
-        """AnalogSpec for one batch: stacked per-request keys, folded with
-        the decode position so every generated token draws fresh noise.
-        ``profile`` (a trace-time constant) switches the layer scan to the
-        segmented per-layer-K form. ``noise_scale`` is the *traced* drift
-        operand: realized hardware drift rides into the frozen-energy
-        executables as a runtime value (1.0 = nominal, bit-identical)."""
-        if self.analog_cfg is None:
-            return None
-        k = keys if pos is None else jax.vmap(jax.random.fold_in)(keys, pos)
-        return lm.AnalogSpec(
-            cfg=self.analog_cfg, energies=self._energies, key=k,
-            n_repeats=n_repeats, profile=profile, noise_scale=noise_scale,
-        )
+    # the executable builders and cache-key identity live on the tiers
+    # themselves (serving/tiers.py): the engine only composes
+    # ``tiers.exe_key(phase, tier, *shape)`` with ``tier.build_*`` and
+    # dispatches ``tier.params`` — it never inspects what kind of tier it
+    # is holding (the lint test in tests/test_tiers.py keeps it that way)
 
     def _keys_spec(self, bb: int) -> jax.ShapeDtypeStruct:
         """Spec for a stacked raw-key batch, sized from the actual key impl
         (threefry keys are 2 uint32 words; other impls differ)."""
         return jax.ShapeDtypeStruct(
             (bb,) + self._base_key.shape, self._base_key.dtype
-        )
-
-    def _build_prefill(
-        self, bb: int, sb: int, cache_len: int, n_repeats: int,
-        profile: Optional[PrecisionProfile] = None,
-    ):
-        cfg = self.model_cfg
-
-        def fn(params, tokens, lengths, keys, noise_scale):
-            self._traces += 1  # runs at trace time only: the retrace audit
-            analog = self._analog_spec(keys, n_repeats, profile,
-                                       noise_scale=noise_scale)
-            cache, h_last = lm.prefill(
-                params, {"tokens": tokens}, cfg,
-                analog=analog, cache_len=cache_len, lengths=lengths,
-            )
-            logits = lm.logits_last(params, h_last, cfg)
-            tok = jnp.argmax(logits[:, 0, 0], axis=-1).astype(jnp.int32)
-            return cache, tok
-
-        i32 = jnp.int32
-        return aot_compile(
-            fn,
-            self._param_specs,
-            jax.ShapeDtypeStruct((bb, sb), i32),
-            jax.ShapeDtypeStruct((bb,), i32),
-            self._keys_spec(bb),
-            jax.ShapeDtypeStruct((), jnp.float32),
-        )
-
-    def _build_decode(
-        self, bb: int, cache_len: int, n_repeats: int,
-        profile: Optional[PrecisionProfile] = None,
-    ):
-        cfg = self.model_cfg
-
-        def fn(params, cache, tok, pos, lengths, keys, noise_scale):
-            self._traces += 1
-            analog = self._analog_spec(keys, n_repeats, profile, pos=pos,
-                                       noise_scale=noise_scale)
-            logits, new_cache = lm.decode_step(
-                params, cache, {"tokens": tok}, pos, cfg, analog=analog,
-                lengths=lengths,
-            )
-            nxt = jnp.argmax(logits[:, 0, 0], axis=-1).astype(jnp.int32)
-            return nxt, new_cache
-
-        i32 = jnp.int32
-        cache_specs = jax.eval_shape(lambda: lm.init_cache(cfg, bb, cache_len))
-        return aot_compile(
-            fn,
-            self._param_specs,
-            cache_specs,
-            jax.ShapeDtypeStruct((bb, 1), i32),
-            jax.ShapeDtypeStruct((bb,), i32),
-            jax.ShapeDtypeStruct((bb,), i32),
-            self._keys_spec(bb),
-            jax.ShapeDtypeStruct((), jnp.float32),
-            donate_argnums=(1,),
-        )
-
-    def _build_insert(self, slots: int, cache_len: int, bb: int):
-        """Admission scatter: prefilled cache rows (batch ``bb``) into the
-        pool cache (batch ``slots``) at per-row slot ids, under jit. Rows
-        pointed at slot id ``slots`` (prefill batch padding) are dropped."""
-        cfg = self.model_cfg
-
-        def fn(pool_cache, src_cache, slot_ids):
-            self._traces += 1
-            return lm.scatter_cache_rows(cfg, pool_cache, src_cache, slot_ids)
-
-        pool_specs = jax.eval_shape(lambda: lm.init_cache(cfg, slots, cache_len))
-        src_specs = jax.eval_shape(lambda: lm.init_cache(cfg, bb, cache_len))
-        return aot_compile(
-            fn,
-            pool_specs,
-            src_specs,
-            jax.ShapeDtypeStruct((bb,), jnp.int32),
-            donate_argnums=(0,),
         )
 
     def _batch_keys(self, reqs: List[Request], bb: int) -> Array:
@@ -895,7 +801,7 @@ class ServingEngine:
         assert all(r.tier == tier for r in reqs), "mixed-tier batch"
         for r in reqs:  # dispatch point: the tier is now bound (see ctor)
             self.served_tiers[r.uid] = tier
-        n_repeats, profile, tier_key = self._tier_parts(tier)
+        t = self.tiers.get(tier)
         bb, sb = bucket_shape(
             len(reqs), max(r.prompt_len for r in reqs),
             batch_buckets=self.batch_buckets, seq_buckets=self.seq_buckets,
@@ -906,14 +812,13 @@ class ServingEngine:
             [r.tokens for r in reqs], (bb, sb), pad_id=self.pad_id
         )
         keys = self._batch_keys(reqs, bb)
-        sig = self._cfg_sig()
         prefill_exe = self.exe_cache.get(
-            ("prefill", bb, sb, cache_len, tier_key) + sig,
-            lambda: self._build_prefill(bb, sb, cache_len, n_repeats, profile),
+            self.tiers.exe_key("prefill", tier, bb, sb, cache_len),
+            lambda: t.build_prefill(bb, sb, cache_len),
         )
         self._sync_noise_scale()
         cache, tok = prefill_exe(
-            self.params, jnp.asarray(tokens_np), jnp.asarray(lengths_np), keys,
+            t.params, jnp.asarray(tokens_np), jnp.asarray(lengths_np), keys,
             self._scale_arr(),
         )
         self.stats["batches"] += 1
@@ -924,7 +829,7 @@ class ServingEngine:
 
     def _run_batch(self, reqs: List[Request]) -> Dict[int, RequestResult]:
         tier = reqs[0].tier
-        n_repeats, profile, tier_key = self._tier_parts(tier)
+        exec_tier = self.tiers.get(tier)
         try:
             (bb, _sb, cache_len), keys, cache, tok = self._prefill_batch(reqs)
         except TransientExecutableFault as f:
@@ -945,10 +850,9 @@ class ServingEngine:
             ]
         steps_run = 0
         if n_steps > 0:  # single-token batches never need the decode exe
-            sig = self._cfg_sig()
             decode_exe = self.exe_cache.get(
-                ("decode", bb, cache_len, tier_key) + sig,
-                lambda: self._build_decode(bb, cache_len, n_repeats, profile),
+                self.tiers.exe_key("decode", tier, bb, cache_len),
+                lambda: exec_tier.build_decode(bb, cache_len),
             )
         for t in range(n_steps):
             if has_stops and all(done):
@@ -958,7 +862,7 @@ class ServingEngine:
             self._sync_noise_scale()
             try:
                 tok, cache = decode_exe(
-                    self.params, cache, tok[:, None], pos, lengths, keys,
+                    exec_tier.params, cache, tok[:, None], pos, lengths, keys,
                     self._scale_arr(),
                 )
             except TransientExecutableFault as f:
@@ -1002,7 +906,6 @@ class ServingEngine:
     def _pool(self, tier) -> DecodePool:
         pool = self._pools.get(tier)
         if pool is None:
-            n_repeats, profile, _ = self._tier_parts(tier)
             pool = DecodePool(
                 tier=tier,
                 slots=self.pool_slots,
@@ -1012,8 +915,7 @@ class ServingEngine:
                 cache=lm.init_cache(
                     self.model_cfg, self.pool_slots, self.pool_cache_len
                 ),
-                n_repeats=n_repeats,
-                profile=profile,
+                exec_tier=self.tiers.get(tier),
             )
             self._pools[tier] = pool
         return pool
@@ -1080,6 +982,9 @@ class ServingEngine:
             if pool.n_active:
                 results.update(self._pool_step(pool))
                 progressed = True
+        if self.metrics is not None:
+            # one observability sample per pump round: the feed's time base
+            self.metrics.record(self, now=now)
         return results, progressed
 
     def _admit(self, reqs: List[Request]) -> Dict[int, RequestResult]:
@@ -1103,9 +1008,11 @@ class ServingEngine:
         # prefill batch-padding rows aim past the pool: dropped by the scatter
         slot_ids = np.full((bb,), pool.slots, np.int32)
         slot_ids[: len(reqs)] = slots
+        # tier-free key: the cache layout is parameter- and noise-free, so
+        # one insert executable is shared across every tier's pool shape
         insert_exe = self.exe_cache.get(
-            ("insert", pool.slots, pool.cache_len, bb),
-            lambda: self._build_insert(pool.slots, pool.cache_len, bb),
+            self.tiers.exe_key("insert", None, pool.slots, pool.cache_len, bb),
+            lambda: pool.exec_tier.build_insert(pool.slots, pool.cache_len, bb),
         )
         try:
             pool.cache = insert_exe(pool.cache, src_cache, jnp.asarray(slot_ids))
@@ -1155,23 +1062,17 @@ class ServingEngine:
                           for s in pool.active_slots()]}
             )
             return {}
-        # the pool carries its tier's frozen repeat schedule (profiles are
-        # add-only, so the copy can't drift from the registry)
-        tier_key = (
-            pool.profile.cache_key() if pool.profile is not None
-            else pool.n_repeats
-        )
-        sig = self._cfg_sig()
+        # the pool carries its ExecutionTier object (the registry is
+        # add-only, so the reference can't drift from it)
+        t = pool.exec_tier
         decode_exe = self.exe_cache.get(
-            ("decode", pool.slots, pool.cache_len, tier_key) + sig,
-            lambda: self._build_decode(
-                pool.slots, pool.cache_len, pool.n_repeats, pool.profile
-            ),
+            self.tiers.exe_key("decode", pool.tier, pool.slots, pool.cache_len),
+            lambda: t.build_decode(pool.slots, pool.cache_len),
         )
         self._sync_noise_scale()
         try:
             tok, pool.cache = decode_exe(
-                self.params,
+                t.params,
                 pool.cache,
                 jnp.asarray(pool.tok[:, None]),
                 jnp.asarray(pool.pos),
@@ -1277,7 +1178,7 @@ class ServingEngine:
     @property
     def profiles(self) -> Dict[str, PrecisionProfile]:
         """The registered per-layer precision tiers (read-only copy)."""
-        return dict(self._profiles)
+        return self.tiers.profiles
 
     @property
     def pools(self) -> Dict[object, DecodePool]:
@@ -1285,24 +1186,21 @@ class ServingEngine:
         return dict(self._pools)
 
     def tier_energy_per_token(self, tier) -> float:
-        """True analog energy per generated token of a tier (aJ):
-        ``sum_l K_l * E_l * MACs_l`` over the frozen per-site energies.
+        """Honest energy per generated token of a tier (aJ), from the
+        tier's OWN cost model: analog tiers report the true ``sum_l K_l *
+        E_l * MACs_l`` over the frozen per-site energies (uniform K is the
+        degenerate profile — same formula, every K_l = K), digital tiers
+        report ``aj_per_mac * MACs/token`` from their per-MAC digital cost
+        constant — never the analog energy tree.
 
-        ``tier``: a uniform K int, a registered profile id, or a
-        ``PrecisionProfile``. Uniform K is priced as the degenerate
-        uniform profile — same formula, every K_l = K.
+        ``tier``: any registered tier id (uniform K int, profile name,
+        custom tier id) or an ad-hoc ``PrecisionProfile``.
         """
-        if self._energies is None:
-            raise ValueError("digital engine: no energy tree to account")
         if isinstance(tier, PrecisionProfile):
-            profile = tier
-        elif isinstance(tier, str):
-            if tier not in self._profiles:
-                raise ValueError(f"unknown profile {tier!r}")
-            profile = self._profiles[tier]
-        else:
-            profile = PrecisionProfile.uniform(int(tier), self.model_cfg.n_layers)
-        return lm.profile_token_energy(self.model_cfg, self._energies, profile)
+            if self._energies is None:
+                raise ValueError("digital engine: no energy tree to account")
+            return lm.profile_token_energy(self.model_cfg, self._energies, tier)
+        return float(self.tiers.get(tier).energy_per_token())
 
     @property
     def trace_count(self) -> int:

@@ -30,11 +30,24 @@ nominal once the hardware is re-trimmed.
 Probing costs one forward per interval and hits a single cached jitted
 executable (energies are runtime arguments) — it never retraces the
 serving path and never touches the request stream.
+
+The third surface here is the streaming observability feed
+(:class:`MetricsFeed`): a bounded ring of per-pump-step samples — per-tier
+token/decode counters, pool occupancy, queue depth, energy/token, drift
+state, policy mode — with an optional JSONL sink. The engine samples it
+once per pump/poll round (``ServingEngine(metrics=...)``); the serving
+bench and ``examples/analog_serving.py --dashboard`` consume it. Tier
+attribution rides the ``TierRegistry`` (serving/tiers.py): every tier in
+the feed reports its own honest energy model and its ``drift_exempt``
+flag, so a drift episode is attributable per tier — digital tiers ride
+through it unpromoted and unconcerned.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Tuple
+import json
+from collections import deque
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
@@ -47,6 +60,7 @@ __all__ = [
     "NoiseDriftWatchdog",
     "LoadSignals",
     "load_signals",
+    "MetricsFeed",
 ]
 
 
@@ -257,3 +271,148 @@ def load_signals(engine, now: Optional[float] = None) -> LoadSignals:
         min_slack=min_slack,
         urgent_frac=urgent / with_slo if with_slo else 0.0,
     )
+
+
+# ===========================================================================
+# streaming observability: the per-tier metrics feed
+# ===========================================================================
+
+
+class MetricsFeed:
+    """Bounded ring of per-pump-step serving samples with a JSONL sink.
+
+    The engine calls :meth:`record` once per pump/poll round
+    (``ServingEngine(metrics=MetricsFeed(...))``). Each sample is a plain
+    JSON-ready dict: engine-level load (queue depth, in-flight, pool
+    occupancy), drift state (noise scale, watchdog estimate, active
+    promotion), policy mode, the retrace audit counter, and a ``tiers``
+    block — one entry per tier that has served or pooled work, carrying
+    cumulative tokens/decode-steps, the delta since the previous sample
+    (divide by ``dt`` for tokens/s), pool occupancy, the tier's own honest
+    energy/token, and its ``drift_exempt`` flag. Tier keys are
+    stringified so samples round-trip through JSON unchanged.
+
+    ``capacity`` bounds the in-memory ring (oldest samples drop);
+    ``jsonl_path`` streams every sample as one JSON line (append mode,
+    flushed per sample) for dashboards and the bench artifact. The feed
+    never dispatches device work: sampling is host-side reads only.
+    """
+
+    def __init__(self, capacity: int = 1024, jsonl_path=None):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self.capacity = int(capacity)
+        self.jsonl_path = None if jsonl_path is None else str(jsonl_path)
+        self._ring = deque(maxlen=self.capacity)
+        self._fh = None
+        self._step = 0
+        self._drift_estimate: Optional[float] = None
+        self._last_now: Optional[float] = None
+        self._last_tokens: Dict[str, int] = {}
+
+    # -- drift attribution ---------------------------------------------------
+
+    def note_drift(self, estimate: Optional[float]) -> None:
+        """Feed the watchdog's latest realized-noise-scale estimate into
+        subsequent samples (None clears it after recalibration)."""
+        self._drift_estimate = None if estimate is None else float(estimate)
+
+    # -- sampling ------------------------------------------------------------
+
+    def record(self, engine, now: Optional[float] = None) -> dict:
+        """Take one sample of the engine (host-side only) and append it to
+        the ring (and the JSONL sink, when configured)."""
+        sig = load_signals(engine, now)
+        pools = engine.pools
+        tier_ids = (
+            set(engine.stats["tier_tokens"])
+            | set(engine.stats["tier_decode_steps"])
+            | set(pools)
+        )
+        tiers = {}
+        for tid in tier_ids:
+            key = str(tid)
+            tokens = int(engine.stats["tier_tokens"].get(tid, 0))
+            pool = pools.get(tid)
+            try:
+                tier_obj = engine.tiers.get(tid)
+                energy = float(tier_obj.energy_per_token())
+                exempt = bool(tier_obj.drift_exempt)
+            except ValueError:
+                energy, exempt = None, False  # unpriceable (pure digital)
+            tiers[key] = {
+                "tokens": tokens,
+                "tokens_delta": tokens - self._last_tokens.get(key, 0),
+                "decode_steps": int(
+                    engine.stats["tier_decode_steps"].get(tid, 0)
+                ),
+                "pool_active": None if pool is None else pool.n_active,
+                "pool_free": None if pool is None else pool.n_free,
+                "energy_per_token_aj": energy,
+                "drift_exempt": exempt,
+            }
+            self._last_tokens[key] = tokens
+        governor = engine.governor
+        sample = {
+            "step": self._step,
+            "clock": sig.clock,
+            "now": None if now is None else float(now),
+            "dt": (
+                None if now is None or self._last_now is None
+                else float(now - self._last_now)
+            ),
+            "queue_depth": sig.queue_depth,
+            "in_flight": sig.queue_depth + sig.active,
+            "pool_active": sig.active,
+            "pool_slots": sig.slots,
+            "occupancy": sig.occupancy,
+            "queue_pressure": sig.queue_pressure,
+            "urgent_frac": sig.urgent_frac,
+            "policy_mode": None if governor is None else governor.mode,
+            "noise_scale": float(engine.noise_scale),
+            "drift_promoted": bool(engine.promoted),
+            "drift_estimate": self._drift_estimate,
+            "traces": int(engine.trace_count),
+            "tokens_total": int(engine.stats["tokens_generated"]),
+            "tiers": tiers,
+        }
+        self._step += 1
+        if now is not None:
+            self._last_now = float(now)
+        self._ring.append(sample)
+        if self.jsonl_path is not None:
+            if self._fh is None:
+                self._fh = open(self.jsonl_path, "a")
+            self._fh.write(json.dumps(sample) + "\n")
+            self._fh.flush()
+        return sample
+
+    # -- consumption ---------------------------------------------------------
+
+    def samples(self) -> List[dict]:
+        """The retained samples, oldest first (a copy)."""
+        return list(self._ring)
+
+    def tier_series(self, field: str) -> Dict[str, List]:
+        """Per-tier time series of one tier field over the retained ring
+        (e.g. ``tier_series("tokens")``) — the bench's artifact shape."""
+        out: Dict[str, List] = {}
+        for s in self._ring:
+            for tid, rec in s["tiers"].items():
+                out.setdefault(tid, []).append(rec.get(field))
+        return out
+
+    def __len__(self) -> int:
+        return len(self._ring)
+
+    def close(self) -> None:
+        if self._fh is not None:
+            self._fh.close()
+            self._fh = None
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False

@@ -186,31 +186,33 @@ class PrecisionGovernor:
         for spec in config.tiers:
             tier = spec.tier
             acc = spec.accuracy
-            if isinstance(tier, str):
-                prof = engine.profiles.get(tier)
-                if prof is None:
-                    raise ValueError(
-                        f"policy tier {tier!r} is not a registered profile; "
-                        "demotion must pick among already-registered tiers "
-                        "so the AOT cache contract holds"
-                    )
-                if acc is None:
-                    acc = prof.accuracy
-            else:
-                tier = int(tier)
-                if tier < 1:
-                    raise ValueError(f"uniform tier K must be >= 1, got {tier}")
+            # every target resolves through the engine's TierRegistry: the
+            # ladder may span execution domains (analog K / profile tiers
+            # next to registered digital tiers), and demotion must pick
+            # among already-materializable tiers so the AOT contract holds
+            try:
+                tier_obj = engine.tiers.get(tier)
+            except ValueError as e:
+                raise ValueError(
+                    f"policy tier {tier!r} is not a registered profile or "
+                    "tier; demotion must pick among already-registered "
+                    "tiers so the AOT cache contract holds"
+                ) from e
+            tier = tier_obj.tier_id
+            if acc is None:
+                acc = tier_obj.accuracy
             if acc is None:
                 raise ValueError(
                     f"policy tier {tier!r} has no accuracy metadata: pass "
-                    "TierSpec(tier, accuracy=...) or register the profile "
+                    "TierSpec(tier, accuracy=...) or register the tier "
                     "with accuracy= from a core/search.py eval — floors "
                     "can't be enforced against an unmeasured tier"
                 )
             table.append(
                 (float(engine.tier_energy_per_token(tier)), float(acc), tier)
             )
-        # the demotion ladder: (energy/token, accuracy, tier) cheapest first
+        # the demotion ladder: (energy/token, accuracy, tier) cheapest
+        # first — the registry's floor-ordered ladder, priced per tier
         table.sort(key=lambda row: (row[0], str(row[2])))
         self._table: Tuple[Tuple[float, float, object], ...] = tuple(table)
         self.mode = NOMINAL

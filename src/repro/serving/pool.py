@@ -92,7 +92,7 @@ class SlotRecord:
 
 
 class DecodePool:
-    """One precision tier's persistent decode batch.
+    """One execution tier's persistent decode batch.
 
     Device state: ``cache`` (static ``(slots, cache_len)`` layout, swapped
     wholesale each donated decode/insert call). Host state: per-slot token /
@@ -100,6 +100,11 @@ class DecodePool:
     small operands. A free slot has length 0 — the decode step treats it as
     a batch-padding row, so pool occupancy never changes any active row's
     numerics (per-row noise keys and per-row positions do the rest).
+
+    ``tier`` is the scheduler-facing tier id; ``exec_tier`` is the bound
+    ``ExecutionTier`` object the engine dispatches through (executable
+    factory, cache identity, parameter tree). The pool itself never
+    interprets either — it is pure slot bookkeeping.
     """
 
     def __init__(
@@ -111,14 +116,12 @@ class DecodePool:
         key_shape,
         key_dtype,
         cache,
-        n_repeats: int = 1,
-        profile=None,
+        exec_tier=None,
     ):
         self.tier = tier
         self.slots = int(slots)
         self.cache_len = int(cache_len)
-        self.n_repeats = int(n_repeats)
-        self.profile = profile
+        self.exec_tier = exec_tier
         self.cache = cache
         self.allocator = SlotAllocator(self.slots)
         self.tok = np.zeros((self.slots,), np.int32)

@@ -1,13 +1,15 @@
 """Precision-tiered request scheduling.
 
-The fused kernel's repeat count K is *static* (baked into the trace), so a
-single batch cannot mix precision tiers — tier grouping is what makes
-dynamic precision servable at all. A tier is a repeat *schedule*: the
-classic uniform ``n_repeats=K``, or a registered per-layer
-``PrecisionProfile`` (identified by its id). The scheduler keeps one FIFO
-queue per (tier, seq_bucket) group and dispatches a group when it fills its
-batch bucket or its oldest request has waited ``max_wait`` seconds (the
-anti-starvation deadline for low-traffic tiers).
+What a tier computes is *static* (baked into the trace), so a single batch
+cannot mix execution tiers — tier grouping is what makes dynamic precision
+servable at all. A tier id is an opaque grouping key here: the classic
+uniform ``n_repeats=K`` int, a registered per-layer ``PrecisionProfile``
+name, or any custom tier id from the engine's ``TierRegistry``
+(serving/tiers.py) — the scheduler only compares ids for equality and
+never interprets them. It keeps one FIFO queue per (tier, seq_bucket)
+group and dispatches a group when it fills its batch bucket or its oldest
+request has waited ``max_wait`` seconds (the anti-starvation deadline for
+low-traffic tiers).
 
 Everything here is pure Python and deterministic: the same submissions with
 the same clock readings always produce the same batches in the same order.
@@ -64,6 +66,7 @@ class Request:
     retries: int = 0  # fault-triggered resubmissions so far
     target_latency: Optional[float] = None  # SLO: seconds from arrival
     accuracy_floor: Optional[float] = None  # SLO: min acceptable tier accuracy
+    tier_id: Optional[object] = None  # canonical tier id (engine registry)
 
     @property
     def prompt_len(self) -> int:
@@ -76,8 +79,23 @@ class Request:
     @property
     def tier(self):
         """The batch-compatibility key: requests only share a batch when
-        their compiled repeat schedule is identical."""
+        their compiled execution configuration is identical. ``tier_id``
+        (set by :meth:`retier`) is canonical; the legacy ``profile_id`` /
+        ``n_repeats`` pair backs it for directly-constructed requests."""
+        if self.tier_id is not None:
+            return self.tier_id
         return self.profile_id if self.profile_id is not None else self.n_repeats
+
+    def retier(self, tier) -> None:
+        """Bind this request to a tier id, keeping the legacy mirror
+        fields consistent: named tiers land in ``profile_id`` (with the
+        neutral ``n_repeats=1``), numeric uniform-K tiers in
+        ``n_repeats``. The scheduler never interprets the id beyond
+        equality — what it *means* is the engine registry's business."""
+        self.tier_id = tier
+        named = isinstance(tier, str)
+        self.profile_id = tier if named else None
+        self.n_repeats = 1 if named else int(tier)
 
 
 class TierScheduler:
@@ -207,10 +225,7 @@ class TierScheduler:
                     keep.append(r)
                     continue
                 old = r.tier
-                if isinstance(new, str):
-                    r.profile_id, r.n_repeats = new, 1
-                else:
-                    r.profile_id, r.n_repeats = None, int(new)
+                r.retier(new)
                 ng = self.group_of(r)
                 self._queues.setdefault(ng, []).append(r)
                 touched.add(ng)

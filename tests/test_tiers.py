@@ -1,0 +1,426 @@
+"""Pluggable execution tiers (serving/tiers.py): the ExecutionTier
+interface, the engine-owned TierRegistry, first-class int8 digital tiers
+served next to analog tiers in one engine, the fault-retry / drift / SLA
+promotion-demotion ladders resolving through the registry, the streaming
+MetricsFeed, and the lint contract that no tier-kind branching survives
+outside tiers.py."""
+import json
+import os
+import re
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (
+    DIGITAL_INT8_AJ_PER_MAC,
+    AnalogConfig,
+    PrecisionProfile,
+    total_macs,
+)
+from repro.models import init_energy_tree, init_params, lm
+from repro.models.config import ModelConfig
+from repro.serving import (
+    AnalogProfileTier,
+    DigitalTier,
+    DriftEvent,
+    ExecutionTier,
+    FaultPlan,
+    Int8DigitalTier,
+    MetricsFeed,
+    PolicyConfig,
+    PrecisionGovernor,
+    ServingEngine,
+    TierSpec,
+    UniformKTier,
+)
+from test_serving import ENERGY_AJ, SB
+
+KEY = jax.random.PRNGKey(0)
+MODEL = ModelConfig(
+    name="tier-test", family="dense", n_layers=2, d_model=32, n_heads=2,
+    n_kv_heads=1, d_ff=64, vocab_size=128, attn_q_chunk=16, attn_kv_chunk=16,
+    loss_chunk=32, dtype="float32",
+)
+
+
+@pytest.fixture(scope="module")
+def env():
+    params = init_params(KEY, MODEL)
+    energies = init_energy_tree(MODEL, ENERGY_AJ)
+    return dict(params=params, energies=energies)
+
+
+def _engine(env, *, analog=True, **kw):
+    extra = {}
+    if analog:
+        extra = dict(analog_cfg=AnalogConfig.shot(), energies=env["energies"])
+    kw.setdefault("max_gen", 8)
+    kw.setdefault("max_wait", 0.0)
+    kw.setdefault("max_batch", 4)
+    return ServingEngine(
+        env["params"], MODEL,
+        batch_buckets=(1, 2, 4), seq_buckets=(SB,),
+        k_ladder=(1, 2, 4), **extra, **kw,
+    )
+
+
+def _prompts(n, seed=3, lens=(7, 19, 28)):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, 128, lens[i % len(lens)]).astype(np.int32)
+            for i in range(n)]
+
+
+def _drain(eng, t=0.0, dt=0.01, max_iters=400):
+    results = {}
+    for _ in range(max_iters):
+        if not eng.n_in_flight:
+            break
+        t += dt
+        results.update(eng.pump_step(now=t))
+    assert not eng.n_in_flight, "engine failed to drain (hang)"
+    return results, t
+
+
+# --------------------------------------------------------------------------
+# lint: tier-kind branching must not survive outside tiers.py
+# --------------------------------------------------------------------------
+
+
+def test_no_tier_key_branches():
+    """No serving module besides tiers.py may construct tier cache keys,
+    branch on the digital sentinel, or price uniform K directly — the
+    whole point of the ExecutionTier interface is that those live in
+    exactly one place."""
+    serving_dir = os.path.join(
+        os.path.dirname(__file__), "..", "src", "repro", "serving"
+    )
+    banned = ('("digital"', "cache_key(", "PrecisionProfile.uniform(",
+              "is_uniform")
+    offenders = []
+    for fname in sorted(os.listdir(serving_dir)):
+        if not fname.endswith(".py") or fname == "tiers.py":
+            continue
+        text = open(os.path.join(serving_dir, fname)).read()
+        # strings inside comments don't construct keys; strip them so docs
+        # may still *mention* the interface
+        code = "\n".join(re.sub(r"#.*", "", ln) for ln in text.splitlines())
+        for pat in banned:
+            if pat in code:
+                offenders.append((fname, pat))
+    assert not offenders, (
+        f"tier-kind branching leaked outside serving/tiers.py: {offenders}"
+    )
+
+
+# --------------------------------------------------------------------------
+# registry: registration, resolution, identity
+# --------------------------------------------------------------------------
+
+
+def test_registry_lazy_uniform_and_cache_key(env):
+    eng = _engine(env)
+    t = eng.tiers.get(2)
+    assert isinstance(t, UniformKTier) and t.k == 2
+    assert eng.tiers.get(2) is t  # memoized
+    # executable identity: K + backend + noise kind, nothing else
+    assert t.cache_key() == (2, eng.analog_cfg.backend, eng.analog_cfg.noise.kind)
+    key = eng.tiers.exe_key("decode", 2, 4, 40)
+    assert key == ("decode", 4, 40) + t.cache_key()
+    # the shared admission insert is tier-free
+    assert eng.tiers.exe_key("insert", None, 4, 40, 2) == ("insert", 4, 40, 2)
+
+
+def test_registry_register_is_add_only(env):
+    eng = _engine(env)
+    tier = Int8DigitalTier()
+    assert eng.register_tier(tier) == "int8"
+    assert eng.register_tier(tier) == "int8"  # same object: idempotent
+    with pytest.raises(ValueError, match="frozen"):
+        eng.register_tier(Int8DigitalTier())  # same id, different object
+    with pytest.raises(TypeError, match="ExecutionTier"):
+        eng.tiers.register("not-a-tier")
+    # a profile may not shadow a registered tier id
+    with pytest.raises(ValueError, match="frozen"):
+        eng.register_profile(PrecisionProfile((2, 1), name="int8"))
+
+
+def test_registry_resolution_forms(env):
+    eng = _engine(env)
+    prof = PrecisionProfile((2, 1), name="mix")
+    assert eng.tiers.resolve(prof) == "mix"  # auto-registered
+    assert eng.tiers.resolve(3) == 3
+    tier = Int8DigitalTier(tier_id="q8")
+    assert eng.tiers.resolve(tier) == "q8"
+    # degenerate uniform+coalesce profile shares the bare-K tier
+    assert eng.tiers.resolve_profile(
+        PrecisionProfile.uniform(2, MODEL.n_layers)
+    ) == 2
+    with pytest.raises(ValueError, match="unknown profile"):
+        eng.tiers.get("never-registered")
+
+
+def test_profile_tier_shares_executables_with_uniform_k(env):
+    """A uniform+coalesce profile and the bare-K tier have EQUAL cache
+    keys: equal schedule => shared warm executables, by construction."""
+    eng = _engine(env)
+    u = PrecisionProfile.uniform(2, MODEL.n_layers)
+    eng.register_profile(u)
+    assert (eng.tiers.get(u.name).cache_key()
+            == eng.tiers.get(2).cache_key())
+
+
+def test_tier_binding_is_exclusive(env):
+    eng_a = _engine(env)
+    eng_b = _engine(env)
+    tier = Int8DigitalTier()
+    eng_a.register_tier(tier)
+    with pytest.raises(ValueError, match="another engine"):
+        eng_b.register_tier(tier)
+    unbound = DigitalTier(tier_id="loose")
+    with pytest.raises(ValueError, match="not registered"):
+        unbound.engine
+
+
+def test_registry_ladder_and_exemptions(env):
+    eng = _engine(env)
+    eng.register_tier(UniformKTier(1, accuracy=0.8))
+    eng.register_tier(UniformKTier(4, accuracy=0.97))
+    eng.register_tier(Int8DigitalTier())  # accuracy 1.0, drift exempt
+    ladder = eng.tiers.ladder()
+    assert [t.tier_id for t in ladder] == [1, 4, "int8"]  # floor-ordered
+    assert eng.tiers.drift_exempt_ids() == ["int8"]
+
+
+# --------------------------------------------------------------------------
+# degradation ladder: promote() per tier kind
+# --------------------------------------------------------------------------
+
+
+def test_uniform_promote_climbs_and_saturates(env):
+    eng = _engine(env)
+    assert eng.tiers.get(1).promote() == 2
+    assert eng.tiers.get(2).promote() == 4
+    assert eng.tiers.get(4).promote() == 4  # calibrated top: saturates
+    assert eng.tiers.get(3).promote() == 4  # off-ladder K climbs onto it
+
+
+def test_profile_promote_prefers_registered_higher_accuracy_tier(env):
+    eng = _engine(env)
+    prof = PrecisionProfile((2, 1), name="lo", accuracy=0.9)
+    eng.register_profile(prof)
+    hi = PrecisionProfile((4, 2), name="hi", accuracy=0.97)
+    eng.register_profile(hi)
+    # the registered higher-accuracy tier wins: its executables are warm
+    assert eng.tiers.get("lo").promote() == "hi"
+
+
+def test_profile_promote_retrims_when_nothing_higher_registered(env):
+    eng = _engine(env)
+    prof = PrecisionProfile((2, 1), name="solo")
+    eng.register_profile(prof)
+    promoted = eng.tiers.get("solo").promote()
+    assert promoted == "solo+retrim"
+    assert eng.tiers.profiles["solo+retrim"].repeats == (4, 2)
+    # saturated profile promotes to itself (never invents K > ladder top)
+    top = PrecisionProfile((4, 4), name="top")
+    eng.register_profile(top)
+    assert eng.tiers.get("top").promote() == "top"
+
+
+def test_digital_promote_is_identity(env):
+    eng = _engine(env)
+    eng.register_tier(Int8DigitalTier())
+    assert eng.tiers.get("int8").promote() == "int8"
+    assert eng.tiers.get("int8").drift_promote() == "int8"
+    # drift response passes profiles through unchanged (old behavior)
+    eng.register_profile(PrecisionProfile((2, 1), name="p"))
+    assert eng.tiers.drift_promote("p") == "p"
+    assert eng.tiers.drift_promote(1) == 2  # uniform K rides the ladder
+
+
+def test_fault_retry_promotes_profile_requests_through_registry(env):
+    """Satellite: a faulted profile-tier request retries at a genuinely
+    higher-precision tier (here the per-layer re-trim), not a silent
+    uniform-K fallback."""
+    plan = FaultPlan(exe_faults=[("decode", 2)])
+    eng = _engine(env, continuous=True, pool_slots=2, fault_plan=plan)
+    eng.register_profile(PrecisionProfile((2, 1), name="mix"))
+    uids = [eng.submit(p, profile="mix", max_new_tokens=4, now=0.0)
+            for p in _prompts(2)]
+    results, _ = _drain(eng)
+    assert eng.stats["exe_faults"] >= 1 and eng.stats["retried"] >= 1
+    entry = next(e for e in eng.fault_log if e["kind"] == "exe_fault")
+    for u in entry["retried"]:
+        assert entry["promoted"][u] == "mix+retrim"
+        assert eng.served_tiers[u] == "mix+retrim"
+    assert all(isinstance(results[u], np.ndarray) for u in uids)
+    assert eng.tiers.profiles["mix+retrim"].repeats == (4, 2)
+
+
+# --------------------------------------------------------------------------
+# int8 digital through the continuous pool: bit-identity + zero retraces
+# --------------------------------------------------------------------------
+
+
+def test_int8_through_continuous_pool_golden(env):
+    eng = _engine(env, continuous=True, pool_slots=4)
+    eng.register_tier(Int8DigitalTier())
+    prompts = _prompts(6, seed=11)
+    keys = [jax.random.fold_in(jax.random.PRNGKey(5), i)
+            for i in range(len(prompts))]
+    pooled = {}
+    for replay in range(2):  # replay 0 warms up compiles
+        if replay == 1:
+            eng.exe_cache.reset_stats()
+            traces_before = eng.trace_count
+        uids = [eng.submit(p, tier="int8", max_new_tokens=4, key=k, now=0.0)
+                for p, k in zip(prompts, keys)]
+        res, _ = _drain(eng)
+        out = [res[u] for u in uids]
+        if pooled:
+            assert all(np.array_equal(a, b) for a, b in zip(out, pooled))
+        pooled = out
+    assert eng.trace_count == traces_before, "int8 pool re-traced"
+    assert eng.exe_cache.stats()["hit_rate"] == 1.0
+    # solo re-serve through the same pool: identical tokens per request
+    for i in (0, 3, 5):
+        uid = eng.submit(prompts[i], tier="int8", max_new_tokens=4,
+                         key=keys[i], now=0.0)
+        solo = _drain(eng)[0][uid]
+        assert np.array_equal(solo, pooled[i]), i
+    # int8 is deterministic digital execution: no noise, key-independent
+    uid = eng.submit(prompts[0], tier="int8", max_new_tokens=4,
+                     key=jax.random.PRNGKey(999), now=0.0)
+    assert np.array_equal(_drain(eng)[0][uid], pooled[0])
+
+
+def test_analog_and_digital_tiers_share_one_engine(env):
+    """Mixed-traffic golden: uniform-K analog, profile analog, and int8
+    digital serve side by side — per-tier token accounting holds and each
+    tier's energy comes from its own honest cost model."""
+    eng = _engine(env, continuous=True, pool_slots=4,
+                  profiles=[PrecisionProfile((2, 1), name="mix")])
+    eng.register_tier(Int8DigitalTier())
+    tiers = [1, "mix", "int8", 1, "mix", "int8"]
+    prompts = _prompts(len(tiers), seed=7)
+    uids = {}
+    for i, (p, t) in enumerate(zip(prompts, tiers)):
+        uids[i] = eng.submit(p, tier=t, max_new_tokens=4, now=0.0)
+    results, _ = _drain(eng)
+    assert all(isinstance(results[u], np.ndarray) for u in uids.values())
+    for i, t in enumerate(tiers):
+        assert eng.served_tiers[uids[i]] == t
+    toks = eng.stats["tier_tokens"]
+    assert toks[1] == toks["mix"] == toks["int8"] == 8  # 2 requests x 4
+    # honest economics: the digital tier prices from the per-MAC digital
+    # model — never the analog energy tree
+    macs = float(total_macs(lm.energy_macs(MODEL, 1)))
+    assert eng.tier_energy_per_token("int8") == pytest.approx(
+        DIGITAL_INT8_AJ_PER_MAC * macs
+    )
+    e1 = eng.tier_energy_per_token(1)
+    e_mix = eng.tier_energy_per_token("mix")
+    e4 = eng.tier_energy_per_token(4)
+    assert e1 < e_mix < e4 < eng.tier_energy_per_token("int8")
+
+
+def test_submit_tier_kwarg_is_exclusive(env):
+    eng = _engine(env)
+    eng.register_tier(Int8DigitalTier())
+    with pytest.raises(ValueError, match="not both"):
+        eng.submit(_prompts(1)[0], tier="int8", n_repeats=2, now=0.0)
+    with pytest.raises(ValueError, match="not both"):
+        eng.submit(_prompts(1)[0], tier="int8", profile="x", now=0.0)
+
+
+# --------------------------------------------------------------------------
+# SLA governor: cross-domain demotion through the registry ladder
+# --------------------------------------------------------------------------
+
+
+def test_governor_demotes_across_domains_to_digital(env):
+    """Under overload the governor may demote floorless analog traffic
+    onto a cheaper *digital* tier — the ladder is one floor-ordered table
+    spanning both domains, resolved through the TierRegistry."""
+    eng = _engine(env, continuous=True, pool_slots=2, max_batch=4)
+    # an int8 accelerator priced BELOW every analog rung (explicit
+    # per-MAC cost: the honest-model plumbing is what's under test, not
+    # the physical constant)
+    eng.register_tier(Int8DigitalTier(aj_per_mac=1.0))
+    policy = PolicyConfig(
+        tiers=(TierSpec(1, 0.8), TierSpec(2, 0.9), TierSpec(4, 0.97),
+               TierSpec("int8", 1.0)),
+        demote_at=1.0, promote_at=0.25, shed_at=6.0, min_dwell=2,
+    )
+    eng.governor = PrecisionGovernor(eng, policy)
+    assert [row[2] for row in eng.governor._table][0] == "int8"  # cheapest
+    uids = [eng.submit(p, n_repeats=4, now=0.0, max_new_tokens=4,
+                       target_latency=5.0)
+            for p in _prompts(9)]
+    results, _ = _drain(eng)
+    assert eng.stats["demoted"] > 0
+    assert all(isinstance(results[u], np.ndarray) for u in uids)
+    served = {eng.served_tiers[u] for u in uids}
+    assert "int8" in served, f"no request crossed domains: {served}"
+
+
+def test_governor_rejects_unregistered_policy_tier(env):
+    eng_kw = dict(continuous=True, pool_slots=2)
+    with pytest.raises(ValueError, match="registered"):
+        _engine(env, policy=PolicyConfig(
+            tiers=(TierSpec(1, 0.8), TierSpec("ghost", 0.9))), **eng_kw)
+
+
+# --------------------------------------------------------------------------
+# drift response: digital tiers are exempt
+# --------------------------------------------------------------------------
+
+
+def test_drift_promotion_skips_digital_tiers(env):
+    eng = _engine(env, continuous=True, pool_slots=2)
+    eng.register_tier(Int8DigitalTier())
+    evt = DriftEvent(step=0, probe_idx=0, estimate=1.8, band=(0.8, 1.2))
+    eng.promote_tiers(evt)
+    assert eng.promoted
+    entry = next(e for e in eng.fault_log if e["kind"] == "drift_promotion")
+    assert entry["exempt_tiers"] == ["int8"]
+    # new uniform-K traffic promotes one rung; int8 serves unpromoted
+    u_k = eng.submit(_prompts(1)[0], n_repeats=1, max_new_tokens=2, now=0.0)
+    u_d = eng.submit(_prompts(1)[0], tier="int8", max_new_tokens=2, now=0.0)
+    _drain(eng)
+    assert eng.served_tiers[u_k] == 2
+    assert eng.served_tiers[u_d] == "int8"
+
+
+# --------------------------------------------------------------------------
+# MetricsFeed: ring bound, JSONL sink, per-tier series
+# --------------------------------------------------------------------------
+
+
+def test_metrics_feed_samples_and_jsonl(env, tmp_path):
+    sink = tmp_path / "metrics.jsonl"
+    feed = MetricsFeed(capacity=8, jsonl_path=sink)
+    eng = _engine(env, continuous=True, pool_slots=2, metrics=feed)
+    eng.register_tier(Int8DigitalTier())
+    for i, p in enumerate(_prompts(4)):
+        eng.submit(p, tier="int8" if i % 2 else 1, max_new_tokens=3,
+                   now=i * 1e-3)
+    _drain(eng)
+    feed.close()
+    assert 0 < len(feed) <= 8  # ring bound holds
+    lines = [json.loads(ln) for ln in sink.read_text().splitlines()]
+    assert len(lines) >= len(feed)  # sink kept what the ring evicted
+    last = feed.samples()[-1]
+    assert last["tiers"]["int8"]["drift_exempt"] is True
+    assert last["tiers"]["1"]["drift_exempt"] is False
+    assert last["tiers"]["int8"]["tokens"] == 6  # 2 requests x 3
+    assert last["tiers"]["int8"]["energy_per_token_aj"] > 0
+    assert last["queue_depth"] == 0 and last["traces"] == eng.trace_count
+    series = feed.tier_series("tokens")
+    assert series["1"][-1] == 6 and series["int8"][-1] == 6
+    feed.note_drift(1.3)
+    s = feed.record(eng, now=1.0)
+    assert s["drift_estimate"] == 1.3
+    with pytest.raises(ValueError, match="capacity"):
+        MetricsFeed(capacity=0)
