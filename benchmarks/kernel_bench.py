@@ -21,18 +21,27 @@ ANALYTIC HBM traffic per cell (f32 bytes; the fusion argument on TPU):
   fused:   read x, w once; write y once — noise generated and averaged
            in-register, INDEPENDENT of K.
 
-Persisted via ``cache_json`` so the BENCH trajectory records every run.
-``--smoke`` runs a tiny sweep for CI.
+Persisted via ``cache_json`` (itself atomic) and summarized into the
+repo-root ``BENCH_kernel.json`` through ``atomic_write_json`` with a
+``run_provenance()`` block — the artifact carries the commit/jax stack
+that produced it, and a crash mid-write never truncates the previous
+record. ``--smoke`` runs a tiny sweep for CI.
 """
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import cache_json
+from benchmarks.common import atomic_write_json, cache_json, run_provenance
+
+TRAJECTORY_PATH = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "BENCH_kernel.json",
+)
 from repro.core import AnalogConfig, analog_dot
 from repro.core.redundant import time_averaged_dot_explicit
 from repro.kernels import analog_matmul
@@ -115,6 +124,7 @@ def _sweep(shapes, k_repeats, iters, kernel_iters):
     )
     return {
         "backend": jax.default_backend(),
+        "provenance": run_provenance(),
         "rows": rows,
         "analog_overhead_x": base["analog_overhead_x"],
         "hbm_traffic_saving_x": big["hbm_traffic_saving_x"],
@@ -150,13 +160,31 @@ def _print_table(out):
         )
 
 
+def _write_trajectory(out, smoke: bool) -> str:
+    """Atomic repo-root summary: headline numbers + provenance, never the
+    full row dump (that lives in the artifacts/paper cache)."""
+    record = {
+        "bench": "kernel_bench",
+        "smoke": smoke,
+        "backend": out["backend"],
+        "provenance": out.get("provenance", run_provenance()),
+        "n_rows": len(out["rows"]),
+        "analog_overhead_x": out["analog_overhead_x"],
+        "hbm_traffic_saving_x": out["hbm_traffic_saving_x"],
+        "speedup_x": out["speedup_x"],
+    }
+    return atomic_write_json(TRAJECTORY_PATH, record)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true", help="tiny sweep for CI")
     ap.add_argument("--force", action="store_true", help="ignore cached JSON")
     args = ap.parse_args()
     fn = kernel_bench_smoke if args.smoke else kernel_bench
-    _print_table(fn(force=args.force))
+    out = fn(force=args.force)
+    _print_table(out)
+    print(f"trajectory -> {_write_trajectory(out, args.smoke)}")
 
 
 if __name__ == "__main__":

@@ -1146,6 +1146,156 @@ def hybrid_smoke_bench():
 
 
 # ---------------------------------------------------------------------------
+# sharded: tensor-parallel serving across a device mesh
+# ---------------------------------------------------------------------------
+
+
+def _serve_replay(eng, trace, req_keys):
+    """One replay of ``trace`` (continuous pump, virtual clock); returns
+    (ordered token rows, tokens generated, wall seconds, decode row-slots)."""
+    slots_before = eng.stats["decode_slot_steps"]
+    tokens_before = eng.stats["tokens_generated"]
+    t0 = time.perf_counter()
+    uid_of = {}
+    for i, (prompt, k, gen) in enumerate(trace):
+        uid_of[i] = eng.submit(prompt, tier=k, max_new_tokens=gen,
+                               key=req_keys[i], now=i * 1e-3)
+    done = {}
+    vt = len(trace) * 1e-3
+    while eng.n_in_flight:
+        done.update(eng.pump_step(now=vt, force=True))
+    wall = time.perf_counter() - t0
+    rows = [np.asarray(done[uid_of[i]]) for i in range(len(trace))]
+    return (
+        rows,
+        eng.stats["tokens_generated"] - tokens_before,
+        wall,
+        eng.stats["decode_slot_steps"] - slots_before,
+    )
+
+
+@cache_json("serving_bench_sharded")
+def sharded_smoke_bench():
+    """One engine, one request stream, N tensor-parallel shards — and the
+    exact same tokens.
+
+    Serves ``granite_20b`` at reduced depth (``configs/shapes.py``
+    ``reduced_depth``: 2 layers, /16 width, MQA layout and head_dim intact)
+    across a host-device mesh (CI forces 8 CPU devices via
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8``). The engine
+    keeps every jit-boundary array replicated; tensor parallelism lives
+    inside ``analog_dot``'s shard_map, where each column shard salts its
+    counter-based noise stream on its global tile coordinates — so the
+    sharded engine's greedy tokens are asserted bit-identical to a
+    single-device oracle engine (``backend="tile"``: the same stream the
+    shards slice), per tier, including a non-uniform per-layer profile tier.
+
+    The whole run is ONE engine driven through a mesh attach -> warm ->
+    steady -> reshard -> warm -> steady episode: after each mesh's warmup,
+    steady-state replays must run at a 100% executable-cache hit rate with
+    zero retraces (the mesh fingerprint in every AOT key is what makes the
+    reshard compile fresh entries exactly once). Records tokens/s and
+    decode row-slots vs mesh size for the trajectory artifact.
+    """
+    n_dev = len(jax.devices())
+    if n_dev < 2:
+        raise RuntimeError(
+            "sharded_smoke_bench needs >= 2 devices; run under "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=8 (see "
+            "tests/test_compress.py / launch/dryrun.py for the pattern)"
+        )
+    from repro.configs.granite_20b import CONFIG as GRANITE
+    from repro.configs.shapes import reduced_depth
+    from repro.launch.mesh import make_mesh_for_devices
+
+    cfg = reduced_depth(
+        GRANITE, n_layers=2, width_divisor=16,
+        attn_q_chunk=32, attn_kv_chunk=32, loss_chunk=64, dtype="float32",
+    )
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    energies = init_energy_tree(cfg, ENERGY_AJ)
+    profile = PrecisionProfile((2, 1), name="edge")
+    # "tile" is the tiling-invariant stream TP shards slice; the oracle must
+    # run it too (the legacy jax.random "jnp" path draws a different stream)
+    a_cfg = AnalogConfig.shot(backend="tile")
+    tiers = (1, 2, "edge")
+    rng = np.random.default_rng(5)
+    trace = []
+    for i in range(8):
+        length = int(rng.integers(6, 25))
+        prompt = rng.integers(1, cfg.vocab_size, length)
+        trace.append((prompt, tiers[i % len(tiers)], 4))
+    req_keys = [jax.random.fold_in(jax.random.PRNGKey(41), i)
+                for i in range(len(trace))]
+
+    def make_engine(mesh):
+        return ServingEngine(
+            params, cfg, analog_cfg=a_cfg, energies=energies,
+            max_gen=6, max_batch=4, max_wait=1.0, batch_buckets=(1, 2, 4),
+            seq_buckets=(32,), continuous=True, pool_slots=4,
+            profiles=[profile], mesh=mesh,
+        )
+
+    def measure(eng):
+        """Warm replay (compiles), then a steady replay with reset stats."""
+        rows, _, _, _ = _serve_replay(eng, trace, req_keys)
+        eng.exe_cache.reset_stats()
+        traces_before = eng.trace_count
+        rows2, tokens, wall, slots = _serve_replay(eng, trace, req_keys)
+        assert all(np.array_equal(a, b) for a, b in zip(rows, rows2)), (
+            "replay changed a request's tokens"
+        )
+        cache = eng.exe_cache.stats()
+        return rows, {
+            "tokens_per_s": tokens / wall,
+            "decode_slot_steps": int(slots),
+            "hit_rate": cache["hit_rate"],
+            "steady_misses": cache["misses"],
+            "steady_retraces": eng.trace_count - traces_before,
+            "cache_entries": cache["entries"],
+        }
+
+    # single-device oracle: same tile stream, no mesh
+    oracle_rows, oracle_rec = measure(make_engine(None))
+
+    mps = [mp for mp in (2, 4) if n_dev % mp == 0 and mp <= n_dev]
+    per_mesh = {"1": dict(oracle_rec, model_parallel=1, tokens_match_oracle=True)}
+    eng = None
+    for mp in mps:  # ONE engine across the episode: attach -> serve -> reshard
+        mesh = make_mesh_for_devices(n_dev, model_parallel=mp)
+        if eng is None:
+            eng = make_engine(mesh)
+        else:
+            eng.attach_mesh(mesh)  # drained reshard; AOT keys refingerprint
+        rows, rec = measure(eng)
+        rec["model_parallel"] = mp
+        rec["tokens_match_oracle"] = bool(
+            all(np.array_equal(a, b) for a, b in zip(oracle_rows, rows))
+        )
+        per_mesh[str(mp)] = rec
+
+    sharded_rows = [per_mesh[str(mp)] for mp in mps]
+    return {
+        "backend": jax.default_backend(),
+        "devices": n_dev,
+        "model": cfg.name,
+        "n_requests": len(trace),
+        "tiers": [str(t) for t in tiers],
+        "mesh_sizes": [1] + mps,
+        "per_mesh": per_mesh,
+        "sharded_equals_unsharded": all(
+            r["tokens_match_oracle"] for r in sharded_rows
+        ),
+        "zero_steady_retraces": all(
+            r["steady_retraces"] == 0 and r["steady_misses"] == 0
+            for r in per_mesh.values()
+        ),
+        "steady_hit_rate": min(r["hit_rate"] for r in per_mesh.values()),
+        "resharded": len(mps) > 1,
+    }
+
+
+# ---------------------------------------------------------------------------
 
 
 def _bench(model_kw, n_requests, gen, max_len, tiers=TIERS, weights=TIER_WEIGHTS):
@@ -1282,6 +1432,28 @@ def _write_trajectory(out, smoke: bool) -> str:
             "hit_rate": h["steady"]["hit_rate"],
             "metrics": h["metrics"],
         }
+    if "sharded" in out:  # tensor-parallel serving across a device mesh
+        s = out["sharded"]
+        record["sharded"] = {
+            "devices": s["devices"],
+            "model": s["model"],
+            "tiers": s["tiers"],
+            "mesh_sizes": s["mesh_sizes"],
+            "per_mesh": {
+                mp: {
+                    "tokens_per_s": rec["tokens_per_s"],
+                    "decode_slot_steps": rec["decode_slot_steps"],
+                    "hit_rate": rec["hit_rate"],
+                    "steady_retraces": rec["steady_retraces"],
+                    "tokens_match_oracle": rec["tokens_match_oracle"],
+                }
+                for mp, rec in s["per_mesh"].items()
+            },
+            "sharded_equals_unsharded": s["sharded_equals_unsharded"],
+            "zero_steady_retraces": s["zero_steady_retraces"],
+            "steady_hit_rate": s["steady_hit_rate"],
+            "resharded": s["resharded"],
+        }
     if "faults" in out:  # the fault-tolerance contract, machine-readable
         fi, fd = out["faults"]["inject"], out["faults"]["drift"]
         record["faults"] = {
@@ -1331,6 +1503,11 @@ def main() -> None:
                     help="also serve int8 digital tiers next to uniform-K "
                          "and profile analog tiers in one engine, streaming "
                          "the per-tier MetricsFeed to a JSONL artifact")
+    ap.add_argument("--sharded", action="store_true",
+                    help="also serve tensor-parallel across a device mesh "
+                         "(needs >= 2 devices, e.g. XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=8) and "
+                         "assert sharded == unsharded tokens per tier")
     args = ap.parse_args()
     fn = serving_bench_smoke if args.smoke else serving_bench
     out = fn(force=args.force)
@@ -1340,6 +1517,8 @@ def main() -> None:
         out["policy"] = overload_smoke_bench(force=args.force)
     if args.hybrid:
         out["hybrid"] = hybrid_smoke_bench(force=args.force)
+    if args.sharded:
+        out["sharded"] = sharded_smoke_bench(force=args.force)
     records = [("dense", out)]
     if "griffin" in out:
         records.append(("griffin", out["griffin"]))
@@ -1516,6 +1695,30 @@ def main() -> None:
             "runtime operand"
         )
         assert fd["recovered_in_band"], "recalibration did not clear the drift"
+    if "sharded" in out:
+        s = out["sharded"]
+        print(f"--- sharded serving ({s['model']}, {s['devices']} devices, "
+              f"tiers {s['tiers']}) ---")
+        print(f"{'mp':>4} {'tok/s':>9} {'row-slots':>10} {'hit_rate':>9} "
+              f"{'retraces':>9} {'==oracle':>9}")
+        for mp in s["mesh_sizes"]:
+            rec = s["per_mesh"][str(mp)]
+            print(f"{mp:>4} {rec['tokens_per_s']:>9.1f} "
+                  f"{rec['decode_slot_steps']:>10} {rec['hit_rate']:>9.0%} "
+                  f"{rec['steady_retraces']:>9} "
+                  f"{str(rec['tokens_match_oracle']):>9}")
+        print(f"sharded==unsharded: {s['sharded_equals_unsharded']} "
+              f"resharded: {s['resharded']} "
+              f"zero_steady_retraces: {s['zero_steady_retraces']}")
+        assert s["sharded_equals_unsharded"], (
+            "tensor-parallel serving changed a request's tokens vs the "
+            "single-device oracle"
+        )
+        assert s["zero_steady_retraces"] and s["steady_hit_rate"] == 1.0, (
+            "sharded serving re-traced in steady state (mesh fingerprint "
+            "missing from an AOT key?)"
+        )
+        assert s["resharded"], "the episode never exercised a mesh resize"
     if "continuous" in out:
         path = _write_trajectory(out, smoke=args.smoke)
         print(f"perf trajectory written to {path}")

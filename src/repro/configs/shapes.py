@@ -47,6 +47,40 @@ def shape_applicable(cfg: ModelConfig, shape: ShapeSpec) -> tuple[bool, str]:
     return True, ""
 
 
+def reduced_depth(
+    cfg: ModelConfig, *, n_layers: int, width_divisor: int = 1, **overrides
+) -> ModelConfig:
+    """Depth- (and optionally width-) reduced variant of a paper config.
+
+    Keeps the architecture's identity — family, MQA/GQA layout, head_dim,
+    MLP type, d_ff/d_model ratio — while shrinking it to host-device scale:
+    ``n_layers`` replaces the depth outright, and ``width_divisor`` divides
+    d_model / d_ff / n_heads / vocab_size (head_dim is preserved, so the
+    attention geometry survives the shrink). This is how the serving bench
+    demonstrates ``granite_20b`` tensor-parallel on a forced-host-device CPU
+    mesh without allocating 20B replicated parameters. Extra ``overrides``
+    pass through to ``dataclasses.replace`` (e.g. chunk sizes for short
+    sequences).
+    """
+    if n_layers < 1:
+        raise ValueError(f"n_layers must be >= 1, got {n_layers}")
+    if width_divisor < 1:
+        raise ValueError(f"width_divisor must be >= 1, got {width_divisor}")
+    wd = int(width_divisor)
+    changes = dict(
+        name=f"{cfg.name}-L{n_layers}" + (f"-w{wd}" if wd > 1 else ""),
+        n_layers=int(n_layers),
+        d_model=max(1, cfg.d_model // wd),
+        d_ff=max(1, cfg.d_ff // wd),
+        n_heads=max(1, cfg.n_heads // wd),
+        n_kv_heads=max(1, min(cfg.n_kv_heads, cfg.n_heads // wd)),
+        vocab_size=max(2, cfg.vocab_size // wd),
+        head_dim=cfg.head_dim,
+    )
+    changes.update(overrides)
+    return dataclasses.replace(cfg, **changes)
+
+
 def _sds(shape, dtype):
     return jax.ShapeDtypeStruct(shape, dtype)
 

@@ -25,7 +25,7 @@ import jax.numpy as jnp
 
 from repro.core import noise as noise_lib
 from repro.core.noise import NoiseSpec
-from repro.kernels.dispatch import fused_dot, resolve_backend
+from repro.kernels.dispatch import TP_AXIS, fused_dot, resolve_backend, tile_dot
 from repro.quant.affine import QuantParams, fake_quant
 
 Array = jax.Array
@@ -51,7 +51,9 @@ class AnalogConfig:
         metadata=dict(static=True), default=noise_lib.PHOTON_ENERGY_AJ
     )
     #: execution backend: "auto" picks the fused Pallas kernel when shape /
-    #: platform permit (see kernels/dispatch.py), "pallas"/"jnp" force a path.
+    #: platform permit (see kernels/dispatch.py), "pallas"/"jnp"/"tile"
+    #: force a path ("tile" = the pure-jnp oracle with Pallas-identical
+    #: counter-based noise — the stream tensor-parallel shards slice).
     backend: str = dataclasses.field(metadata=dict(static=True), default="auto")
     #: legacy alias for backend="pallas" (kept for existing configs/tests).
     use_kernel: bool = dataclasses.field(metadata=dict(static=True), default=False)
@@ -61,7 +63,7 @@ class AnalogConfig:
             raise ValueError(f"bad mode {self.mode!r}")
         if self.granularity not in (PER_LAYER, PER_CHANNEL):
             raise ValueError(f"bad granularity {self.granularity!r}")
-        if self.backend not in ("auto", "pallas", "jnp"):
+        if self.backend not in ("auto", "pallas", "jnp", "tile"):
             raise ValueError(f"bad backend {self.backend!r}")
 
     @classmethod
@@ -186,6 +188,91 @@ def _x_range(sq: SiteQuant, x: Array) -> Array:
     return (jnp.max(x) - jnp.min(x)).astype(jnp.float32)
 
 
+def _maybe_sharded_analog_dot(
+    x: Array,
+    w: Array,
+    *,
+    cfg: AnalogConfig,
+    energy: Array,
+    key: jax.Array,
+    sq: Optional[SiteQuant],
+    n_repeats: int,
+) -> Optional[Array]:
+    """Column-parallel analog matmul through shard_map, or None to fall back.
+
+    Each tensor-parallel shard holds columns ``[r * n_local, (r+1) * n_local)``
+    of the weight and draws its noise with the matching global column offset,
+    so (Threefry being counter-based) it computes exactly its tile of the
+    unsharded "tile"/Pallas stream — the gathered output is bit-identical to
+    the single-device oracle at every K and per-layer profile. Only the
+    output N dim is sharded (the contracting dim stays whole: no psum, no
+    cross-device rounding) and the gather back to replicated is pure data
+    movement, so bit-identity is exact, not approximate.
+
+    Falls back (returns None) when there is no active tensor-parallel mesh,
+    when the resolved backend is not tiling-invariant ("jnp"), or when the
+    operands don't fit the column-parallel contract (calibrated quantizers,
+    per-channel energies, N not divisible by the shard count).
+    """
+    from repro.kernels.dispatch import active_mesh
+
+    mesh = active_mesh()
+    if mesh is None:
+        return None
+    tp = int(dict(mesh.shape).get(TP_AXIS, 1))
+    if tp <= 1:
+        return None
+    if sq is not None or w.ndim != 2 or w.shape[1] % tp != 0:
+        return None
+    if jnp.ndim(energy) != 0:
+        return None  # per-channel energy columns would need co-sharding
+    n_local = w.shape[1] // tp
+    backend = resolve_backend(cfg, x.shape, (w.shape[0], n_local))
+    if backend not in ("tile", "pallas"):
+        return None
+
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.kernels import ops as kernel_ops
+
+    kb = key_batch(key)
+    if kb is not None and (x.ndim < 2 or x.shape[0] != kb):
+        raise ValueError(
+            f"stacked key batch {kb} does not match x leading dim {x.shape}"
+        )
+    kraw = raw_key(key)
+    e_arr = jnp.asarray(energy, jnp.float32)
+    mm = kernel_ops.analog_matmul if backend == "pallas" else (
+        kernel_ops.analog_matmul_reference
+    )
+
+    def shard(xs, ws, ks, es):
+        col0 = jax.lax.axis_index(TP_AXIS) * n_local
+
+        def one(xr, kr):
+            return mm(
+                xr, ws, energy=es, key=kr, cfg=cfg, sq=None,
+                n_repeats=n_repeats, offsets=(0, col0),
+            )
+
+        if kb is None:
+            return one(xs, ks)
+        return jax.vmap(one)(xs, ks)
+
+    out_spec = P(*([None] * (x.ndim - 1)), TP_AXIS)
+    y = shard_map(
+        shard,
+        mesh=mesh,
+        in_specs=(P(), P(None, TP_AXIS), P(), P()),
+        out_specs=out_spec,
+        check_rep=False,
+    )(x, w, kraw, e_arr)
+    # Gather the column shards back to replicated: everything outside
+    # analog_dot (residual adds, caches, AOT argument shardings) stays
+    # replicated, which is what lets executables survive mesh resize.
+    return jax.lax.with_sharding_constraint(y, NamedSharding(mesh, P()))
+
+
 def analog_dot(
     x: Array,
     w: Array,
@@ -211,6 +298,15 @@ def analog_dot(
         raise ValueError(f"contract mismatch {x.shape} @ {w.shape}")
     if n_repeats < 1:
         raise ValueError(f"n_repeats must be >= 1, got {n_repeats}")
+    if cfg.mode == "analog" and energy is not None and key is not None:
+        # Tensor-parallel path: under an active mesh with a model axis > 1,
+        # run the matmul column-sharded through shard_map — checked before
+        # the stacked-key vmap so ONE shard_map wraps the whole batch.
+        y = _maybe_sharded_analog_dot(
+            x, w, cfg=cfg, energy=energy, key=key, sq=sq, n_repeats=n_repeats
+        )
+        if y is not None:
+            return y
     kb = key_batch(key)
     if kb is not None:
         # Stacked per-request keys: one independent noise stream per leading
@@ -242,8 +338,13 @@ def analog_dot(
 
     if energy is None or key is None:
         raise ValueError("analog mode requires energy and key")
-    if resolve_backend(cfg, x.shape, w.shape) == "pallas":
+    backend = resolve_backend(cfg, x.shape, w.shape)
+    if backend == "pallas":
         return fused_dot(
+            x, w, cfg=cfg, energy=energy, key=key, sq=sq, n_repeats=n_repeats
+        )
+    if backend == "tile":
+        return tile_dot(
             x, w, cfg=cfg, energy=energy, key=key, sq=sq, n_repeats=n_repeats
         )
 

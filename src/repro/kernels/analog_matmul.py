@@ -76,8 +76,12 @@ def _kernel(
     tj = pl.program_id(1)
     tk = pl.program_id(2)
     sc = sc_ref[...]  # (1, 8) f32 scalars
-    seed = seed_ref[...]  # (1, 2) uint32
+    seed = seed_ref[...]  # (1, 4) uint32: key words + global tile origin
     k0, k1 = seed[0, 0], seed[0, 1]
+    # Global origin of this call's operands in the unsharded problem: a
+    # tensor-parallel shard offsets its noise counters so it draws exactly
+    # its tile of the global stream ((0, 0) for whole-array calls).
+    row0, col0 = seed[0, 2], seed[0, 3]
 
     @pl.when(tk == 0)
     def _init():
@@ -109,8 +113,8 @@ def _kernel(
         xi = prng.repeat_averaged_gaussian_tile(
             k0 ^ jnp.uint32(prng.WEIGHT_STREAM_SALT),
             k1,
-            tk * bk,
-            tj * bn,
+            jnp.asarray(tk * bk, jnp.uint32),
+            col0 + jnp.asarray(tj * bn, jnp.uint32),
             (bk, bn),
             n_repeats,
         )
@@ -125,7 +129,12 @@ def _kernel(
             # K repeat draws averaged in-register: one matmul pass, zero
             # extra HBM traffic for the dynamic-precision redundancy.
             xi = prng.repeat_averaged_gaussian_tile(
-                k0, k1, ti * bm, tj * bn, (bm, bn), n_repeats
+                k0,
+                k1,
+                row0 + jnp.asarray(ti * bm, jnp.uint32),
+                col0 + jnp.asarray(tj * bn, jnp.uint32),
+                (bm, bn),
+                n_repeats,
             )
             y = y + rs_ref[...] * cs_ref[...] * xi
         if quant_out:
@@ -154,9 +163,12 @@ def analog_matmul_raw(
 
     row_scale: (M, 1) f32; col_scale: (1, N) f32; wq: (3, N) f32 rows =
     (delta, zp, bins); scalars: (1, 8) f32 = (xd, xz, xbins, od, oz, obins,
-    0, 0); seed: (1, 2) uint32. ``n_repeats`` (static): average K independent
-    noise draws in-register — the fused form of the paper's K-repeat
-    redundancy, with noise std scaled by 1/sqrt(K).
+    0, 0); seed: (1, 4) uint32 = (k0, k1, row0, col0) — key words plus the
+    global tile origin of this call in the unsharded problem (tensor-parallel
+    shards offset their noise counters; whole-array calls pass (0, 0)).
+    ``n_repeats`` (static): average K independent noise draws in-register —
+    the fused form of the paper's K-repeat redundancy, with noise std scaled
+    by 1/sqrt(K).
     """
     m, k = x.shape
     k2, n = w.shape
@@ -203,7 +215,7 @@ def analog_matmul_raw(
             pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
             pl.BlockSpec((3, bn), lambda i, j, kk: (0, j)),
             pl.BlockSpec((1, 8), lambda i, j, kk: (0, 0)),
-            pl.BlockSpec((1, 2), lambda i, j, kk: (0, 0)),
+            pl.BlockSpec((1, 4), lambda i, j, kk: (0, 0)),
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),

@@ -5,13 +5,27 @@ to decide where a matmul executes:
 
   * ``cfg.backend == "pallas"`` — always the fused kernel (interpret mode on
     CPU, compiled on TPU). Also selected by the legacy ``use_kernel=True``.
-  * ``cfg.backend == "jnp"`` — always the pure-jnp path.
+  * ``cfg.backend == "tile"`` — the pure-jnp *tile oracle*: identical math
+    and counter-based noise draws to the Pallas kernel (kernels/ref.py), no
+    Pallas. This is the stream tensor-parallel sharding slices — a shard
+    salted on its global tile coordinates draws exactly its tile of it — so
+    it is also what "auto" picks on CPU whenever a tensor-parallel mesh is
+    active (sharded == unsharded stays bit-exact there).
+  * ``cfg.backend == "jnp"`` — always the legacy pure-jnp path
+    (jax.random-based noise; NOT tiling-invariant, never sharded).
   * ``cfg.backend == "auto"`` (default) — the fused kernel when it is the
     faster choice: analog mode, running on a TPU, and every matmul dimension
     at least ``MIN_PALLAS_DIM`` (MXU tiles are 128-aligned; smaller problems
     gain nothing from the fusion and interpret-mode Pallas on CPU is a
-    correctness vehicle, not a fast path). Everything else falls back to the
-    jnp oracle path, which stays bit-compatible with pre-dispatch behavior.
+    correctness vehicle, not a fast path). Under an active tensor-parallel
+    mesh the per-shard (local) N decides the threshold and the non-TPU /
+    small-shape fallback is "tile" instead of "jnp". Everything else falls
+    back to the jnp path, bit-compatible with pre-dispatch behavior.
+
+Mesh awareness: resolution consults the ambient logical mesh
+(``models/sharding.use_mesh``) — ``active_tp()`` below — and is memoized on
+(config, shapes, platform, tp), so with bucketed serving it still resolves
+once per bucket per mesh shape.
 """
 from __future__ import annotations
 
@@ -25,41 +39,73 @@ Array = jax.Array
 AUTO = "auto"
 PALLAS = "pallas"
 JNP = "jnp"
-BACKENDS = (AUTO, PALLAS, JNP)
+TILE = "tile"
+BACKENDS = (AUTO, PALLAS, JNP, TILE)
 
 #: smallest dimension for which "auto" picks the Pallas kernel.
 MIN_PALLAS_DIM = 128
+
+#: mesh axis tensor-parallel matmul shards live on (launch/mesh.py).
+TP_AXIS = "model"
+
+
+def active_tp() -> int:
+    """Tensor-parallel shard count of the ambient logical mesh (1 = none)."""
+    # Lazy import: core/kernels must not import repro.models at module time.
+    from repro.models import sharding as shardlib
+
+    mesh = shardlib.get_mesh()
+    if mesh is None:
+        return 1
+    return int(dict(mesh.shape).get(TP_AXIS, 1))
+
+
+def active_mesh():
+    """The ambient logical mesh, or None (see models/sharding.use_mesh)."""
+    from repro.models import sharding as shardlib
+
+    return shardlib.get_mesh()
 
 
 def resolve_backend(cfg, x_shape: tuple, w_shape: tuple) -> str:
     """Resolve the execution backend for one ``(..., K) @ (K, N)`` matmul.
 
-    Returns ``"pallas"`` or ``"jnp"`` (never ``"auto"``). Static: depends
-    only on the config and operand *shapes*, so it is jit/vmap safe.
+    Returns ``"pallas"``, ``"tile"``, or ``"jnp"`` (never ``"auto"``).
+    Static: depends only on the config, operand *shapes*, platform, and the
+    ambient mesh's tensor-parallel factor, so it is jit/vmap safe.
 
-    Memoized on (config, shapes, platform): the serving engine's bucketing
-    bounds the distinct shape set, so steady-state serving resolves once per
-    bucket, not once per analog_dot call.
+    Memoized on (config, shapes, platform, tp): the serving engine's
+    bucketing bounds the distinct shape set, so steady-state serving
+    resolves once per bucket, not once per analog_dot call.
     """
-    return _resolve_cached(cfg, tuple(x_shape), tuple(w_shape), jax.default_backend())
+    return _resolve_cached(
+        cfg, tuple(x_shape), tuple(w_shape), jax.default_backend(), active_tp()
+    )
 
 
 @functools.lru_cache(maxsize=4096)
-def _resolve_cached(cfg, x_shape: tuple, w_shape: tuple, platform: str) -> str:
+def _resolve_cached(
+    cfg, x_shape: tuple, w_shape: tuple, platform: str, tp: int
+) -> str:
     backend = getattr(cfg, "backend", AUTO)
     if backend == PALLAS or (backend == AUTO and getattr(cfg, "use_kernel", False)):
         return PALLAS
+    if backend == TILE:
+        return TILE
     if backend == JNP:
         return JNP
     if cfg.mode != "analog":
         return JNP
+    fallback = TILE if tp > 1 else JNP
     if platform != "tpu":
-        return JNP
+        return fallback
     m = int(np.prod(x_shape[:-1], dtype=np.int64)) if len(x_shape) > 1 else 1
     k = x_shape[-1]
     n = w_shape[-1]
+    if tp > 1 and n % tp == 0:
+        n = n // tp  # the per-shard problem is what the kernel sees
     if min(m, k, n) < MIN_PALLAS_DIM:
-        return JNP
+        return fallback
     return PALLAS
 
 
@@ -70,5 +116,16 @@ def fused_dot(
     from repro.kernels import ops as kernel_ops
 
     return kernel_ops.analog_matmul(
+        x, w, energy=energy, key=key, cfg=cfg, sq=sq, n_repeats=n_repeats
+    )
+
+
+def tile_dot(
+    x: Array, w: Array, *, cfg, energy, key, sq=None, n_repeats: int = 1
+) -> Array:
+    """The tile oracle: Pallas-identical math + noise draws, pure jnp."""
+    from repro.kernels import ops as kernel_ops
+
+    return kernel_ops.analog_matmul_reference(
         x, w, energy=energy, key=key, cfg=cfg, sq=sq, n_repeats=n_repeats
     )

@@ -32,8 +32,18 @@ def _ranges(sq, w, x) -> Tuple[Array, Array]:
     return w_rng, jnp.asarray(x_rng, jnp.float32)
 
 
-def prepare_operands(x2d: Array, w: Array, *, energy, key, cfg, sq=None) -> dict:
-    """Compute raw kernel operands from the analog execution description."""
+def prepare_operands(
+    x2d: Array, w: Array, *, energy, key, cfg, sq=None, offsets=(0, 0)
+) -> dict:
+    """Compute raw kernel operands from the analog execution description.
+
+    ``offsets = (row0, col0)`` is the global tile origin of this call's
+    operands in the unsharded problem: a tensor-parallel shard holding
+    columns ``[col0, col0 + n)`` of the full weight passes its column offset
+    so the counter-based noise it draws is exactly its tile of the global
+    stream (the whole-array call at ``(0, 0)`` is unchanged). Offsets may be
+    traced values (e.g. ``axis_index * n_local`` inside ``shard_map``).
+    """
     m, k = x2d.shape
     _, n = w.shape
     energy = jnp.asarray(energy, jnp.float32)
@@ -92,7 +102,9 @@ def prepare_operands(x2d: Array, w: Array, *, energy, key, cfg, sq=None) -> dict
     scalars = jnp.stack([xd, xz, xb, od, oz, ob, jnp.zeros(()), jnp.zeros(())]).reshape(1, 8)
 
     k0, k1 = prng.key_to_words(key)
-    seed = jnp.stack([k0, k1]).reshape(1, 2)
+    row0 = jnp.asarray(offsets[0], jnp.int32).astype(jnp.uint32).reshape(())
+    col0 = jnp.asarray(offsets[1], jnp.int32).astype(jnp.uint32).reshape(())
+    seed = jnp.stack([k0, k1, row0, col0]).reshape(1, 4)
 
     return dict(
         x=x2d,
@@ -120,16 +132,21 @@ def analog_matmul(
     n_repeats: int = 1,
     block: tuple = DEFAULT_BLOCK,
     interpret: Optional[bool] = None,
+    offsets=(0, 0),
 ) -> Array:
     """Fused analog matmul for arbitrary batch dims: (..., K) @ (K, N).
 
     ``n_repeats``: static K-repeat redundancy (paper §IV) fused into the
     kernel — one matmul pass whose noise is the in-register average of K
-    independent draws at the given (base) energy.
+    independent draws at the given (base) energy. ``offsets``: global
+    (row0, col0) tile origin for tensor-parallel shards (see
+    ``prepare_operands``).
     """
     batch_shape = x.shape[:-1]
     x2d = x.reshape(-1, x.shape[-1])
-    ops = prepare_operands(x2d, w, energy=energy, key=key, cfg=cfg, sq=sq)
+    ops = prepare_operands(
+        x2d, w, energy=energy, key=key, cfg=cfg, sq=sq, offsets=offsets
+    )
     kind = ops.pop("noise_kind")
     qx, qw, qo = ops.pop("quant_x"), ops.pop("quant_w"), ops.pop("quant_out")
     y = analog_matmul_raw(
@@ -152,12 +169,14 @@ def analog_matmul(
 
 
 def analog_matmul_reference(
-    x: Array, w: Array, *, energy, key, cfg, sq=None, n_repeats: int = 1
+    x: Array, w: Array, *, energy, key, cfg, sq=None, n_repeats: int = 1, offsets=(0, 0)
 ) -> Array:
     """Oracle with identical noise draws (pure jnp, no Pallas)."""
     batch_shape = x.shape[:-1]
     x2d = x.reshape(-1, x.shape[-1])
-    ops = prepare_operands(x2d, w, energy=energy, key=key, cfg=cfg, sq=sq)
+    ops = prepare_operands(
+        x2d, w, energy=energy, key=key, cfg=cfg, sq=sq, offsets=offsets
+    )
     kind = ops.pop("noise_kind")
     qx, qw, qo = ops.pop("quant_x"), ops.pop("quant_w"), ops.pop("quant_out")
     y = analog_matmul_ref_raw(

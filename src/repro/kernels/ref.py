@@ -42,6 +42,10 @@ def analog_matmul_ref_raw(
     sc = scalars.astype(jnp.float32)
     seed = seed.astype(jnp.uint32)
     k0, k1 = seed[0, 0], seed[0, 1]
+    # Global tile origin of this operand block in the unsharded problem.
+    # (0, 0) for a whole-array call; a tensor-parallel shard passes its
+    # column offset so it draws exactly its tile of the global noise stream.
+    row0, col0 = seed[0, 2], seed[0, 3]
     x = x.astype(jnp.float32)
     w = w.astype(jnp.float32)
 
@@ -51,14 +55,14 @@ def analog_matmul_ref_raw(
         w = _fake_quant(w, wq[0:1, :], wq[1:2, :], wq[2:3, :])
     if noise_kind == "weight":
         xi = prng.repeat_averaged_gaussian_tile(
-            k0 ^ jnp.uint32(prng.WEIGHT_STREAM_SALT), k1, 0, 0, (k, n), n_repeats
+            k0 ^ jnp.uint32(prng.WEIGHT_STREAM_SALT), k1, 0, col0, (k, n), n_repeats
         )
         w = w + col_scale.astype(jnp.float32) * xi
 
     y = jnp.dot(x, w, preferred_element_type=jnp.float32)
 
     if noise_kind == "output":
-        xi = prng.repeat_averaged_gaussian_tile(k0, k1, 0, 0, (m, n), n_repeats)
+        xi = prng.repeat_averaged_gaussian_tile(k0, k1, row0, col0, (m, n), n_repeats)
         y = y + row_scale.astype(jnp.float32) * col_scale.astype(jnp.float32) * xi
     if quant_out:
         y = _fake_quant(y, sc[0, 3], sc[0, 4], sc[0, 5])

@@ -70,7 +70,16 @@ DP_RULES = {
     "zero": ("pod", "data", "model"),
 }
 
-PROFILES = {"tp": DEFAULT_RULES, "dp": DP_RULES}
+#: serving: every logical axis replicated. The serving engine keeps all
+#: jit-boundary arrays (params, decode caches, tokens, keys) replicated so
+#: AOT executables survive mesh resize, and tensor parallelism lives ONLY
+#: inside analog_dot's shard_map (column-parallel matmul shards whose
+#: counter-based noise is salted on global tile coordinates). Under these
+#: rules the model code's constrain() calls resolve to replication, so the
+#: decode cache is never sequence-sharded out from under the pools.
+SERVING_RULES = {k: None for k in DEFAULT_RULES}
+
+PROFILES = {"tp": DEFAULT_RULES, "dp": DP_RULES, "serving": SERVING_RULES}
 
 _state = threading.local()
 

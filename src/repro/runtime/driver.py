@@ -194,7 +194,10 @@ class TrainDriver:
         continued training touch.) After this returns, ``run()`` restores
         and resumes bit-exactly on the new mesh.
         """
+        from repro.serving.cache import mesh_fingerprint
+
         step, state = self._restore_or_init()
+        old_fp = mesh_fingerprint(self.mesh)
         self.mesh = new_mesh
         self._build()
         with use_mesh(self.mesh):
@@ -204,3 +207,13 @@ class TrainDriver:
             }
             jax.block_until_ready(state)
         self.ckpt.save(step, state, blocking=True)
+        # same mesh identity the serving AOT cache keys on: a resize is
+        # attributable in the metrics log exactly like a retrace would be
+        self.metrics_log.append(
+            {
+                "step": step,
+                "event": "resize",
+                "mesh_from": old_fp,
+                "mesh_to": mesh_fingerprint(self.mesh),
+            }
+        )

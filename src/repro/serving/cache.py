@@ -22,6 +22,25 @@ from collections import OrderedDict, deque
 from typing import Any, Callable, Deque, Hashable, Optional
 
 
+def mesh_fingerprint(mesh) -> tuple:
+    """Hashable identity of a device mesh for AOT cache keys.
+
+    Everything that changes a lowered program's device assignment — axis
+    names, axis sizes, and the concrete device ordering — and nothing else.
+    ``()`` for no mesh, so unmeshed engines keep their exact legacy keys
+    (appending an empty tuple is the identity). Two meshes with equal
+    fingerprints produce interchangeable executables, which is what lets a
+    reshard *back* to a previous mesh hit its still-warm entries.
+    """
+    if mesh is None:
+        return ()
+    return (
+        tuple(mesh.axis_names),
+        tuple(mesh.devices.shape),
+        tuple(int(d.id) for d in mesh.devices.flat),
+    )
+
+
 class ExecutableCache:
     """Maps hashable keys -> compiled executables, counting hits/misses.
 
@@ -119,8 +138,19 @@ class ExecutableCache:
         }
 
 
-def aot_compile(fn, *arg_specs, donate_argnums=()) -> Any:
-    """``jax.jit(fn).lower(specs).compile()`` — the cache's build helper."""
+def aot_compile(fn, *arg_specs, donate_argnums=(), out_shardings=None) -> Any:
+    """``jax.jit(fn).lower(specs).compile()`` — the cache's build helper.
+
+    ``out_shardings`` (a single sharding applied to every output leaf, or
+    None) pins the executable's outputs; mesh-attached engines pass their
+    replicated sharding so a donated decode cache comes back exactly as the
+    next call's input spec expects it. ``None`` lowers precisely as before.
+    """
     import jax
 
-    return jax.jit(fn, donate_argnums=donate_argnums).lower(*arg_specs).compile()
+    kw = {} if out_shardings is None else {"out_shardings": out_shardings}
+    return (
+        jax.jit(fn, donate_argnums=donate_argnums, **kw)
+        .lower(*arg_specs)
+        .compile()
+    )

@@ -66,6 +66,7 @@ ladders.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
 from typing import Dict, List, Optional, Sequence, Union
@@ -86,7 +87,7 @@ from repro.serving.bucketing import (
     pad_to_bucket,
     pool_shape,
 )
-from repro.serving.cache import ExecutableCache
+from repro.serving.cache import ExecutableCache, mesh_fingerprint
 from repro.serving.faults import (
     BoundedLog,
     FaultPlan,
@@ -196,6 +197,7 @@ class ServingEngine:
         fault_log_maxlen: Optional[int] = 4096,
         policy: Optional[PolicyConfig] = None,
         metrics=None,
+        mesh=None,
     ):
         if max_retries < 0:
             raise ValueError(f"max_retries must be >= 0, got {max_retries}")
@@ -266,6 +268,10 @@ class ServingEngine:
             self.pool_cache_len = int(pool_cache_len)
         #: tier -> persistent DecodePool, created lazily at first admission
         self._pools: Dict[object, DecodePool] = {}
+        #: attached device mesh (tensor-parallel serving) + its AOT-key
+        #: fingerprint; () unmeshed so legacy cache keys are unchanged
+        self._mesh = None
+        self._mesh_key: tuple = ()
         self._base_key = raw_key(jax.random.PRNGKey(seed))
         self._param_specs = jax.tree.map(
             lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), params
@@ -339,6 +345,8 @@ class ServingEngine:
         self.governor: Optional[PrecisionGovernor] = None
         if policy is not None:
             self.governor = PrecisionGovernor(self, policy)
+        if mesh is not None:
+            self.attach_mesh(mesh)
 
     def _note_dropped_events(self, n: int) -> None:
         """BoundedLog eviction hook: surface ring-buffer drops as a stat."""
@@ -766,6 +774,79 @@ class ServingEngine:
     def _scale_arr(self) -> Array:
         return jnp.asarray(self._noise_scale, jnp.float32)
 
+    # -- mesh attach / resize ------------------------------------------------
+
+    @property
+    def mesh(self):
+        """The attached device mesh (None = single-device serving)."""
+        return self._mesh
+
+    @property
+    def mesh_key(self) -> tuple:
+        """The mesh fingerprint appended to every AOT cache key (() unmeshed)."""
+        return self._mesh_key
+
+    def attach_mesh(self, mesh) -> None:
+        """Attach (or resize to) a device mesh for tensor-parallel serving.
+
+        All jit-boundary arrays — params, decode-pool caches, batch inputs —
+        stay *replicated* across the mesh (``SERVING_RULES``); tensor
+        parallelism lives entirely inside ``analog_dot``'s shard_map, whose
+        column shards salt their counter-based noise on global tile
+        coordinates, so a mesh engine's tokens are bit-identical to the
+        single-device oracle. Because replication is mesh-shape-agnostic,
+        executables survive *as lowered programs* across resize — but their
+        device assignment does not, so cache keys carry the mesh fingerprint:
+        a resize compiles fresh entries once, then serves at a 100% hit rate
+        again (and a resize back to a previous mesh re-hits its warm entries).
+
+        Resizing requires a drained engine (no queued or pooled requests):
+        live decode state is pinned to the old mesh's devices. Pools are
+        dropped and lazily rebuilt replicated on the new mesh — empty pools
+        hold no request state, so nothing is lost. ``attach_mesh(None)``
+        detaches (back to single-device serving).
+        """
+        if self.n_in_flight:
+            raise ValueError(
+                f"cannot attach/resize a mesh with {self.n_in_flight} "
+                "requests in flight (their decode state is pinned to the "
+                "current devices); drain with flush() first"
+            )
+        self._mesh = mesh
+        self._mesh_key = mesh_fingerprint(mesh)
+        self._pools.clear()  # rebuilt lazily, replicated on the new mesh
+        self.params = self._replicate(self.params)
+        self._param_specs = jax.tree.map(
+            lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), self.params
+        )
+
+    def _replicated_sharding(self):
+        """NamedSharding(mesh, P()) when a mesh is attached, else None."""
+        if self._mesh is None:
+            return None
+        from jax.sharding import NamedSharding, PartitionSpec
+
+        return NamedSharding(self._mesh, PartitionSpec())
+
+    def _replicate(self, tree):
+        """device_put a tree replicated onto the attached mesh (identity
+        unmeshed) — run once at attach/pool-build time, never per dispatch."""
+        sh = self._replicated_sharding()
+        if sh is None:
+            return tree
+        return jax.device_put(tree, sh)
+
+    def _mesh_ctx(self):
+        """Ambient-mesh context the tier builders lower under: the attached
+        mesh with every logical axis replicated (``SERVING_RULES``), which
+        is what routes analog matmuls through the tensor-parallel shard_map
+        at trace time. A no-op context unmeshed."""
+        if self._mesh is None:
+            return contextlib.nullcontext()
+        from repro.models import sharding as shardlib
+
+        return shardlib.use_mesh(self._mesh, shardlib.SERVING_RULES)
+
     # -- execution -----------------------------------------------------------
     # the executable builders and cache-key identity live on the tiers
     # themselves (serving/tiers.py): the engine only composes
@@ -776,8 +857,13 @@ class ServingEngine:
     def _keys_spec(self, bb: int) -> jax.ShapeDtypeStruct:
         """Spec for a stacked raw-key batch, sized from the actual key impl
         (threefry keys are 2 uint32 words; other impls differ)."""
+        sh = self._replicated_sharding()
+        if sh is None:
+            return jax.ShapeDtypeStruct(
+                (bb,) + self._base_key.shape, self._base_key.dtype
+            )
         return jax.ShapeDtypeStruct(
-            (bb,) + self._base_key.shape, self._base_key.dtype
+            (bb,) + self._base_key.shape, self._base_key.dtype, sharding=sh
         )
 
     def _batch_keys(self, reqs: List[Request], bb: int) -> Array:
@@ -917,6 +1003,10 @@ class ServingEngine:
                 ),
                 exec_tier=self.tiers.get(tier),
             )
+            # mesh serving: the pool cache lives replicated on every shard
+            # from birth, so the first donated decode/insert call already
+            # matches its executable's pinned input sharding
+            pool.place_cache(self._replicate)
             self._pools[tier] = pool
         return pool
 

@@ -226,6 +226,13 @@ class LoadSignals:
     climbs before deadlines start striking. ``min_slack`` is the tightest
     ``deadline - now`` over queued + pooled requests (``None`` without a
     clock or deadlines).
+
+    ``drift`` is the latest realized-noise-scale estimate flowing through
+    the engine's :class:`MetricsFeed` (``note_drift``), ``None`` when no
+    feed is attached or no probe has run — it puts the *noise* axis on the
+    same observation record as the load axes, so the precision governor
+    can treat a hardware-health excursion as demote pressure with the
+    identical registry-resolved retier path it uses for queue pressure.
     """
 
     clock: int  # engine fault clock at the observation
@@ -236,6 +243,7 @@ class LoadSignals:
     queue_pressure: float  # queue_depth / per-tier slot capacity
     min_slack: Optional[float]  # tightest deadline - now, None if unknowable
     urgent_frac: float  # queued SLO requests past half their latency budget
+    drift: Optional[float] = None  # latest watchdog noise-scale estimate
 
 
 def load_signals(engine, now: Optional[float] = None) -> LoadSignals:
@@ -261,6 +269,7 @@ def load_signals(engine, now: Optional[float] = None) -> LoadSignals:
                 with_slo += 1
                 if now - r.arrival >= 0.5 * r.target_latency:
                     urgent += 1
+    feed = getattr(engine, "metrics", None)
     return LoadSignals(
         clock=int(getattr(engine, "_fault_clock", 0)),
         queue_depth=len(queued),
@@ -270,6 +279,7 @@ def load_signals(engine, now: Optional[float] = None) -> LoadSignals:
         queue_pressure=len(queued) / max(1, unit),
         min_slack=min_slack,
         urgent_frac=urgent / with_slo if with_slo else 0.0,
+        drift=None if feed is None else feed.drift_estimate,
     )
 
 
@@ -316,6 +326,11 @@ class MetricsFeed:
         """Feed the watchdog's latest realized-noise-scale estimate into
         subsequent samples (None clears it after recalibration)."""
         self._drift_estimate = None if estimate is None else float(estimate)
+
+    @property
+    def drift_estimate(self) -> Optional[float]:
+        """The latest noted estimate (``load_signals``'s drift source)."""
+        return self._drift_estimate
 
     # -- sampling ------------------------------------------------------------
 

@@ -105,6 +105,17 @@ class PolicyConfig:
     ``engine.tier_energy_per_token``) over the blended spend of queued +
     in-flight requests; exceeding it is demote pressure on its own, and
     promotion is blocked while restoring original tiers would overrun it.
+
+    ``drift_band``: optional (lo, hi) band on the noise-drift estimate the
+    engine's :class:`~repro.serving.monitor.MetricsFeed` carries
+    (``load_signals(...).drift``). A drifted device delivers less
+    effective precision per unit energy, so *sustained* out-of-band drift
+    — at least ``drift_patience`` consecutive policy steps — is demote
+    pressure exactly like queue load, firing the same registry-resolved
+    retier path; promotion back to nominal is blocked while the excursion
+    persists. ``None`` estimates (no feed / no probe yet) never count
+    toward the streak. Set the band at least as wide as the watchdog's
+    probe band: the estimate scatters a few percent at nominal.
     """
 
     tiers: Tuple[TierSpec, ...]
@@ -114,6 +125,8 @@ class PolicyConfig:
     min_dwell: int = 4
     urgency_weight: float = 1.0
     power_budget_aj: Optional[float] = None
+    drift_band: Optional[Tuple[float, float]] = None
+    drift_patience: int = 2
 
     def __post_init__(self):
         # convenience: bare tier ids (ints / profile names) become TierSpecs
@@ -138,6 +151,17 @@ class PolicyConfig:
         if self.power_budget_aj is not None and self.power_budget_aj <= 0.0:
             raise ValueError(
                 f"power_budget_aj must be > 0, got {self.power_budget_aj}"
+            )
+        if self.drift_band is not None and not (
+            0.0 < self.drift_band[0] < 1.0 < self.drift_band[1]
+        ):
+            raise ValueError(
+                "drift_band must straddle the nominal scale 1.0, got "
+                f"{self.drift_band}"
+            )
+        if self.drift_patience < 1:
+            raise ValueError(
+                f"drift_patience must be >= 1, got {self.drift_patience}"
             )
 
 
@@ -221,6 +245,8 @@ class PrecisionGovernor:
         self._last_change = -int(config.min_dwell)
         #: uid -> original tier of every currently-demoted queued request
         self._demoted: Dict[int, object] = {}
+        #: consecutive policy steps with an out-of-band drift estimate
+        self._drift_streak = 0
         #: every PolicyEvent ever emitted, in order (bench/test surface)
         self.events: List[PolicyEvent] = []
 
@@ -288,6 +314,21 @@ class PrecisionGovernor:
         budget = self.config.power_budget_aj
         return budget is not None and self.blended_energy(restore=restore) > budget
 
+    def _drift_sustained(self, sig) -> bool:
+        """Update the out-of-band streak from this step's observation and
+        report whether the excursion has outlasted ``drift_patience``.
+        Missing estimates (no feed attached, no probe yet, or cleared by
+        recalibration) reset the streak: absence of evidence is nominal."""
+        band = self.config.drift_band
+        if band is None:
+            return False
+        d = sig.drift
+        if d is not None and not (band[0] <= d <= band[1]):
+            self._drift_streak += 1
+        else:
+            self._drift_streak = 0
+        return self._drift_streak >= self.config.drift_patience
+
     def _headroom_exhausted(self) -> bool:
         """True when no queued request can be demoted any further — the
         precondition for shedding (reject only as the last rung)."""
@@ -346,19 +387,22 @@ class PrecisionGovernor:
 
         can_flip = (step - self._last_change) >= cfg.min_dwell
         over = self._over_budget()
+        drifted = self._drift_sustained(sig)
         stats = self.engine.stats
         if self.mode == NOMINAL:
-            if can_flip and (pressure >= cfg.demote_at or over):
+            if can_flip and (pressure >= cfg.demote_at or over or drifted):
                 moved = self._demote_sweep()
                 self.mode = DEMOTED
                 self._last_change = step
                 stats["demoted"] += len(moved)
                 stats["policy_transitions"] += 1
-                emit(
-                    "demote", moved,
-                    detail="power budget" if over and pressure < cfg.demote_at
-                    else "load",
-                )
+                if pressure >= cfg.demote_at:
+                    detail = "load"
+                elif over:
+                    detail = "power budget"
+                else:
+                    detail = "drift"
+                emit("demote", moved, detail=detail)
         elif self.mode == DEMOTED:
             if can_flip and pressure >= cfg.shed_at and self._headroom_exhausted():
                 self.mode = SHEDDING
@@ -368,6 +412,7 @@ class PrecisionGovernor:
             elif (
                 can_flip
                 and pressure <= cfg.promote_at
+                and not drifted
                 and not self._over_budget(restore=True)
             ):
                 moved = self.engine.scheduler.reassign(self._promote_assign)

@@ -130,6 +130,14 @@ class DecodePool:
         self.keys = np.zeros((self.slots,) + tuple(key_shape), key_dtype)
         self._rec: List[Optional[SlotRecord]] = [None] * self.slots
 
+    def place_cache(self, put) -> None:
+        """Re-home the device cache through ``put`` (e.g. the engine's
+        replicated device_put onto an attached mesh). Host slot state is
+        device-agnostic; only the cache has a residency to manage. Called
+        at pool build — once resident, donated decode/insert calls keep the
+        cache on its devices without ever round-tripping it."""
+        self.cache = put(self.cache)
+
     # -- occupancy -----------------------------------------------------------
 
     @property

@@ -118,6 +118,26 @@ class ExecutionTier:
             )
         return self._engine
 
+    # -- mesh-aware lowering helpers -----------------------------------------
+
+    def _sds(self, shape, dtype):
+        """ShapeDtypeStruct pinned replicated on the engine's mesh (plain
+        spec when unmeshed — the legacy lowering, byte-identical)."""
+        sh = self.engine._replicated_sharding()
+        if sh is None:
+            return jax.ShapeDtypeStruct(shape, dtype)
+        return jax.ShapeDtypeStruct(shape, dtype, sharding=sh)
+
+    def _pin(self, spec_tree):
+        """Pin a tree of specs (e.g. an eval_shape'd cache) replicated."""
+        sh = self.engine._replicated_sharding()
+        if sh is None:
+            return spec_tree
+        return jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+            spec_tree,
+        )
+
     # -- identity ------------------------------------------------------------
 
     def cache_key(self) -> tuple:
@@ -165,14 +185,16 @@ class ExecutionTier:
             return cache, tok
 
         i32 = jnp.int32
-        return aot_compile(
-            fn,
-            self.param_specs,
-            jax.ShapeDtypeStruct((bb, sb), i32),
-            jax.ShapeDtypeStruct((bb,), i32),
-            eng._keys_spec(bb),
-            jax.ShapeDtypeStruct((), jnp.float32),
-        )
+        with eng._mesh_ctx():
+            return aot_compile(
+                fn,
+                self._pin(self.param_specs),
+                self._sds((bb, sb), i32),
+                self._sds((bb,), i32),
+                eng._keys_spec(bb),
+                self._sds((), jnp.float32),
+                out_shardings=eng._replicated_sharding(),
+            )
 
     def build_decode(self, bb: int, cache_len: int):
         eng = self.engine
@@ -190,17 +212,19 @@ class ExecutionTier:
 
         i32 = jnp.int32
         cache_specs = jax.eval_shape(lambda: lm.init_cache(cfg, bb, cache_len))
-        return aot_compile(
-            fn,
-            self.param_specs,
-            cache_specs,
-            jax.ShapeDtypeStruct((bb, 1), i32),
-            jax.ShapeDtypeStruct((bb,), i32),
-            jax.ShapeDtypeStruct((bb,), i32),
-            eng._keys_spec(bb),
-            jax.ShapeDtypeStruct((), jnp.float32),
-            donate_argnums=(1,),
-        )
+        with eng._mesh_ctx():
+            return aot_compile(
+                fn,
+                self._pin(self.param_specs),
+                self._pin(cache_specs),
+                self._sds((bb, 1), i32),
+                self._sds((bb,), i32),
+                self._sds((bb,), i32),
+                eng._keys_spec(bb),
+                self._sds((), jnp.float32),
+                donate_argnums=(1,),
+                out_shardings=eng._replicated_sharding(),
+            )
 
     def build_insert(self, slots: int, cache_len: int, bb: int):
         """Admission scatter: prefilled cache rows (batch ``bb``) into
@@ -218,13 +242,15 @@ class ExecutionTier:
 
         pool_specs = jax.eval_shape(lambda: lm.init_cache(cfg, slots, cache_len))
         src_specs = jax.eval_shape(lambda: lm.init_cache(cfg, bb, cache_len))
-        return aot_compile(
-            fn,
-            pool_specs,
-            src_specs,
-            jax.ShapeDtypeStruct((bb,), jnp.int32),
-            donate_argnums=(0,),
-        )
+        with eng._mesh_ctx():
+            return aot_compile(
+                fn,
+                self._pin(pool_specs),
+                self._pin(src_specs),
+                self._sds((bb,), jnp.int32),
+                donate_argnums=(0,),
+                out_shardings=eng._replicated_sharding(),
+            )
 
     # -- economics -----------------------------------------------------------
 
@@ -549,11 +575,16 @@ class TierRegistry:
 
     def exe_key(self, phase: str, tier_id, *shape) -> tuple:
         """The full AOT cache key for one executable: phase + static
-        shape + the tier's identity suffix. ``tier_id=None`` builds a
-        tier-free key (the admission insert, shared across tiers)."""
+        shape + the engine's mesh fingerprint + the tier's identity
+        suffix. ``tier_id=None`` builds a tier-free key (the admission
+        insert, shared across tiers). The mesh fingerprint is ``()``
+        unmeshed (legacy keys unchanged); on a mesh-attached engine it
+        makes resharding compile fresh executables while a reshard back
+        to a previous mesh hits that mesh's still-warm entries."""
+        base = (phase,) + tuple(shape) + self._engine.mesh_key
         if tier_id is None:
-            return (phase,) + tuple(shape)
-        return (phase,) + tuple(shape) + self.get(tier_id).cache_key()
+            return base
+        return base + self.get(tier_id).cache_key()
 
     # -- introspection -------------------------------------------------------
 

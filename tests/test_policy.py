@@ -15,6 +15,7 @@ from repro.models import init_energy_tree, init_params
 from repro.models.config import ModelConfig
 from repro.serving import (
     BoundedLog,
+    MetricsFeed,
     NoiseDriftWatchdog,
     PolicyConfig,
     PrecisionGovernor,
@@ -107,6 +108,10 @@ def test_policy_config_validation():
         _policy(power_budget_aj=0.0)
     with pytest.raises(ValueError, match="urgency_weight"):
         _policy(urgency_weight=-1.0)
+    with pytest.raises(ValueError, match="drift_band"):
+        _policy(drift_band=(1.1, 1.4))  # band must straddle nominal 1.0
+    with pytest.raises(ValueError, match="drift_patience"):
+        _policy(drift_band=(0.8, 1.25), drift_patience=0)
     # bare tier ids are promoted to TierSpec (accuracy resolved later)
     cfg = PolicyConfig(tiers=(1, TierSpec(2, 0.9)))
     assert all(isinstance(t, TierSpec) for t in cfg.tiers)
@@ -369,6 +374,68 @@ def test_power_budget_demotes_and_blocks_promotion(env):
         eng.pump_step(now=t)
     assert gov.mode == "nominal"
     assert isinstance(results[uid], np.ndarray)
+
+
+# --------------------------------------------------------------------------
+# satellite: drift estimate as a demotion / promotion signal
+# --------------------------------------------------------------------------
+
+
+def test_load_signals_carry_the_feed_drift_estimate(env):
+    feed = MetricsFeed(capacity=8)
+    eng = _engine(env, metrics=feed)
+    assert load_signals(eng, now=0.0).drift is None  # no probe yet
+    feed.note_drift(1.3)
+    assert load_signals(eng, now=0.0).drift == pytest.approx(1.3)
+    feed.note_drift(None)  # recalibration clears it
+    assert load_signals(eng, now=0.0).drift is None
+    # an engine without a feed observes no drift axis at all
+    assert load_signals(_engine(env), now=0.0).drift is None
+
+
+def test_drift_excursion_demotes_and_blocks_promotion(env):
+    feed = MetricsFeed(capacity=64)
+    # thresholds far above any queue this test builds: only drift can
+    # demote here — the point is it rides the same retier path as load
+    eng = _engine(env, metrics=feed, policy=_policy(
+        demote_at=50.0, promote_at=0.25, shed_at=60.0, min_dwell=1,
+        drift_band=(0.8, 1.25), drift_patience=2,
+    ))
+    gov = eng.governor
+    # no estimate yet, then an in-band one: both are nominal evidence
+    eng.pump_step(now=0.01)
+    feed.note_drift(1.05)
+    eng.pump_step(now=0.02)
+    assert gov.mode == "nominal" and gov.events == []
+    # out-of-band: one step is scatter, drift_patience=2 steps is real
+    feed.note_drift(1.6)
+    eng.pump_step(now=0.03)
+    assert gov.mode == "nominal"
+    eng.pump_step(now=0.04)
+    assert gov.mode == "demoted"
+    demotes = [e for e in gov.events if e.kind == "demote"]
+    assert demotes and demotes[0].detail == "drift"
+    # traffic arriving during the episode joins it: a floorless K=4 ask
+    # is retiered down the registry-resolved ladder before admission
+    uid = eng.submit(_prompts(1)[0], n_repeats=4, now=0.05, max_new_tokens=4)
+    results, t = _drain(eng, 0.05)
+    assert eng.served_tiers[uid] == 1
+    assert isinstance(results[uid], np.ndarray)
+    # queue is empty (pressure 0) but the excursion persists: promotion
+    # back to nominal stays blocked until the estimate returns in-band
+    for _ in range(4):
+        t += 0.01
+        eng.pump_step(now=t)
+    assert gov.mode == "demoted"
+    feed.note_drift(1.0)  # recalibrated: streak resets immediately
+    t += 0.01
+    eng.pump_step(now=t)
+    assert gov.mode == "nominal"
+    kinds = [e.kind for e in gov.events]
+    # demote opened the episode, the mid-episode submit was retiered into
+    # it, and promotion closed it only after the estimate came back
+    assert kinds[0] == "demote" and kinds[-1] == "promote"
+    assert "retier" in kinds
 
 
 # --------------------------------------------------------------------------

@@ -1,0 +1,131 @@
+"""Tensor-parallel serving goldens: the tile-salted noise contract.
+
+Each TP shard of the column-parallel analog matmul salts its counter-based
+noise stream with its *global* tile coordinates, so shard (i, j) draws
+exactly the (i, j) tile of the unsharded stream — sharding can never change
+which noise a request sees. Pinned here at three levels:
+
+  * unit: ``kernels/prng.gaussian_tile`` at offset (r0, c0) is bit-exactly
+    the [r0:, c0:] slice of the offset-(0, 0) draw (single and K-repeat
+    streams), and column shards partition the full draw.
+  * golden: a mesh-attached ``ServingEngine`` serves bit-identical tokens
+    to the single-device oracle, per family (dense + griffin, the stateful
+    rung) and under a *non-uniform* per-layer ``PrecisionProfile``.
+
+The mesh goldens need multiple host devices; they skip unless the process
+was launched with ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+(the CI sharded job / README recipe). The unit test always runs.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import AnalogConfig, PrecisionProfile
+from repro.kernels import prng
+from repro.launch.mesh import make_mesh_for_devices
+from repro.models import init_energy_tree, init_params
+from repro.models.config import ModelConfig
+from repro.serving import ServingEngine
+from test_serving import ENERGY_AJ, SB
+
+KEY = jax.random.PRNGKey(0)
+
+needs_mesh = pytest.mark.skipif(
+    jax.device_count() < 2,
+    reason="needs >=2 devices; run under "
+    "XLA_FLAGS=--xla_force_host_platform_device_count=8",
+)
+
+DENSE = ModelConfig(
+    name="shard-dense", family="dense", n_layers=2, d_model=32, n_heads=2,
+    n_kv_heads=1, d_ff=64, vocab_size=128, attn_q_chunk=16, attn_kv_chunk=16,
+    loss_chunk=32, dtype="float32",
+)
+GRIFFIN = ModelConfig(
+    name="shard-griffin", family="griffin", n_layers=3, d_model=32, n_heads=2,
+    n_kv_heads=1, head_dim=16, d_ff=64, vocab_size=128, rnn_width=32,
+    conv_width=4, local_window=8, attn_q_chunk=16, attn_kv_chunk=16,
+    loss_chunk=32, dtype="float32",
+)
+
+#: non-uniform per-layer repeat profiles (n_layers entries each)
+PROFILES = {"shard-dense": (2, 1), "shard-griffin": (2, 1, 1)}
+
+
+# --------------------------------------------------------------------------
+# unit: tile-coordinate noise salt
+# --------------------------------------------------------------------------
+
+
+def test_tile_salt_shard_equals_slice():
+    """Shard (i, j) of the sharded draw IS slice (i, j) of the unsharded
+    draw — ``gaussian_tile`` is a pure function of global element indices."""
+    k0, k1 = np.uint32(0xA5A5_A5A5), np.uint32(0x1234)
+    full = np.asarray(prng.gaussian_tile(k0, k1, 0, 0, (16, 24)))
+    for r0, c0, m, n in [(0, 0, 16, 24), (4, 8, 8, 8), (12, 16, 4, 8)]:
+        tile = np.asarray(prng.gaussian_tile(k0, k1, r0, c0, (m, n)))
+        np.testing.assert_array_equal(tile, full[r0 : r0 + m, c0 : c0 + n])
+    # the K-repeat averaged stream tiles the same way (fused kernel path)
+    full_k = np.asarray(
+        prng.repeat_averaged_gaussian_tile(k0, k1, 0, 0, (16, 24), 3)
+    )
+    tile_k = np.asarray(
+        prng.repeat_averaged_gaussian_tile(k0, k1, 4, 8, (8, 8), 3)
+    )
+    np.testing.assert_array_equal(tile_k, full_k[4:12, 8:16])
+    # column shards partition the full draw exactly — the TP contract:
+    # shard j at col0 = j * n_local reconstructs the unsharded stream
+    shards = [
+        np.asarray(prng.gaussian_tile(k0, k1, 0, j * 12, (16, 12)))
+        for j in range(2)
+    ]
+    np.testing.assert_array_equal(np.concatenate(shards, axis=1), full)
+    # and the weight-noise stream (its own salted key) tiles identically
+    wk0 = k0 ^ np.uint32(prng.WEIGHT_STREAM_SALT)
+    w_full = np.asarray(prng.gaussian_tile(wk0, k1, 0, 0, (8, 16)))
+    w_tile = np.asarray(prng.gaussian_tile(wk0, k1, 0, 8, (8, 8)))
+    np.testing.assert_array_equal(w_tile, w_full[:, 8:16])
+
+
+# --------------------------------------------------------------------------
+# golden: sharded engine == single-device oracle, per family
+# --------------------------------------------------------------------------
+
+
+def _serve_tokens(cfg, env, mesh):
+    """Serve a fixed trace (uniform K=2 + the non-uniform profile tier,
+    explicit per-request noise keys) and return uid -> tokens."""
+    profile = PrecisionProfile(PROFILES[cfg.name], name="nu")
+    eng = ServingEngine(
+        env["params"], cfg, analog_cfg=AnalogConfig.shot(backend="tile"),
+        energies=env["energies"], max_gen=4, max_batch=2, max_wait=0.0,
+        batch_buckets=(1, 2), seq_buckets=(SB,), k_ladder=(1, 2),
+        profiles=[profile], mesh=mesh,
+    )
+    rng = np.random.default_rng(7)
+    out = {}
+    for i, tier in enumerate([2, "nu", "nu", 2]):
+        prompt = rng.integers(0, cfg.vocab_size, 6 + 3 * i).astype(np.int32)
+        uid = eng.submit(
+            prompt, tier=tier, max_new_tokens=3,
+            key=jax.random.fold_in(KEY, 100 + i),
+        )
+        out[i] = uid
+    results = eng.flush()
+    return {i: np.asarray(results[uid]) for i, uid in out.items()}
+
+
+@needs_mesh
+@pytest.mark.parametrize("cfg", [DENSE, GRIFFIN], ids=lambda c: c.family)
+def test_sharded_tokens_match_unsharded_oracle(cfg):
+    env = dict(
+        params=init_params(KEY, cfg),
+        energies=init_energy_tree(cfg, ENERGY_AJ),
+    )
+    oracle = _serve_tokens(cfg, env, mesh=None)
+    mp = 2 if jax.device_count() < 4 else 4
+    mesh = make_mesh_for_devices(mp, model_parallel=mp)
+    sharded = _serve_tokens(cfg, env, mesh=mesh)
+    assert set(sharded) == set(oracle)
+    for i in oracle:
+        np.testing.assert_array_equal(sharded[i], oracle[i]), i
