@@ -51,6 +51,7 @@ from repro.core import (
 from repro.models import init_energy_tree, init_params, lm
 from repro.models.config import ModelConfig
 from repro.serving import (
+    ClusterRouter,
     DriftRamp,
     FaultPlan,
     Int8DigitalTier,
@@ -58,6 +59,7 @@ from repro.serving import (
     NoiseDriftWatchdog,
     PolicyConfig,
     QueueFull,
+    ReplicaCrash,
     RequestFailure,
     ServingEngine,
     TierSpec,
@@ -1296,6 +1298,243 @@ def sharded_smoke_bench():
 
 
 # ---------------------------------------------------------------------------
+# cluster smoke: replicated serving, health-checked failover mid-burst
+# ---------------------------------------------------------------------------
+
+#: per-replica MetricsFeed JSONL artifacts (uploaded by CI): one file per
+#: replica of the faulted cluster episode, serving_metrics_r{rid}.jsonl
+CLUSTER_JSONL_TMPL = os.path.join(PAPER_DIR, "serving_metrics_r{rid}.jsonl")
+#: the faulted episode's crash schedule: replica 0 dies on this cluster round
+CLUSTER_CRASH_ROUND = 4
+#: detector thresholds for the smoke (rounds of the shared fault clock)
+CLUSTER_SUSPECT_AFTER, CLUSTER_DEAD_AFTER = 2, 4
+CLUSTER_BACKOFF_ROUNDS, CLUSTER_BACKOFF_JITTER = 1, 2
+#: cluster-level energy/token ceiling for the governed episode (aJ/token):
+#: between the K=2 and K=4 traffic mixes, so a K=4-heavy replica demotes
+CLUSTER_BUDGET_AJ_FACTOR = 2.6
+
+
+def _cluster_traffic(cfg, n, seed=11):
+    """A mixed-tier burst: (prompt, tier, max_new) per request."""
+    rng = np.random.default_rng(seed)
+    return [
+        (
+            rng.integers(0, cfg.vocab_size, int(rng.integers(4, 28))),
+            int(rng.choice(TIERS, p=TIER_WEIGHTS)),
+            int(rng.integers(3, 7)),
+        )
+        for _ in range(n)
+    ]
+
+
+def _run_cluster_episode(cluster, traffic, *, dt=0.01, head=8, per_round=2):
+    """Replay the burst on the virtual clock: ``head`` requests land up
+    front, then ``per_round`` per pump round — the crash round hits with
+    real queued AND pooled work on every replica. Returns (results keyed
+    by cuid, per-cuid latency in seconds, final time)."""
+    results, latency = {}, {}
+    submitted, t = 0, 0.0
+    arrivals = {}
+    for p, tier, g in traffic[:head]:
+        cuid = cluster.submit(p, tier=tier, max_new_tokens=g, now=t)
+        arrivals[cuid] = t
+        submitted = head
+    rounds = 0
+    while cluster.n_in_flight or submitted < len(traffic):
+        t += dt
+        for p, tier, g in traffic[submitted:submitted + per_round]:
+            cuid = cluster.submit(p, tier=tier, max_new_tokens=g, now=t)
+            arrivals[cuid] = t
+            submitted += 1
+        for cuid, res in cluster.pump_step(now=t).items():
+            results[cuid] = res
+            latency[cuid] = t - arrivals[cuid]
+        rounds += 1
+        assert rounds < 3000, "cluster episode hung"
+    return results, latency, t
+
+
+def _warm_cluster_engines(engines, cfg):
+    """Pre-compile every executable any replica assignment can need: each
+    tier at every prefill batch bucket (plus its decode/insert pair), so
+    the measured failover episode is steady-state on every replica."""
+    rng = np.random.default_rng(1)
+    for eng in engines:
+        t = 0.0
+        for tier in TIERS:
+            for bucket in (1, 2, 4):
+                for _ in range(bucket):
+                    eng.submit(
+                        rng.integers(0, cfg.vocab_size, 8), tier=tier,
+                        max_new_tokens=2, now=t,
+                    )
+                while eng.n_in_flight:
+                    t += 0.01
+                    eng.pump_step(now=t, force=True)
+        eng.exe_cache.reset_stats()
+
+
+@cache_json("serving_bench_cluster")
+def cluster_smoke_bench():
+    """Kill 1 of 3 replicas mid-burst and record the failover contract
+    main() asserts: zero lost requests, failed-over streams bit-identical
+    to the fault-free cluster (per-request stacked keys make tokens
+    replica-independent), zero steady-state retraces on the survivors,
+    p99 bounded by detection + backoff + one re-serve, and — in a second,
+    governed episode — the cluster governor rebalancing the global power
+    budget onto the survivor with demote-before-shed ordering intact."""
+    cfg = ModelConfig(**dict(SMOKE_MODEL, name="serve-bench-cluster"))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    energies = init_energy_tree(cfg, ENERGY_AJ)
+    shot = AnalogConfig.shot()
+
+    def make_engine(rid=None, policy=None):
+        feed = None
+        if rid is not None:
+            path = CLUSTER_JSONL_TMPL.format(rid=rid)
+            if os.path.exists(path):  # the sink appends; start fresh
+                os.remove(path)
+            feed = MetricsFeed(capacity=4096, jsonl_path=path, replica_id=rid)
+        return ServingEngine(
+            params, cfg, analog_cfg=shot, energies=energies, max_gen=6,
+            max_batch=4, max_wait=0.0, batch_buckets=(1, 2, 4),
+            seq_buckets=(32,), continuous=True, pool_slots=4,
+            k_ladder=TIERS, metrics=feed, policy=policy,
+        )
+
+    traffic = _cluster_traffic(cfg, 24)
+
+    # --- A: fault-free cluster = the bit-identity oracle -------------------
+    clean = ClusterRouter([make_engine() for _ in range(3)], seed=0)
+    clean_results, clean_lat, _ = _run_cluster_episode(clean, traffic)
+    assert clean.stats["failed"] == 0
+
+    # --- B: the same burst with replica 0 crashing mid-burst ---------------
+    engines = [make_engine(rid=r) for r in range(3)]
+    _warm_cluster_engines(engines, cfg)
+    traces_before = [e.trace_count for e in engines]
+    cluster = ClusterRouter(
+        engines, seed=0,
+        suspect_after=CLUSTER_SUSPECT_AFTER, dead_after=CLUSTER_DEAD_AFTER,
+        backoff_rounds=CLUSTER_BACKOFF_ROUNDS,
+        backoff_jitter=CLUSTER_BACKOFF_JITTER,
+        faults=(ReplicaCrash(replica=0, at=CLUSTER_CRASH_ROUND),),
+    )
+    results, lat, _ = _run_cluster_episode(cluster, traffic)
+    failed_over = [
+        c for c, e in cluster.journal.items() if e.failed_over
+    ]
+    token_rows = {
+        c: r for c, r in results.items() if not isinstance(r, RequestFailure)
+    }
+    bit_identical = all(
+        np.array_equal(np.asarray(r), np.asarray(clean_results[c]))
+        for c, r in token_rows.items()
+    )
+    survivor_retraces = {
+        r: engines[r].trace_count - traces_before[r] for r in (1, 2)
+    }
+    # principled p99 bound: an orphan waits out detection + backoff, then
+    # re-serves from scratch — at most one clean max-latency serve more
+    dt = 0.01
+    detect_window = (
+        CLUSTER_DEAD_AFTER + CLUSTER_BACKOFF_ROUNDS + CLUSTER_BACKOFF_JITTER
+    ) * dt
+    p99_bound = (
+        float(np.percentile(list(clean_lat.values()), 99))
+        + detect_window + max(clean_lat.values())
+    )
+    p99 = float(np.percentile(list(lat.values()), 99))
+    failover = {
+        "n_requests": len(traffic),
+        "resolved": len(results),
+        "lost": len(traffic) - len(results),
+        "structured_failures": sum(
+            isinstance(r, RequestFailure) for r in results.values()
+        ),
+        "failed_over": len(failed_over),
+        "redispatched": cluster.stats["redispatched"],
+        "dedup_tokens": cluster.stats["dedup_tokens"],
+        "prefix_mismatches": cluster.stats["prefix_mismatches"],
+        "duplicates_discarded": cluster.stats["duplicates_discarded"],
+        "tokens_bit_identical": bool(bit_identical),
+        "health": {str(r): s for r, s in cluster.health.items()},
+        "survivor_retraces": {str(r): v for r, v in survivor_retraces.items()},
+        "p99_s": p99,
+        "p99_clean_s": float(np.percentile(list(clean_lat.values()), 99)),
+        "p99_bound_s": p99_bound,
+        "heartbeats": {
+            str(h.rid): int(h.feed.heartbeat_step) for h in cluster.replicas
+        },
+        "jsonl_paths": [
+            os.path.relpath(
+                CLUSTER_JSONL_TMPL.format(rid=r),
+                os.path.join(PAPER_DIR, "..", ".."),
+            )
+            for r in range(3)
+        ],
+        "replicas": cluster.replica_stats(),
+    }
+
+    # --- C: governed episode — rebalance the budget over the survivor ------
+    # ceiling between E(K=2)=2*E(1) and E(K=4)=4*E(1): all-K=4 traffic
+    # overruns it (demote pressure), the K=2 fallback fits under it
+    budget = CLUSTER_BUDGET_AJ_FACTOR * _traffic_energy_per_token(
+        cfg, energies, [(p, 1, g) for p, _k, g in traffic[:6]]
+    )
+    accs = {1: 0.80, 2: 0.90, 4: 0.97}
+    policy = PolicyConfig(
+        tiers=tuple(TierSpec(k, accs[k]) for k in TIERS),
+        power_budget_aj=budget, min_dwell=2,
+    )
+    governed = ClusterRouter(
+        [make_engine(policy=policy) for _ in range(2)], seed=0,
+        suspect_after=CLUSTER_SUSPECT_AFTER, dead_after=CLUSTER_DEAD_AFTER,
+        backoff_rounds=CLUSTER_BACKOFF_ROUNDS, backoff_jitter=0,
+        power_budget_aj=budget,
+        faults=(ReplicaCrash(replica=0, at=CLUSTER_CRASH_ROUND),),
+    )
+    heavy = [(p, 4, g) for p, _k, g in traffic]  # K=4 mix: demote pressure
+    gresults, _glat, _ = _run_cluster_episode(governed, heavy)
+    ordering_ok, demoted_total, shed_total = True, 0, 0
+    for h in governed.replicas:
+        policy_kinds = [
+            e["policy_kind"] for e in h.engine.fault_log
+            if e.get("kind") == "policy"
+        ]
+        demoted_total += h.engine.stats["demoted"]
+        shed_total += h.engine.stats["shed"]
+        if "shed_on" in policy_kinds:
+            first_shed = policy_kinds.index("shed_on")
+            ordering_ok &= "demote" in policy_kinds[:first_shed]
+    governor = {
+        "power_budget_aj": budget,
+        "rebalances": governed.stats["rebalances"],
+        "final_split": {
+            str(r): v for r, v in governed.governor.split.items()
+        },
+        "survivor_budget_is_global": (
+            abs(governed.governor.split.get(1, 0.0) - budget)
+            <= 1e-6 * budget
+        ),
+        "demoted": demoted_total,
+        "shed": shed_total,
+        "demote_before_shed": bool(ordering_ok),
+        "lost": len(heavy) - len(gresults),
+        "structured_failures": sum(
+            isinstance(r, RequestFailure) for r in gresults.values()
+        ),
+    }
+    return {
+        "backend": jax.default_backend(),
+        "replicas": 3,
+        "crash_round": CLUSTER_CRASH_ROUND,
+        "failover": failover,
+        "governor": governor,
+    }
+
+
+# ---------------------------------------------------------------------------
 
 
 def _bench(model_kw, n_requests, gen, max_len, tiers=TIERS, weights=TIER_WEIGHTS):
@@ -1454,6 +1693,26 @@ def _write_trajectory(out, smoke: bool) -> str:
             "steady_hit_rate": s["steady_hit_rate"],
             "resharded": s["resharded"],
         }
+    if "cluster" in out:  # replicated failover contract, machine-readable
+        cf, cg = out["cluster"]["failover"], out["cluster"]["governor"]
+        record["cluster"] = {
+            "replicas": out["cluster"]["replicas"],
+            "crash_round": out["cluster"]["crash_round"],
+            "lost": cf["lost"],
+            "failed_over": cf["failed_over"],
+            "redispatched": cf["redispatched"],
+            "dedup_tokens": cf["dedup_tokens"],
+            "prefix_mismatches": cf["prefix_mismatches"],
+            "tokens_bit_identical": cf["tokens_bit_identical"],
+            "survivor_retraces": cf["survivor_retraces"],
+            "p99_s": cf["p99_s"],
+            "p99_bound_s": cf["p99_bound_s"],
+            "health": cf["health"],
+            "rebalances": cg["rebalances"],
+            "survivor_budget_is_global": cg["survivor_budget_is_global"],
+            "demote_before_shed": cg["demote_before_shed"],
+            "governed_lost": cg["lost"],
+        }
     if "faults" in out:  # the fault-tolerance contract, machine-readable
         fi, fd = out["faults"]["inject"], out["faults"]["drift"]
         record["faults"] = {
@@ -1508,6 +1767,12 @@ def main() -> None:
                          "(needs >= 2 devices, e.g. XLA_FLAGS="
                          "--xla_force_host_platform_device_count=8) and "
                          "assert sharded == unsharded tokens per tier")
+    ap.add_argument("--cluster", action="store_true",
+                    help="also run the replicated-cluster smoke: kill 1 of "
+                         "3 replicas mid-burst and assert zero lost "
+                         "requests, bit-identical failover tokens, zero "
+                         "survivor retraces, and the rebalanced power "
+                         "budget's demote-before-shed ordering")
     args = ap.parse_args()
     fn = serving_bench_smoke if args.smoke else serving_bench
     out = fn(force=args.force)
@@ -1519,6 +1784,8 @@ def main() -> None:
         out["hybrid"] = hybrid_smoke_bench(force=args.force)
     if args.sharded:
         out["sharded"] = sharded_smoke_bench(force=args.force)
+    if args.cluster:
+        out["cluster"] = cluster_smoke_bench(force=args.force)
     records = [("dense", out)]
     if "griffin" in out:
         records.append(("griffin", out["griffin"]))
@@ -1719,6 +1986,51 @@ def main() -> None:
             "missing from an AOT key?)"
         )
         assert s["resharded"], "the episode never exercised a mesh resize"
+    if "cluster" in out:
+        cl = out["cluster"]
+        cf, cg = cl["failover"], cl["governor"]
+        print(f"--- replicated cluster ({cl['replicas']} replicas, crash "
+              f"at round {cl['crash_round']}) ---")
+        print(f"failover: {cf['n_requests']} requests, "
+              f"{cf['failed_over']} orphaned, "
+              f"{cf['redispatched']} re-dispatched, "
+              f"{cf['dedup_tokens']} tokens deduped, lost={cf['lost']}, "
+              f"health={cf['health']}")
+        print(f"p99 {cf['p99_s'] * 1e3:.1f}ms (clean "
+              f"{cf['p99_clean_s'] * 1e3:.1f}ms, bound "
+              f"{cf['p99_bound_s'] * 1e3:.1f}ms) survivor_retraces="
+              f"{cf['survivor_retraces']}")
+        print(f"governor: budget {cg['power_budget_aj']:.0f} aJ/token, "
+              f"{cg['rebalances']} rebalances, split {cg['final_split']}, "
+              f"demoted={cg['demoted']} shed={cg['shed']}")
+        assert cf["lost"] == 0 and cf["structured_failures"] == 0, (
+            f"the crash lost requests: {cf['lost']} unresolved, "
+            f"{cf['structured_failures']} structured failures"
+        )
+        assert cf["health"]["0"] == "dead" and cf["failed_over"] > 0, (
+            "the crash was never detected or orphaned no work"
+        )
+        assert cf["prefix_mismatches"] == 0 and cf["tokens_bit_identical"], (
+            "a failed-over request's tokens diverged from the fault-free "
+            "cluster: per-request keys must make tokens replica-independent"
+        )
+        assert all(v == 0 for v in cf["survivor_retraces"].values()), (
+            f"failover re-traced on a survivor: {cf['survivor_retraces']}"
+        )
+        assert cf["p99_s"] <= cf["p99_bound_s"], (
+            f"failover p99 {cf['p99_s']:.3f}s exceeds the detection+backoff"
+            f"+re-serve bound {cf['p99_bound_s']:.3f}s"
+        )
+        assert cg["rebalances"] >= 2, (
+            "the cluster governor never rebalanced on membership change"
+        )
+        assert cg["survivor_budget_is_global"], (
+            f"the survivor's ceiling is not the global budget: "
+            f"{cg['final_split']}"
+        )
+        assert cg["demoted"] > 0, "the governed burst never engaged demotion"
+        assert cg["demote_before_shed"], "shedding engaged before demotion"
+        assert cg["lost"] == 0, "the governed episode lost requests"
     if "continuous" in out:
         path = _write_trajectory(out, smoke=args.smoke)
         print(f"perf trajectory written to {path}")

@@ -3,8 +3,9 @@ pluggable execution tiers (tiers.py: uniform-K, per-layer PrecisionProfile,
 and digital/int8 tiers behind one ExecutionTier interface + TierRegistry),
 precision-tiered scheduling, persistent per-tier decode slot pools
 (continuous batching), fault injection + noise-drift watchdog + streaming
-MetricsFeed + graceful degradation (faults.py, monitor.py), and the engine
-tying them to models/lm.py."""
+MetricsFeed + graceful degradation (faults.py, monitor.py), a replicated
+cluster router with health-checked failover and hedged dispatch
+(cluster.py), and the engine tying them to models/lm.py."""
 from repro.core.profile import PrecisionProfile
 from repro.serving.bucketing import (
     DEFAULT_BATCH_BUCKETS,
@@ -15,6 +16,11 @@ from repro.serving.bucketing import (
     pool_shape,
 )
 from repro.serving.cache import ExecutableCache, aot_compile
+from repro.serving.cluster import (
+    ClusterGovernor,
+    ClusterRouter,
+    RequestJournalEntry,
+)
 from repro.serving.engine import (
     Failed,
     RequestFailure,
@@ -26,6 +32,10 @@ from repro.serving.faults import (
     DriftRamp,
     FaultPlan,
     QueueFull,
+    ReplicaCrash,
+    ReplicaDegraded,
+    ReplicaFault,
+    ReplicaHang,
     TransientExecutableFault,
 )
 from repro.serving.monitor import (
@@ -56,6 +66,8 @@ from repro.serving.tiers import (
 __all__ = [
     "AnalogProfileTier",
     "BoundedLog",
+    "ClusterGovernor",
+    "ClusterRouter",
     "DEFAULT_BATCH_BUCKETS",
     "DEFAULT_SEQ_BUCKETS",
     "DecodePool",
@@ -75,8 +87,13 @@ __all__ = [
     "PrecisionGovernor",
     "PrecisionProfile",
     "QueueFull",
+    "ReplicaCrash",
+    "ReplicaDegraded",
+    "ReplicaFault",
+    "ReplicaHang",
     "Request",
     "RequestFailure",
+    "RequestJournalEntry",
     "ServingEngine",
     "SlotAllocator",
     "SlotRecord",

@@ -309,7 +309,9 @@ class ServingEngine:
             "retried": 0,  # fault-triggered resubmissions
             "stalled_steps": 0,  # pool decode steps lost to injected stalls
             "exe_faults": 0,  # transient executable failures absorbed
+            "exe_errors": 0,  # unexpected executable exceptions contained
             "poisoned_rows": 0,  # corrupted decode rows detected + retired
+            "cancelled": 0,  # requests withdrawn via cancel()
             "promotions": 0,  # drift-response tier promotions activated
             # SLA policy (serving/policy.py) + bounded-log accounting
             "shed": 0,  # submissions rejected by the governor's last rung
@@ -630,6 +632,36 @@ class ServingEngine:
             self.metrics.record(self, now=now)
         return results
 
+    def cancel(self, uid: int) -> bool:
+        """Withdraw a submitted request before it finishes.
+
+        A queued request leaves the scheduler; a pooled request retires
+        immediately (its slot frees for admission on the very next pump
+        round) and its partial tokens are discarded. Per-request noise
+        keys make this safe mid-batch: batch-mates' token streams never
+        depended on the cancelled row. Returns ``False`` when the uid is
+        unknown or already finished — the caller (e.g. a cluster router
+        cancelling a hedged-dispatch loser) treats that as "the result
+        already shipped" and dedupes it instead.
+        """
+        if self.scheduler.cancel(uid) is not None:
+            self.stats["cancelled"] += 1
+            self.fault_log.append(
+                {"kind": "cancel", "where": "queue", "uids": [uid]}
+            )
+            return True
+        for pool in self._pools.values():
+            for s in pool.active_slots():
+                if pool.record(s).request.uid == uid:
+                    pool.retire(s)
+                    self.stats["retired"] += 1
+                    self.stats["cancelled"] += 1
+                    self.fault_log.append(
+                        {"kind": "cancel", "where": "pool", "uids": [uid]}
+                    )
+                    return True
+        return False
+
     def flush(self) -> Dict[int, RequestResult]:
         """Drain the queue regardless of deadlines (end of replay/shutdown)."""
         if self.continuous:
@@ -921,6 +953,13 @@ class ServingEngine:
         except TransientExecutableFault as f:
             self.stats["exe_faults"] += 1
             return self._fault_requeue(reqs, "exe_fault", str(f))
+        except Exception as e:  # noqa: BLE001 - serving must not crash
+            # an executable raising anything else mid-batch is contained
+            # the same way: the batch retires into the bounded-retry path
+            # (structured Failed once retries exhaust), never a crashed
+            # serving loop with requests stranded in limbo
+            self.stats["exe_errors"] += 1
+            return self._fault_requeue(reqs, "exe_error", repr(e))
         lengths = jnp.asarray([r.prompt_len for r in reqs] + [0] * (bb - len(reqs)),
                               jnp.int32)
         toks = [tok]
@@ -959,6 +998,11 @@ class ServingEngine:
                 self.stats["decode_steps"] += steps_run
                 self.stats["decode_slot_steps"] += steps_run * bb
                 return self._fault_requeue(reqs, "exe_fault", str(f))
+            except Exception as e:  # noqa: BLE001 - serving must not crash
+                self.stats["exe_errors"] += 1
+                self.stats["decode_steps"] += steps_run
+                self.stats["decode_slot_steps"] += steps_run * bb
+                return self._fault_requeue(reqs, "exe_error", repr(e))
             toks.append(tok)
             steps_run += 1
             if has_stops:  # per-step host read only when EOS is in play
@@ -1093,6 +1137,12 @@ class ServingEngine:
         except TransientExecutableFault as f:
             self.stats["exe_faults"] += 1
             return self._fault_requeue(reqs, "exe_fault", str(f))
+        except Exception as e:  # noqa: BLE001 - serving must not crash
+            # exception safety at admission: no slot was taken yet, so an
+            # executable raising anything mid-pump leaks nothing — the
+            # wave retires into the bounded-retry path exactly once
+            self.stats["exe_errors"] += 1
+            return self._fault_requeue(reqs, "exe_error", repr(e))
         tok0 = np.asarray(tok0)  # admission bookkeeping needs host values
         slots = pool.take(len(reqs))
         # prefill batch-padding rows aim past the pool: dropped by the scatter
@@ -1111,6 +1161,13 @@ class ServingEngine:
                 pool.release(s)
             self.stats["exe_faults"] += 1
             return self._fault_requeue(reqs, "exe_fault", str(f))
+        except Exception as e:  # noqa: BLE001 - serving must not crash
+            # taken slots are released before the requeue: a raising
+            # insert neither leaks nor aliases pool slots
+            for s in slots:
+                pool.release(s)
+            self.stats["exe_errors"] += 1
+            return self._fault_requeue(reqs, "exe_error", repr(e))
         self.stats["admitted"] += len(reqs)
         out: Dict[int, np.ndarray] = {}
         for i, (r, s) in enumerate(zip(reqs, slots)):
@@ -1179,6 +1236,19 @@ class ServingEngine:
                 self.stats["retired"] += 1
                 reqs.append(rec.request)
             out.update(self._fault_requeue(reqs, "exe_fault", str(f)))
+            return out
+        except Exception as e:  # noqa: BLE001 - serving must not crash
+            # same containment for an executable raising anything else:
+            # every active row retires (slots freed, never aliased) and
+            # re-enters through the bounded-retry path exactly once
+            self.stats["exe_errors"] += 1
+            out: Dict[int, RequestResult] = {}
+            reqs = []
+            for s in pool.active_slots():
+                rec = pool.retire(s)
+                self.stats["retired"] += 1
+                reqs.append(rec.request)
+            out.update(self._fault_requeue(reqs, "exe_error", repr(e)))
             return out
         tok_np = np.asarray(tok)
         if plan is not None and plan.poison_map:

@@ -248,3 +248,80 @@ class FaultPlan:
                 slots.append(s)
                 self.log.append({"site": "poison", "clock": c, "slot": s, "token": t})
         return slots
+
+
+# ===========================================================================
+# replica-level faults (cluster injection schedule, serving/cluster.py)
+# ===========================================================================
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplicaFault:
+    """One scheduled fault against a whole engine replica.
+
+    ``replica`` is the ClusterRouter-assigned replica id; ``at`` is the
+    round of the cluster's shared fault clock (one tick per
+    ``ClusterRouter.pump_step``) at which the fault engages. Replica
+    faults are declarative and deterministic like :class:`FaultPlan`
+    schedules: the same fault list replayed against the same traffic
+    produces the same failover episode event-for-event.
+    """
+
+    replica: int
+    at: int
+
+    def __post_init__(self):
+        if self.replica < 0:
+            raise ValueError(f"replica id must be >= 0, got {self.replica}")
+        if self.at < 0:
+            raise ValueError(f"fault round must be >= 0, got {self.at}")
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplicaCrash(ReplicaFault):
+    """Process death: from round ``at`` the replica never pumps again.
+
+    Its queued and pooled requests are lost with it; new dispatches to it
+    fail fast (the submit RPC has nobody listening). The router's health
+    detector still has to *discover* the death through the stalled
+    heartbeat — failover fires only when the detector declares the
+    replica dead, never off this injection record."""
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplicaHang(ReplicaFault):
+    """A wedged pump loop: for ``steps`` rounds starting at ``at`` the
+    replica's ``pump_step`` makes no progress, so its ``MetricsFeed``
+    heartbeat stops advancing. A hang shorter than the detector's dead
+    threshold must ride out as ``suspect`` and recover — the hysteresis
+    the flap tests pin down."""
+
+    steps: int = 4
+
+    def __post_init__(self):
+        super().__post_init__()
+        if self.steps < 1:
+            raise ValueError(f"hang steps must be >= 1, got {self.steps}")
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplicaDegraded(ReplicaFault):
+    """Sustained noise drift on one replica's analog array.
+
+    From round ``at`` the replica serves at noise-scale ``scale`` (std
+    multiplier; a runtime operand, never a retrace) and its feed carries
+    the drift estimate a production watchdog would report. The router's
+    detector quarantines the replica once the excursion outlasts its
+    drift patience: queued work re-dispatches to nominal replicas, new
+    traffic routes around it, and the cluster governor rebalances the
+    power budget."""
+
+    scale: float = 1.8
+
+    def __post_init__(self):
+        super().__post_init__()
+        if self.scale <= 0.0 or self.scale == 1.0:
+            raise ValueError(
+                f"degraded scale must be > 0 and != 1.0 (nominal), "
+                f"got {self.scale}"
+            )

@@ -306,19 +306,39 @@ class MetricsFeed:
     ``jsonl_path`` streams every sample as one JSON line (append mode,
     flushed per sample) for dashboards and the bench artifact. The feed
     never dispatches device work: sampling is host-side reads only.
+
+    ``replica_id`` names the engine replica this feed observes (set by
+    the :class:`~repro.serving.cluster.ClusterRouter` when left unset;
+    ``None`` for a standalone engine). Every sample also carries a
+    monotone ``heartbeat_step`` — it advances exactly once per recorded
+    sample, i.e. once per pump/poll round, so a reader that sees it stop
+    is watching a crashed or wedged replica. Both are *additions*: every
+    pre-existing sample field is unchanged, so old JSONL consumers keep
+    working (pinned by a schema regression test).
     """
 
-    def __init__(self, capacity: int = 1024, jsonl_path=None):
+    def __init__(self, capacity: int = 1024, jsonl_path=None, *,
+                 replica_id: Optional[int] = None):
         if capacity < 1:
             raise ValueError(f"capacity must be >= 1, got {capacity}")
         self.capacity = int(capacity)
         self.jsonl_path = None if jsonl_path is None else str(jsonl_path)
+        self.replica_id = replica_id
         self._ring = deque(maxlen=self.capacity)
         self._fh = None
         self._step = 0
+        self._heartbeat = 0
         self._drift_estimate: Optional[float] = None
         self._last_now: Optional[float] = None
         self._last_tokens: Dict[str, int] = {}
+
+    @property
+    def heartbeat_step(self) -> int:
+        """Monotone liveness counter: the number of samples recorded so
+        far. A replica whose heartbeat stops advancing between cluster
+        rounds is stalled (crashed, hung, or partitioned) — the health
+        detector's primary signal."""
+        return self._heartbeat
 
     # -- drift attribution ---------------------------------------------------
 
@@ -368,6 +388,7 @@ class MetricsFeed:
             }
             self._last_tokens[key] = tokens
         governor = engine.governor
+        self._heartbeat += 1
         sample = {
             "step": self._step,
             "clock": sig.clock,
@@ -390,6 +411,10 @@ class MetricsFeed:
             "traces": int(engine.trace_count),
             "tokens_total": int(engine.stats["tokens_generated"]),
             "tiers": tiers,
+            # replication fields (appended last: old JSONL consumers that
+            # read the fields above see an unchanged schema)
+            "replica_id": self.replica_id,
+            "heartbeat_step": self._heartbeat,
         }
         self._step += 1
         if now is not None:

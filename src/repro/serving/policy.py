@@ -243,6 +243,9 @@ class PrecisionGovernor:
         self._step = 0
         # allow an immediate first transition: dwell gates *re*-transitions
         self._last_change = -int(config.min_dwell)
+        #: runtime override of the config's power budget (aJ/token), set
+        #: by a cluster-level governor rebalancing budget across replicas
+        self._budget_override: Optional[float] = None
         #: uid -> original tier of every currently-demoted queued request
         self._demoted: Dict[int, object] = {}
         #: consecutive policy steps with an out-of-band drift estimate
@@ -274,6 +277,26 @@ class PrecisionGovernor:
 
     def tier_energy(self, tier) -> float:
         return float(self.engine.tier_energy_per_token(tier))
+
+    @property
+    def power_budget_aj(self) -> Optional[float]:
+        """The energy/token ceiling currently in force: the runtime
+        override (a cluster governor's rebalanced share) when set, else
+        the config's static budget."""
+        if self._budget_override is not None:
+            return self._budget_override
+        return self.config.power_budget_aj
+
+    def set_power_budget(self, aj: Optional[float]) -> None:
+        """Override the power budget at runtime (``None`` restores the
+        config's static value). The cluster-level governor calls this
+        when it rebalances the global budget across replicas — e.g. after
+        a replica death shifts load, or to lend headroom to a replica
+        that demoted. Takes effect at the next policy step; no retrace
+        (the budget is pure host-side policy state)."""
+        if aj is not None and aj <= 0.0:
+            raise ValueError(f"power budget must be > 0 aJ/token, got {aj}")
+        self._budget_override = None if aj is None else float(aj)
 
     def cheapest_admissible(self, req: Request):
         """The cheapest policy tier strictly cheaper than the request's
@@ -311,7 +334,7 @@ class PrecisionGovernor:
         return total / len(reqs)
 
     def _over_budget(self, *, restore: bool = False) -> bool:
-        budget = self.config.power_budget_aj
+        budget = self.power_budget_aj
         return budget is not None and self.blended_energy(restore=restore) > budget
 
     def _drift_sustained(self, sig) -> bool:

@@ -180,6 +180,22 @@ class TierScheduler:
                 del self._queues[g]
         return expired
 
+    def cancel(self, uid: int) -> Optional[Request]:
+        """Withdraw one queued request by uid; returns it, or ``None``
+        when the uid is not queued (already dispatched, finished, or
+        unknown). Survivors keep their FIFO order — cancellation is how
+        a cluster router retracts a hedged-dispatch loser or pulls work
+        off a quarantined replica without disturbing its queue-mates."""
+        for g in list(self._queues):
+            q = self._queues[g]
+            for i, r in enumerate(q):
+                if r.uid == uid:
+                    del q[i]
+                    if not q:
+                        del self._queues[g]
+                    return r
+        return None
+
     def pending_tiers(self):
         """Tiers with queued requests (continuous pools are created lazily,
         so the engine sizes free-slot accounting off this set)."""

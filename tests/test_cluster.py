@@ -1,0 +1,544 @@
+"""Replicated serving cluster: router validation, healthy routing,
+crash failover with bit-identical re-dispatch, hang suspect/recover
+hysteresis (no flapping), degraded-replica quarantine, hedged dispatch
+cancellation, engine cancel(), the MetricsFeed heartbeat/replica_id
+schema regression, and the cluster power-budget governor's rebalance."""
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import AnalogConfig
+from repro.models import init_energy_tree, init_params
+from repro.serving import (
+    ClusterRouter,
+    Failed,
+    MetricsFeed,
+    ReplicaCrash,
+    ReplicaDegraded,
+    ReplicaHang,
+    RequestFailure,
+    ServingEngine,
+)
+from repro.serving.cluster import DEAD, DEGRADED, HEALTHY, SUSPECT
+from test_policy import MODEL, _policy, _prompts
+from test_serving import ENERGY_AJ, SB
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def env():
+    params = init_params(KEY, MODEL)
+    energies = init_energy_tree(MODEL, ENERGY_AJ)
+    return dict(params=params, energies=energies)
+
+
+def _engine(env, *, policy=None, pool_slots=2, **kw):
+    kw.setdefault("max_gen", 6)
+    kw.setdefault("max_wait", 0.0)
+    return ServingEngine(
+        env["params"], MODEL, analog_cfg=AnalogConfig.shot(),
+        energies=env["energies"], max_batch=4, batch_buckets=(1, 2, 4),
+        seq_buckets=(SB,), continuous=True, pool_slots=pool_slots,
+        k_ladder=(1, 2, 4), policy=policy, **kw,
+    )
+
+
+def _cluster(env, n=2, *, pool_slots=2, policy=None, **kw):
+    kw.setdefault("backoff_jitter", 0)  # deterministic retry rounds
+    engines = [
+        _engine(env, pool_slots=pool_slots, policy=policy) for _ in range(n)
+    ]
+    return ClusterRouter(engines, **kw)
+
+
+def _entries(n, seed=3):
+    """(prompt, tier) pairs mixing the k ladder."""
+    tiers = (1, 2, 4)
+    return [
+        (p, tiers[i % len(tiers)])
+        for i, p in enumerate(_prompts(n, seed=seed))
+    ]
+
+
+def _solo_reference(env, entries, *, seed=0):
+    """Serve the same (prompt, tier) list on a standalone engine with the
+    router's key derivation — the bit-identity oracle: per-request stacked
+    keys make tokens a function of (prompt, tier, key) only, so ANY
+    replica assignment must reproduce these rows exactly."""
+    eng = _engine(env)
+    base = jax.random.PRNGKey(seed)
+    uid_to_cuid = {}
+    for cuid, (prompt, tier) in enumerate(entries):
+        uid = eng.submit(
+            prompt, tier=tier, now=0.0, key=jax.random.fold_in(base, cuid),
+        )
+        uid_to_cuid[uid] = cuid
+    results, t = {}, 0.0
+    for _ in range(400):
+        if not eng.n_in_flight:
+            break
+        t += 0.01
+        results.update(eng.pump_step(now=t))
+    assert not eng.n_in_flight
+    return {uid_to_cuid[u]: np.asarray(v) for u, v in results.items()}
+
+
+# --------------------------------------------------------------------------
+# validation
+# --------------------------------------------------------------------------
+
+
+def test_cluster_validation(env):
+    with pytest.raises(ValueError, match="at least one"):
+        ClusterRouter([])
+    batch_eng = ServingEngine(
+        env["params"], MODEL, max_batch=2, batch_buckets=(1, 2),
+        seq_buckets=(SB,), max_gen=4,
+    )
+    with pytest.raises(ValueError, match="continuous"):
+        ClusterRouter([batch_eng])
+    with pytest.raises(ValueError, match="dead_after"):
+        _cluster(env, 1, suspect_after=3, dead_after=3)
+    with pytest.raises(ValueError, match="drift_band"):
+        _cluster(env, 1, drift_band=(1.1, 1.4))
+    with pytest.raises(ValueError, match="hedge_slack"):
+        _cluster(env, 1, hedge_slack=0.0)
+    with pytest.raises(ValueError, match="replica 4"):
+        _cluster(env, 2, faults=(ReplicaCrash(replica=4, at=0),))
+    with pytest.raises(ValueError, match="power_budget"):
+        _cluster(env, 1, power_budget_aj=0.0)
+
+
+def test_replica_fault_validation():
+    with pytest.raises(ValueError, match="replica"):
+        ReplicaCrash(replica=-1, at=0)
+    with pytest.raises(ValueError, match="round"):
+        ReplicaCrash(replica=0, at=-2)
+    with pytest.raises(ValueError, match="steps"):
+        ReplicaHang(replica=0, at=0, steps=0)
+    with pytest.raises(ValueError, match="scale"):
+        ReplicaDegraded(replica=0, at=0, scale=1.0)
+    with pytest.raises(ValueError, match="scale"):
+        ReplicaDegraded(replica=0, at=0, scale=-0.5)
+
+
+# --------------------------------------------------------------------------
+# healthy routing: load balance + bit-identity with a solo engine
+# --------------------------------------------------------------------------
+
+
+def test_healthy_cluster_matches_solo_engine(env):
+    entries = _entries(6)
+    cluster = _cluster(env, 2, seed=0)
+    for prompt, tier in entries:
+        cluster.submit(prompt, tier=tier, now=0.0)
+    results, _ = cluster.run_until_drained(0.0)
+    assert set(results) == set(range(len(entries)))
+    assert cluster.stats["delivered"] == len(entries)
+    assert cluster.stats["failed"] == 0
+    assert cluster.stats["prefix_mismatches"] == 0
+    assert cluster.health == {0: HEALTHY, 1: HEALTHY}
+    # both replicas actually served traffic (least-loaded routing)
+    assert all(h.dispatched > 0 for h in cluster.replicas)
+    # replica assignment is invisible in the tokens: per-request keys
+    ref = _solo_reference(env, entries, seed=0)
+    for cuid, toks in results.items():
+        np.testing.assert_array_equal(np.asarray(toks), ref[cuid])
+
+
+def test_results_land_in_router_results_map(env):
+    cluster = _cluster(env, 2)
+    cuid = cluster.submit(_prompts(1)[0], tier=2, now=0.0)
+    results, _ = cluster.run_until_drained(0.0)
+    assert cuid in results and cuid in cluster.results
+    np.testing.assert_array_equal(results[cuid], cluster.results[cuid])
+
+
+# --------------------------------------------------------------------------
+# crash failover: zero lost requests, bit-identical re-dispatch
+# --------------------------------------------------------------------------
+
+
+def test_crash_failover_bit_identical(env):
+    entries = _entries(9)
+    cluster = _cluster(
+        env, 3, seed=0, suspect_after=2, dead_after=4,
+        faults=(ReplicaCrash(replica=0, at=2),),
+    )
+    for prompt, tier in entries:
+        cluster.submit(prompt, tier=tier, now=0.0)
+    assert cluster.replicas[0].dispatched > 0  # the crash orphans real work
+    results, _ = cluster.run_until_drained(0.0)
+    # zero lost: every cluster uid resolves, with tokens (no deadlines set)
+    assert set(results) == set(range(len(entries)))
+    assert all(isinstance(v, np.ndarray) for v in results.values())
+    assert cluster.stats["failed"] == 0
+    assert cluster.health[0] == DEAD
+    assert cluster.stats["replicas_dead"] == 1
+    assert cluster.stats["failed_over"] > 0
+    assert cluster.stats["redispatched"] > 0
+    # the determinism contract: re-served streams reproduced any already-
+    # streamed prefix bit-identically, and every row matches the solo run
+    assert cluster.stats["prefix_mismatches"] == 0
+    ref = _solo_reference(env, entries, seed=0)
+    for cuid, toks in results.items():
+        np.testing.assert_array_equal(np.asarray(toks), ref[cuid])
+    ev_kinds = [e["kind"] for e in cluster.events]
+    assert "crash_injected" in ev_kinds and "failover" in ev_kinds
+
+
+def test_all_replicas_dead_fails_structurally(env):
+    cluster = _cluster(
+        env, 1, dead_after=3,
+        faults=(ReplicaCrash(replica=0, at=1),),
+    )
+    cuid = cluster.submit(_prompts(1)[0], tier=1, now=0.0)
+    t = 0.0
+    results = {}
+    for _ in range(30):
+        t += 0.01
+        results.update(cluster.pump_step(now=t))
+        if cuid in results:
+            break
+    # never silently lost: a structured Failed names the cause
+    assert isinstance(results[cuid], Failed)
+    assert "no live replicas" in results[cuid].detail
+    assert cluster.stats["failed"] == 1 and cluster.n_in_flight == 0
+
+
+def test_redispatch_budget_bounded(env):
+    # every replica crashed except one that refuses via a full queue is
+    # hard to stage; instead exhaust the budget directly: max_redispatch=0
+    # means an orphaned request fails rather than retrying forever
+    cluster = _cluster(
+        env, 2, dead_after=3, max_redispatch=0, backoff_rounds=0,
+        faults=(ReplicaCrash(replica=0, at=0), ReplicaCrash(replica=1, at=0)),
+    )
+    cuid = cluster.submit(_prompts(1)[0], tier=1, now=0.0)
+    results, _ = cluster.run_until_drained(0.0, max_rounds=50)
+    assert isinstance(results[cuid], RequestFailure)
+
+
+# --------------------------------------------------------------------------
+# hang: suspect -> recover with hysteresis, no failover, no flapping
+# --------------------------------------------------------------------------
+
+
+def test_hang_suspects_then_recovers_without_failover(env):
+    entries = _entries(6)
+    cluster = _cluster(
+        env, 2, suspect_after=2, dead_after=8, recover_after=2,
+        faults=(ReplicaHang(replica=1, at=1, steps=3),),
+    )
+    for prompt, tier in entries:
+        cluster.submit(prompt, tier=tier, now=0.0)
+    states = []
+    t, results = 0.0, {}
+    for _ in range(400):
+        if not cluster.n_in_flight and cluster.health[1] == HEALTHY:
+            break
+        t += 0.01
+        results.update(cluster.pump_step(now=t))
+        states.append(cluster.health[1])
+    # the stall was transient: suspected, then recovered — never dead
+    assert SUSPECT in states and DEAD not in states
+    assert cluster.health[1] == HEALTHY
+    assert cluster.stats["failed_over"] == 0
+    assert cluster.stats["replicas_dead"] == 0
+    # hysteresis: exactly one suspect episode, no flapping
+    transitions = [
+        (e["frm"], e["to"]) for e in cluster.events if e["kind"] == "health"
+    ]
+    assert transitions == [(HEALTHY, SUSPECT), (SUSPECT, HEALTHY)]
+    # nothing was lost to the stall
+    assert set(results) == set(range(len(entries)))
+    assert cluster.stats["prefix_mismatches"] == 0
+
+
+# --------------------------------------------------------------------------
+# degradation: drift quarantine re-routes queued work to nominal replicas
+# --------------------------------------------------------------------------
+
+
+def test_degraded_replica_quarantines_queued_work(env):
+    # pool_slots=1 keeps most of replica 0's initial share *queued* when
+    # the drift trips, so the quarantine has real work to pull back
+    cluster = _cluster(
+        env, 2, pool_slots=1, drift_patience=2, recover_after=2,
+        faults=(ReplicaDegraded(replica=0, at=0, scale=2.5),),
+    )
+    entries = _entries(8)
+    for prompt, tier in entries:
+        cluster.submit(prompt, tier=tier, now=0.0)
+    results, t = cluster.run_until_drained(0.0)
+    assert set(results) == set(range(len(entries)))  # zero lost
+    assert cluster.stats["replicas_degraded"] == 1
+    assert cluster.stats["quarantined"] > 0
+    assert cluster.health[0] == DEGRADED  # drift persists until recalibrated
+    # traffic submitted after detection routes around the degraded replica
+    # entirely, so it must match the solo nominal run bit-for-bit
+    before = cluster.replicas[0].dispatched
+    late = [(p, 1) for p in _prompts(3, seed=11)]
+    late_uids = [cluster.submit(p, tier=tr, now=t) for p, tr in late]
+    late_results, t = cluster.run_until_drained(t)
+    assert cluster.replicas[0].dispatched == before
+    ref = _solo_reference(env, late, seed=0)
+    # the late requests' keys fold their *cluster* uid, not the list index
+    for i, cuid in enumerate(late_uids):
+        eng = _engine(env)
+        uid = eng.submit(
+            late[i][0], tier=late[i][1], now=0.0,
+            key=jax.random.fold_in(jax.random.PRNGKey(0), cuid),
+        )
+        tt, solo = 0.0, {}
+        while eng.n_in_flight:
+            tt += 0.01
+            solo.update(eng.pump_step(now=tt))
+        np.testing.assert_array_equal(
+            np.asarray(late_results[cuid]), np.asarray(solo[uid])
+        )
+    # recalibration walks the replica back to healthy with hysteresis
+    cluster.clear_degradation(0)
+    for _ in range(6):
+        t += 0.01
+        cluster.pump_step(now=t)
+    assert cluster.health[0] == HEALTHY
+
+
+# --------------------------------------------------------------------------
+# hedged dispatch (satellite: cancellation tests)
+# --------------------------------------------------------------------------
+
+
+def test_hedged_dispatch_winner_once_loser_cancelled(env):
+    cluster = _cluster(env, 2)
+    prompt = _prompts(1)[0]
+    cuid = cluster.submit(prompt, tier=2, now=0.0, hedge=True)
+    assert cluster.stats["hedges"] == 1
+    assert cluster.stats["dispatches"] == 2  # primary + backup placed
+    results, t = cluster.run_until_drained(0.0)
+    # winner delivered exactly once
+    assert list(results) == [cuid]
+    assert cluster.stats["delivered"] == 1
+    assert (
+        cluster.stats["hedge_wins_primary"] + cluster.stats["hedge_wins_backup"]
+    ) == 1
+    # loser withdrawn (cancelled mid-flight) or discarded after the fact —
+    # never delivered as a second result
+    assert (
+        cluster.stats["hedge_cancelled"] + cluster.stats["duplicates_discarded"]
+    ) >= 1
+    # the duplicate was provably identical: same key, same tokens
+    ref = _solo_reference(env, [(prompt, 2)], seed=0)
+    np.testing.assert_array_equal(np.asarray(results[cuid]), ref[0])
+    # keep pumping: the loser's ghost never re-delivers
+    for _ in range(5):
+        t += 0.01
+        assert cluster.pump_step(now=t) == {}
+    assert cluster.stats["delivered"] == 1
+    assert cluster.stats["prefix_mismatches"] == 0
+
+
+def test_hedge_counts_one_serve_in_journal(env):
+    cluster = _cluster(env, 2)
+    cuid = cluster.submit(_prompts(1)[0], tier=1, now=0.0, hedge=True)
+    cluster.run_until_drained(0.0)
+    entry = cluster.journal[cuid]
+    assert entry.done and entry.hedge_uid is None
+    # the journal converged on one primary assignment (the winner)
+    assert entry.replica is not None
+    # engine-side: both replicas saw a submission, the cluster served once
+    total_requests = sum(
+        h.engine.stats["requests"] for h in cluster.replicas
+    )
+    assert total_requests == 2 and cluster.stats["delivered"] == 1
+
+
+def test_auto_hedge_fires_on_deadline_pressure(env):
+    cluster = _cluster(env, 2, hedge_slack=10.0)
+    cluster.submit(
+        _prompts(1)[0], tier=1, now=0.0, target_latency=5.0,
+    )
+    cluster.pump_step(now=0.01)  # slack 4.99 < 10: urgent from the start
+    assert cluster.stats["hedges"] == 1
+    results, _ = cluster.run_until_drained(0.02)
+    assert cluster.stats["delivered"] == 1
+
+
+def test_hedge_promoted_when_primary_replica_dies(env):
+    # the hedge IS the failover path: primary replica crashes, the backup
+    # copy is promoted in place — no re-dispatch, no lost request
+    cluster = _cluster(
+        env, 2, dead_after=3,
+        faults=(ReplicaCrash(replica=0, at=1),),
+    )
+    prompt = _prompts(1)[0]
+    cuid = cluster.submit(prompt, tier=2, now=0.0, hedge=True)
+    entry = cluster.journal[cuid]
+    if entry.replica != 0:
+        pytest.skip("primary landed on the surviving replica")
+    results, _ = cluster.run_until_drained(0.0)
+    assert isinstance(results[cuid], np.ndarray)
+    assert cluster.stats["hedge_promoted"] == 1
+    assert cluster.stats["redispatched"] == 0
+    ref = _solo_reference(env, [(prompt, 2)], seed=0)
+    np.testing.assert_array_equal(np.asarray(results[cuid]), ref[0])
+
+
+# --------------------------------------------------------------------------
+# engine cancel() — the hedging/quarantine primitive
+# --------------------------------------------------------------------------
+
+
+def test_engine_cancel_queued_and_pooled(env):
+    eng = _engine(env, pool_slots=1)
+    prompts = _prompts(3, seed=7)
+    uids = [eng.submit(p, tier=1, now=0.0) for p in prompts]
+    eng.pump_step(now=0.01)  # admits one row; the rest stay queued
+    pooled = next(
+        rec.request.uid
+        for pool in eng.pools.values()
+        for s in pool.active_slots()
+        for rec in [pool.record(s)]
+    )
+    queued = [u for u in uids if u != pooled]
+    assert eng.cancel(queued[0]) is True  # withdrawn from the scheduler
+    assert eng.cancel(pooled) is True  # retired mid-decode, slot freed
+    assert eng.cancel(10_000) is False  # unknown uid
+    assert eng.stats["cancelled"] == 2
+    results = {}
+    t = 0.01
+    while eng.n_in_flight:
+        t += 0.01
+        results.update(eng.pump_step(now=t))
+    # only the survivor resolves; cancelled uids never produce results
+    assert set(results) == {queued[1]}
+    assert eng.cancel(queued[1]) is False  # already finished
+    for pool in eng.pools.values():
+        assert pool.n_active == 0 and pool.allocator.n_free == pool.slots
+
+
+# --------------------------------------------------------------------------
+# MetricsFeed schema regression (satellite: replica_id + heartbeat_step)
+# --------------------------------------------------------------------------
+
+#: the pre-cluster sample schema, in order — old JSONL consumers index
+#: these fields; the cluster fields may only APPEND after them
+LEGACY_FIELDS = [
+    "step", "clock", "now", "dt", "queue_depth", "in_flight", "pool_active",
+    "pool_slots", "occupancy", "queue_pressure", "urgent_frac", "policy_mode",
+    "noise_scale", "drift_promoted", "drift_estimate", "traces",
+    "tokens_total", "tiers",
+]
+
+
+def test_metrics_schema_appends_cluster_fields_last(env, tmp_path):
+    path = tmp_path / "metrics.jsonl"
+    feed = MetricsFeed(capacity=8, jsonl_path=path, replica_id=3)
+    eng = _engine(env, metrics=feed)
+    eng.submit(_prompts(1)[0], tier=1, now=0.0)
+    t = 0.0
+    while eng.n_in_flight:
+        t += 0.01
+        eng.pump_step(now=t)
+    sample = feed.samples()[-1]
+    # backward compatibility: legacy fields first, unchanged, in order
+    assert list(sample)[: len(LEGACY_FIELDS)] == LEGACY_FIELDS
+    assert list(sample)[len(LEGACY_FIELDS):] == ["replica_id", "heartbeat_step"]
+    assert sample["replica_id"] == 3
+    # heartbeat is monotone, one tick per recorded sample
+    steps = [s["heartbeat_step"] for s in feed.samples()]
+    assert steps == list(range(1, len(steps) + 1))
+    assert feed.heartbeat_step == steps[-1]
+    # the JSONL sink carries the same schema
+    lines = [json.loads(l) for l in path.read_text().splitlines()]
+    assert lines and all(
+        list(d)[: len(LEGACY_FIELDS)] == LEGACY_FIELDS for d in lines
+    )
+    assert lines[-1]["heartbeat_step"] == feed.heartbeat_step
+
+
+def test_metrics_replica_id_defaults_none(env):
+    feed = MetricsFeed(capacity=4)
+    eng = _engine(env, metrics=feed)
+    eng.submit(_prompts(1)[0], tier=1, now=0.0)
+    eng.pump_step(now=0.01)
+    assert feed.samples()[-1]["replica_id"] is None
+    assert feed.heartbeat_step >= 1
+
+
+def test_router_stamps_replica_ids(env):
+    cluster = _cluster(env, 3)
+    assert [h.feed.replica_id for h in cluster.replicas] == [0, 1, 2]
+    cluster.pump_step(now=0.01)
+    assert all(h.feed.heartbeat_step == 1 for h in cluster.replicas)
+
+
+# --------------------------------------------------------------------------
+# cluster power-budget governor
+# --------------------------------------------------------------------------
+
+
+def test_cluster_governor_splits_and_rebalances_on_death(env):
+    budget = 400.0
+    policy = _policy(power_budget_aj=budget)
+    cluster = _cluster(
+        env, 2, policy=policy, power_budget_aj=budget, dead_after=3,
+        faults=(ReplicaCrash(replica=0, at=2),),
+    )
+    for prompt, tier in _entries(6):
+        cluster.submit(prompt, tier=tier, now=0.0)
+    cluster.pump_step(now=0.01)
+    # first round: membership rebalance, equal split at the global budget
+    assert cluster.stats["rebalances"] == 1
+    assert cluster.governor.split == {0: budget, 1: budget}
+    for h in cluster.replicas:
+        assert h.engine.governor.power_budget_aj == budget
+    results, _ = cluster.run_until_drained(0.02)
+    # the death re-split over the survivor — still the global budget
+    assert cluster.stats["rebalances"] >= 2
+    assert cluster.governor.split == {1: budget}
+    assert cluster.stats["failed"] == 0
+
+
+def test_cluster_governor_lends_headroom_to_demoted_replica(env):
+    budget = 400.0
+    policy = _policy(power_budget_aj=budget)
+    cluster = _cluster(env, 2, policy=policy, power_budget_aj=budget)
+    cluster.pump_step(now=0.01)
+    # force one governor out of nominal and step the cluster governor
+    # directly (an idle engine's own governor would promote right back
+    # mid-pump): it must lend the demoted replica headroom (2:1 weights)
+    # while the mean stays at the global budget
+    cluster.replicas[0].engine.governor.mode = "demoted"
+    cluster.governor.step(cluster.round)
+    split = cluster.governor.split
+    assert split[0] == pytest.approx(budget * 4 / 3)
+    assert split[1] == pytest.approx(budget * 2 / 3)
+    assert (split[0] + split[1]) / 2 == pytest.approx(budget)
+    ev = [e for e in cluster.events if e["kind"] == "rebalance"][-1]
+    assert ev["reason"] == "demotion" and ev["demoted"] == [0]
+    # engines see their ceilings through the runtime override
+    assert cluster.replicas[0].engine.governor.power_budget_aj == \
+        pytest.approx(budget * 4 / 3)
+    # recovery: back to nominal -> equal split again
+    cluster.replicas[0].engine.governor.mode = "nominal"
+    cluster.governor.step(cluster.round)
+    assert cluster.governor.split == {0: budget, 1: budget}
+
+
+def test_governor_budget_override_roundtrip(env):
+    policy = _policy(power_budget_aj=100.0)
+    eng = _engine(env, policy=policy)
+    gov = eng.governor
+    assert gov.power_budget_aj == 100.0
+    gov.set_power_budget(250.0)
+    assert gov.power_budget_aj == 250.0
+    assert gov.config.power_budget_aj == 100.0  # config untouched
+    with pytest.raises(ValueError, match="power budget"):
+        gov.set_power_budget(0.0)
+    gov.set_power_budget(None)  # restore the configured budget
+    assert gov.power_budget_aj == 100.0

@@ -23,6 +23,7 @@ from repro.serving import (
     ServingEngine,
     SlotAllocator,
     TierScheduler,
+    TransientExecutableFault,
 )
 from test_serving import ENERGY_AJ, FAMILY_CONFIGS, SB, _solo_tokens
 
@@ -518,19 +519,42 @@ def _fault_engine():
     return _FAULT_ENG[0]
 
 
+class _GenericExeFaultPlan(FaultPlan):
+    """A plan whose scheduled executable faults raise a *generic*
+    ``RuntimeError`` instead of :class:`TransientExecutableFault` — the
+    unplanned mid-pump crash (driver bug, OOM, cosmic ray in the host
+    code) that the engine's containment must treat like any other
+    executable failure: the fault fires pre-dispatch, so no donated
+    buffer is consumed, no pool slot leaks or aliases, and the affected
+    requests retire-or-requeue exactly once."""
+
+    def check_executable(self, key) -> None:
+        try:
+            super().check_executable(key)
+        except TransientExecutableFault as e:
+            raise RuntimeError(
+                f"unplanned executable crash: {e.phase} call #{e.call_index}"
+            ) from None
+
+
 @settings(max_examples=6, deadline=None)
 @given(seed=st.integers(0, 2**16))
 def test_faulted_pool_accounting_property(seed):
-    """Random stalls, transient executable faults, poisoned rows, and tight
-    deadlines over continuous traffic: every submitted uid resolves exactly
-    once (tokens or a structured RequestFailure), nothing hangs, and after
-    the drain every pool's slots are fully free with the scheduler empty —
-    faults may fail requests but can never leak or alias a slot."""
+    """Random stalls, executable faults (transient AND generic unplanned
+    exceptions), poisoned rows, and tight deadlines over continuous
+    traffic: every submitted uid resolves exactly once (tokens or a
+    structured RequestFailure), nothing hangs, and after the drain every
+    pool's slots are fully free with the scheduler empty — faults may
+    fail requests but can never leak or alias a slot."""
     rng = np.random.default_rng(seed)
     eng = _fault_engine()
     cfg = eng.model_cfg
     c0 = eng._fault_clock  # plans are scheduled relative to the live clock
-    plan = FaultPlan(
+    # half the examples raise generic exceptions at the same injection
+    # points: containment must not depend on the fault's type
+    plan_cls = _GenericExeFaultPlan if rng.random() < 0.5 else FaultPlan
+    errs0 = eng.stats["exe_errors"]
+    plan = plan_cls(
         seed=seed,
         stall_steps=tuple(c0 + int(o) for o in rng.integers(0, 14, 3)),
         exe_faults=tuple(
@@ -563,6 +587,10 @@ def test_faulted_pool_accounting_property(seed):
     finally:
         eng.fault_plan = FaultPlan()  # disarm for the next example
     assert set(results) == set(uids)  # every uid resolved exactly once
+    # generic exceptions route through the containment path, not retries
+    exe_fired = sum(1 for e in plan.log if e["site"] == "executable")
+    if plan_cls is _GenericExeFaultPlan and exe_fired:
+        assert eng.stats["exe_errors"] >= errs0 + 1
     for res in results.values():
         if isinstance(res, RequestFailure):
             assert res.detail and not res.ok

@@ -15,11 +15,13 @@ from repro.models import init_energy_tree, init_params
 from repro.models.config import ModelConfig
 from repro.serving import (
     BoundedLog,
+    ClusterRouter,
     MetricsFeed,
     NoiseDriftWatchdog,
     PolicyConfig,
     PrecisionGovernor,
     QueueFull,
+    ReplicaCrash,
     Request,
     ServingEngine,
     TierScheduler,
@@ -209,6 +211,51 @@ def test_reassign_moves_tiers_and_preserves_fifo():
     assert len(back) == 3
     assert all(r.profile_id == "prof-x" and r.n_repeats == 1
                for r, _o, _n in back)
+
+
+def test_cross_engine_redispatch_preserves_fifo(env):
+    """The reassign FIFO property extends across engines: when a cluster
+    replica dies and its journal is replayed onto a survivor, the
+    re-dispatched requests enter the survivor's tier queue in
+    (arrival, cuid) order — failover must not reorder a tier's queue."""
+    cluster = ClusterRouter(
+        [_engine(env), _engine(env)],
+        suspect_after=1, dead_after=3, backoff_rounds=0, backoff_jitter=0,
+        faults=(ReplicaCrash(replica=0, at=1),),
+    )
+    for i, p in enumerate(_prompts(8, seed=5)):
+        cluster.submit(p, tier=4, now=0.001 * i)
+    t = 0.01
+    results = {}
+    for _ in range(10):
+        results.update(cluster.pump_step(now=t))
+        if cluster.health[0] == "dead":
+            break
+        t += 0.01
+    assert cluster.health[0] == "dead" and cluster.stats["failed_over"] > 0
+    # with zero backoff the orphans re-entered the survivor's queue inside
+    # the same pump round; their queue positions (before the survivor's
+    # next admission) must follow the journal replay order
+    survivor = cluster.replicas[1]
+    orphans = {
+        c for c, e in cluster.journal.items() if e.failed_over and not e.done
+    }
+    queued = [
+        survivor.uids[r.uid]
+        for r in survivor.engine.scheduler.queued_requests()
+        if survivor.uids.get(r.uid) in orphans
+    ]
+    assert len(queued) == len(orphans) > 0
+    want = sorted(queued, key=lambda c: (cluster.journal[c].arrival, c))
+    assert queued == want
+    # and the episode still loses nothing
+    for _ in range(400):
+        if not cluster.n_in_flight:
+            break
+        t += 0.01
+        results.update(cluster.pump_step(now=t))
+    assert set(results) == set(range(8))
+    assert cluster.stats["prefix_mismatches"] == 0
 
 
 # --------------------------------------------------------------------------
